@@ -1,0 +1,86 @@
+"""Shared benchmark plumbing: tiny-but-learnable tasks, run helpers, output."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config
+from repro.core.api import get_compressor
+from repro.data import client_batches, make_classification_task, make_lm_task
+from repro.models.model import build_model
+from repro.optim import get_optimizer
+from repro.train import DSGDTrainer
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "experiments", "benchmarks")
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+# ------------------------------------------------------- benchmark tasks
+# The paper's 5 tasks map to synthetic stand-ins of 3 model families
+# (offline container — DESIGN.md §8): conv / recurrent / transformer.
+
+
+def bench_tasks(quick: bool = True):
+    """[(tag, cfg, task, n_rounds, lr)] — one per model family."""
+    out = []
+
+    lenet = get_config("lenet5")
+    t_img = make_classification_task(n_classes=10, img_size=28, channels=1,
+                                     batch=32, noise=0.3)
+    out.append(("lenet5@blobs", lenet, t_img, 40 if quick else 150, 1e-3))
+
+    charlstm = get_config("charlstm")
+    t_char = make_lm_task(vocab=98, batch=8, seq_len=64, temperature=0.5, seed=3)
+    out.append(("charlstm@markov", charlstm, t_char, 40 if quick else 150, 0.5))
+
+    tform = ModelConfig(
+        name="transformer-s", family="decoder", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=256, dtype=jnp.float32,
+        local_opt="adam", base_lr=1e-3,
+    )
+    t_tf = make_lm_task(vocab=256, batch=8, seq_len=64, temperature=0.5, seed=5)
+    out.append(("transformer@markov", tform, t_tf, 40 if quick else 150, 1e-3))
+    return out
+
+
+def run_training(cfg, task, *, compressor: str, n_rounds: int, delay: int,
+                 sparsity: float, lr: float, clients: int = 4, seed: int = 0):
+    """One training run; returns history dict (loss curve, bits, rate)."""
+    model = build_model(cfg)
+    opt = get_optimizer(cfg.local_opt if cfg.local_opt != "momentum" else "momentum")
+    trainer = DSGDTrainer(
+        model=model, compressor=get_compressor(compressor), optimizer=opt,
+        n_clients=clients, lr=lambda it: lr,
+    )
+    batch_fn = client_batches(task, clients, delay)
+    t0 = time.time()
+    _, hist = trainer.fit(
+        jax.random.PRNGKey(seed), batch_fn,
+        n_rounds=max(1, n_rounds // delay), n_delay=delay, sparsity=sparsity,
+    )
+    hist["wall_s"] = time.time() - t0
+    hist["iterations"] = [r * delay for r in hist["round"]]
+    return hist
+
+
+# paper §IV-B method grid: (name, compressor, delay, sparsity)
+METHODS = [
+    ("baseline", "none", 1, 1.0),
+    ("grad_dropping", "topk", 1, 0.001),
+    ("fedavg", "none", 10, 1.0),
+    ("sbc1", "sbc", 1, 0.001),
+    ("sbc2", "sbc", 10, 0.01),
+    ("sbc3", "sbc", 100, 0.01),
+]

@@ -1,0 +1,64 @@
+"""Paper Fig. 4 — error at different TOTAL sparsity levels, split by
+training stage (before/after the LR drop).
+
+The paper's finding: early (high LR) temporal sparsity ≥ gradient
+sparsity; after the LR decay the ordering flips.  We train the small
+transformer in two phases (LR 0.05 → 0.005 at the midpoint) under
+(a) purely temporal and (b) purely gradient sparsification at equal total
+sparsity, and record the per-phase loss drop for each.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_tasks, save_json
+from repro.core.api import get_compressor
+from repro.data import client_batches
+from repro.models.model import build_model
+from repro.optim import get_optimizer
+from repro.train import DSGDTrainer
+
+
+def run(quick: bool = True) -> dict:
+    tag, cfg, task, n_rounds, lr0 = bench_tasks(quick)[2]
+    iters = (n_rounds * 2) if quick else n_rounds * 4
+    half = iters // 2
+    model = build_model(cfg)
+    totals = (1 / 8.0, 1 / 32.0) if quick else (1 / 8.0, 1 / 32.0, 1 / 128.0)
+
+    out = {}
+    for total in totals:
+        for mode in ("temporal", "gradient"):
+            delay = int(round(1 / total)) if mode == "temporal" else 1
+            p = 1.0 if mode == "temporal" else total
+            comp = "none" if p == 1.0 else "sbc"
+            tr = DSGDTrainer(model=model, compressor=get_compressor(comp),
+                             optimizer=get_optimizer(cfg.local_opt),
+                             n_clients=4,
+                             lr=lambda it: jnp.where(it < half, lr0, lr0 * 0.1))
+            state = tr.init(jax.random.PRNGKey(0))
+            losses, it, r = [], 0, 0
+            while it < iters:
+                d = min(delay, iters - it)
+                batch = client_batches(task, 4, d)(r)
+                state, m = tr.round_step(state, batch, n_delay=d, sparsity=p)
+                losses.append((it, float(m["loss"])))
+                it += d
+                r += 1
+            phase1 = [l for i, l in losses if i < half]
+            phase2 = [l for i, l in losses if i >= half]
+            key = f"total={total:.4f}/{mode}"
+            out[key] = {
+                "loss_end_phase1": phase1[-1] if phase1 else None,
+                "loss_end_phase2": phase2[-1] if phase2 else None,
+                "delay": delay, "sparsity": p,
+            }
+            print(f"{key:>28}: phase1 {out[key]['loss_end_phase1']:.4f}  "
+                  f"phase2 {out[key]['loss_end_phase2']:.4f}")
+    save_json("fig4_stagewise", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

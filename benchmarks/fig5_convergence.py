@@ -1,0 +1,43 @@
+"""Paper Fig. 5/6/7/8 — convergence vs iterations AND vs transferred bits.
+
+Produces, for each method, the (iteration, loss) curve and the cumulative
+upload bits — the data behind the paper's left/right panel pairs.  The
+bits axis is where SBC's 3-4 orders of magnitude show up.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import METHODS, bench_tasks, run_training, save_json
+
+
+def run(quick: bool = True) -> dict:
+    tag, cfg, task, n_rounds, lr = bench_tasks(quick)[2]  # transformer@markov
+    n_rounds = n_rounds * 2  # longer horizon for curve shape
+    out = {}
+    for name, comp, delay, p in METHODS:
+        if quick and delay > n_rounds // 2:
+            delay = max(1, n_rounds // 4)
+        hist = run_training(cfg, task, compressor=comp, n_rounds=n_rounds,
+                            delay=delay, sparsity=p, lr=lr)
+        bits = np.cumsum(hist["bits_per_client"]).tolist()
+        out[name] = {
+            "iterations": hist["iterations"],
+            "loss": hist["loss"],
+            "cumulative_bits": bits,
+            "final_loss": hist["loss"][-1],
+            "total_bits": bits[-1],
+        }
+        print(f"{name:>14}: final loss {hist['loss'][-1]:.4f} after "
+              f"{hist['iterations'][-1]+delay} iters, {bits[-1]:.3e} bits up")
+
+    # loss-at-equal-bits comparison (the paper's right-panel reading)
+    base_bits = out["baseline"]["total_bits"]
+    for name, r in out.items():
+        r["bits_vs_baseline"] = base_bits / max(r["total_bits"], 1.0)
+    save_json("fig5_convergence", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

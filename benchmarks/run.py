@@ -1,0 +1,56 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+  table1_rates        Table I   theoretical rates + exact Golomb validation
+  table2_accuracy     Table II  final loss + measured compression per method
+  fig3_sparsity_grid  Fig. 3/9  temporal × gradient sparsity trade-off
+  fig5_convergence    Fig. 5-8  loss vs iterations and vs transferred bits
+  roofline_table      §Roofline aggregation of dry-run records (if present)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale runs (slow)")
+    ap.add_argument("--only", default=None, help="run a single benchmark")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from benchmarks import (fig3_sparsity_grid, fig4_stagewise, fig5_convergence,
+                            roofline_table, table1_rates, table2_accuracy)
+
+    suite = {
+        "table1_rates": table1_rates.run,
+        "table2_accuracy": table2_accuracy.run,
+        "fig3_sparsity_grid": fig3_sparsity_grid.run,
+        "fig4_stagewise": fig4_stagewise.run,
+        "fig5_convergence": fig5_convergence.run,
+        "roofline_table": roofline_table.run,
+    }
+    names = [args.only] if args.only else list(suite)
+    failures = []
+    for name in names:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            suite[name](quick=quick)
+            print(f"----- {name} done in {time.time()-t0:.1f}s")
+        except Exception as e:  # pragma: no cover
+            failures.append((name, repr(e)))
+            import traceback
+
+            traceback.print_exc()
+    if failures:
+        print("\nFAILURES:", failures)
+        sys.exit(1)
+    print("\nall benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Table I — theoretical asymptotic compression rates per method,
+validated against the EXACT Golomb bitstream on sampled sparsity patterns.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core.bits import paper_table1
+from repro.core.golomb import encode_positions, expected_position_bits
+
+
+def run(quick: bool = True) -> dict:
+    n_params = 25_000_000  # ResNet50-scale, as in the paper's examples
+    rows = []
+    for mb in paper_table1():
+        rows.append({
+            "method": mb.name,
+            "temporal_sparsity": mb.temporal_sparsity,
+            "gradient_sparsity": mb.gradient_sparsity,
+            "value_bits": mb.value_bits,
+            "position_bits": round(mb.position_bits, 2),
+            "compression_rate": round(mb.compression_rate(n_params), 1),
+        })
+
+    # empirical Golomb validation at the paper's sparsity rates
+    rng = np.random.default_rng(0)
+    golomb_check = {}
+    for p in (0.1, 0.01, 0.001):
+        n = 300_000 if quick else 3_000_000
+        idx = np.nonzero(rng.random(n) < p)[0]
+        bits = encode_positions(idx, p)
+        golomb_check[str(p)] = {
+            "measured_bits_per_pos": round(bits.size / max(idx.size, 1), 3),
+            "eq5_expected": round(expected_position_bits(p), 3),
+            "naive_16bit_gain": round(16.0 / expected_position_bits(p), 2),
+        }
+
+    out = {"table1": rows, "golomb_validation": golomb_check}
+    save_json("table1_rates", out)
+
+    print(f"{'method':>20} {'f':>7} {'p':>7} {'vbits':>6} {'pbits':>6} {'rate':>10}")
+    for r in rows:
+        print(f"{r['method']:>20} {r['temporal_sparsity']:>7.3f} "
+              f"{r['gradient_sparsity']:>7.3f} {r['value_bits']:>6.1f} "
+              f"{r['position_bits']:>6.2f} ×{r['compression_rate']:>9.1f}")
+    for p, g in golomb_check.items():
+        print(f"golomb p={p}: measured {g['measured_bits_per_pos']} bits/pos "
+              f"vs Eq.5 {g['eq5_expected']} (×{g['naive_16bit_gain']} vs 16-bit)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

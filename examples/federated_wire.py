@@ -1,0 +1,86 @@
+"""Federated-learning wire simulation — the paper's privacy-preserving
+setting (§I): clients exchange ONLY Golomb-coded SBC messages (real
+bitstreams, not in-process arrays) with a parameter server.
+
+Each round:
+  1. every client trains locally (communication delay n) and SBC-compresses
+     its weight-update,
+  2. the update crosses the "network" as packed bytes
+     (positions: Golomb bitstream, Alg. 3; one float32 mean per tensor),
+  3. the server decodes (Alg. 4), averages, and broadcasts new weights.
+
+Run:  PYTHONPATH=src python examples/federated_wire.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.api import get_compressor
+from repro.core.golomb import decode_sbc_message, encode_sbc_message, message_bits
+from repro.data import make_lm_task
+from repro.models.model import build_model
+from repro.optim import get_optimizer
+
+N_CLIENTS, DELAY, SPARSITY, ROUNDS = 4, 5, 0.01, 10
+
+cfg = ModelConfig(name="fed-tiny", family="decoder", n_layers=2, d_model=128,
+                  n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=256,
+                  dtype=jnp.float32)
+model = build_model(cfg)
+task = make_lm_task(vocab=256, batch=8, seq_len=64, temperature=0.5)
+opt = get_optimizer("momentum")
+sbc = get_compressor("sbc")
+
+rng = jax.random.PRNGKey(0)
+server_w = model.init(rng)
+client_state = [sbc.init_state(server_w) for _ in range(N_CLIENTS)]
+client_opt = [opt.init(server_w) for _ in range(N_CLIENTS)]
+
+step_fn = jax.jit(jax.value_and_grad(model.loss_fn))
+
+n_params = sum(x.size for x in jax.tree.leaves(server_w))
+total_wire_bytes = 0
+for r in range(ROUNDS):
+    uploads, losses = [], []
+    for c in range(N_CLIENTS):
+        # --- client: delay-n local training from the server weights
+        w, ostate = server_w, client_opt[c]
+        for d in range(DELAY):
+            loss, g = step_fn(w, task.sample(r * DELAY + d, c))
+            w, ostate = opt.apply(ostate, g, w, 0.05, jnp.asarray(r * DELAY + d))
+        client_opt[c] = ostate
+        losses.append(float(loss))
+        delta = jax.tree.map(lambda a, b: a - b, w, server_w)
+
+        # --- compress + encode to actual bytes
+        ctree, dense, client_state[c] = sbc.compress(delta, client_state[c], SPARSITY)
+        msgs = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                ctree, is_leaf=lambda x: hasattr(x, "idx"))[0]:
+            key = "/".join(k.key for k in path)
+            msgs[key] = encode_sbc_message(np.asarray(leaf.idx),
+                                           float(leaf.mean), SPARSITY)
+        uploads.append(msgs)
+        total_wire_bytes += sum(message_bits(m) for m in msgs.values()) / 8
+
+    # --- server: decode every client's bitstream, average, apply
+    flat_w, treedef = jax.tree_util.tree_flatten_with_path(server_w)
+    new_leaves = []
+    for path, leaf in flat_w:
+        key = "/".join(k.key for k in path)
+        acc = np.zeros(leaf.size, np.float32)
+        for c in range(N_CLIENTS):
+            acc += decode_sbc_message(uploads[c][key], leaf.size)
+        new_leaves.append(leaf + (acc / N_CLIENTS).reshape(leaf.shape))
+    server_w = jax.tree_util.tree_unflatten(
+        jax.tree.structure(server_w), new_leaves)
+
+    dense_bytes = 4 * n_params * N_CLIENTS * (r + 1) * DELAY
+    print(f"round {r+1:2d}: mean client loss {np.mean(losses):.4f}  "
+          f"wire so far {total_wire_bytes/1e3:.1f} kB "
+          f"(dense DSGD would be {dense_bytes/1e6:.1f} MB → "
+          f"×{dense_bytes/max(total_wire_bytes,1):.0f})")
+
+print("\nfederated run complete — every byte that crossed the 'network' was a "
+      "real Golomb bitstream")

@@ -1,0 +1,50 @@
+"""Quickstart: compress one weight-update with SBC, end to end.
+
+Walks the full paper pipeline on a single tensor:
+  residual add → top-p% sparsify → binarize to ±μ (Alg. 2)
+  → Golomb-encode positions (Alg. 3) → wire message → decode (Alg. 4).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import golomb
+from repro.core.api import get_compressor
+from repro.core.golomb import decode_sbc_message, encode_sbc_message, message_bits
+
+# a fake "weight update" for one layer
+rng = jax.random.PRNGKey(0)
+delta = {"layer0/w": jax.random.normal(rng, (512, 256)) * 0.01}
+
+# --- compress with error feedback (paper Alg. 1 lines 10-12)
+sbc = get_compressor("sbc")
+state = sbc.init_state(delta)
+p = 0.01
+compressed, dense_update, state = sbc.compress(delta, state, p)
+
+leaf = compressed["layer0/w"]
+n = delta["layer0/w"].size
+print(f"tensor: {n} params, sparsity p={p}")
+print(f"survivors: {leaf.idx.shape[0]} positions, ONE value μ={float(leaf.mean):.6f}")
+print(f"analytic wire size: {float(leaf.nbits):.0f} bits "
+      f"(dense 32-bit: {32*n} bits → ×{32*n/float(leaf.nbits):.0f})")
+
+# --- exact wire format: Golomb-coded positions + one 32-bit mean (Alg. 3)
+msg = encode_sbc_message(np.asarray(leaf.idx), float(leaf.mean), p)
+print(f"exact bitstream: {message_bits(msg)} bits "
+      f"({msg['nbits_positions']/leaf.idx.shape[0]:.2f} bits/position; "
+      f"Eq. 5 predicts {golomb.expected_position_bits(p):.2f})")
+
+# --- receiver side (Alg. 4)
+reconstructed = decode_sbc_message(msg, n).reshape(512, 256)
+np.testing.assert_allclose(reconstructed, np.asarray(dense_update["layer0/w"]),
+                           rtol=1e-6)
+print("receiver reconstruction matches ✓")
+
+# --- the residual keeps what was not sent (Eq. 2)
+res = state.residual["layer0/w"]
+np.testing.assert_allclose(np.asarray(res + dense_update["layer0/w"]),
+                           np.asarray(delta["layer0/w"]), rtol=1e-5)
+print("residual + transmitted == full update ✓ (no information lost)")

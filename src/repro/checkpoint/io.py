@@ -1,0 +1,93 @@
+"""Pytree checkpointing on npz (offline container: no orbax/msgpack).
+
+Leaves are stored flat under '/'-joined key paths inside one compressed
+``.npz``; dtypes (incl. bfloat16, stored as uint16 bit patterns) and the
+treedef round-trip exactly.  Restore-into-structure (``load_pytree(like=)``)
+validates path sets and shapes so a checkpoint from a different config fails
+loudly rather than silently mis-assigning tensors.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_BF16_TAG = "__bf16__"
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            k.key if hasattr(k, "key") else str(getattr(k, "idx", k)) for k in path
+        )
+        out[key] = leaf
+    return out
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays, meta = {}, {}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            arrays[k] = arr.view(np.uint16)
+            meta[k] = _BF16_TAG
+        else:
+            arrays[k] = arr
+    arrays["__meta__"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+    np.savez_compressed(path, **arrays)
+
+
+def load_pytree(path: str, like: Optional[PyTree] = None) -> PyTree:
+    """Load a checkpoint.  With ``like``, returns the same structure as
+    ``like`` with values replaced; without, returns a flat {path: array}."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        flat = {}
+        for k in z.files:
+            if k == "__meta__":
+                continue
+            arr = z[k]
+            if meta.get(k) == _BF16_TAG:
+                arr = arr.view(jnp.bfloat16)
+            flat[k] = arr
+    if like is None:
+        return flat
+
+    want = _flatten_with_paths(like)
+    missing = set(want) - set(flat)
+    extra = set(flat) - set(want)
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint/structure mismatch: missing={sorted(missing)[:5]} "
+            f"extra={sorted(extra)[:5]}"
+        )
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for pathkeys, leaf in leaves_paths:
+        key = "/".join(
+            k.key if hasattr(k, "key") else str(getattr(k, "idx", k)) for k in pathkeys
+        )
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def save_train_state(path: str, state) -> None:
+    save_pytree(path, state._asdict() if hasattr(state, "_asdict") else state)
+
+
+def restore_train_state(path: str, like) -> Any:
+    loaded = load_pytree(path, like._asdict() if hasattr(like, "_asdict") else like)
+    return type(like)(**loaded) if hasattr(like, "_asdict") else loaded

@@ -1,0 +1,355 @@
+"""Model / training configuration system.
+
+Every assigned architecture is a :class:`ModelConfig` in its own module
+(``src/repro/configs/<id>.py``) selectable via ``--arch <id>``.  The paper's
+own models (LeNet5, ResNet32, Word/CharLSTM) are configs too, so the
+reproduction experiments run through the same trainer as the 10 assigned
+architectures.
+
+``input_specs(cfg, shape)`` produces ``jax.ShapeDtypeStruct`` stand-ins for
+every model input — weak-type-correct, shardable, zero allocation — which is
+what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ------------------------------------------------------------- input shapes
+
+INPUT_SHAPES: dict[str, dict[str, int]] = {
+    # name: seq_len, global_batch, kind
+    "train_4k": dict(seq_len=4_096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524_288, global_batch=1, kind="decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One architecture.  Fields cover every family in the assigned pool."""
+
+    name: str
+    family: str  # 'decoder' | 'encdec' | 'lstm' | 'cnn'
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 → d_model // n_heads
+    source: str = ""  # paper / model-card citation
+
+    # --- MoE
+    moe_experts: int = 0
+    moe_top_k: int = 2
+    moe_every: int = 1  # MoE MLP every k-th layer (jamba: 2)
+    moe_capacity_factor: float = 1.25  # train-time capacity (decode is dropless)
+    # MoE dispatch strategy (§Perf A2-A5/B10 — GSPMD-verified per family):
+    #   'grouped'   per-batch-row dispatch, weights replicated over 'data'
+    #               (mixtral: E doesn't divide the data axis)
+    #   'flat_ep'   global dispatch, experts sharded over 'data' (llama4)
+    #   'flat_fsdp' global dispatch, fsdp-sharded weights (jamba)
+    moe_dispatch: str = "grouped"
+
+    # --- attention pattern
+    window: int = 0  # sliding-window size (mixtral); 0 = full
+    chunk_attn: int = 0  # chunked-local attention size (llama4)
+    local_window: int = 0  # window of "local" layers in local:global mix
+    local_global_ratio: int = 0  # gemma3: N local layers per 1 global
+    global_every: int = 0  # llama4: full-attn layer every k-th (others chunked)
+
+    # --- hybrid / SSM
+    attn_every: int = 1  # jamba: attention every 8th layer, rest SSM
+    ssm_kind: str = ""  # 'mamba' | 'rwkv6' ('' = attention everywhere)
+    ssm_ffn: bool = False  # jamba: FFN/MoE after every mamba mixer too
+    ssm_state: int = 16  # mamba N
+    ssm_expand: int = 2  # mamba d_inner = expand·d_model
+    ssm_conv: int = 4  # mamba depthwise conv width
+
+    # --- misc transformer knobs
+    qkv_bias: bool = False  # qwen1.5
+    rope_theta: float = 10_000.0
+    norm: str = "rmsnorm"  # 'rmsnorm' | 'layernorm'
+    tie_embeddings: bool = True
+    gated_mlp: bool = True  # SwiGLU-style
+    dropout: float = 0.0
+
+    # --- encoder-decoder
+    enc_layers: int = 0
+    bidirectional: bool = False  # encoder stacks: non-causal self-attention
+
+    # --- modality frontend stub (audio/vision): inputs are precomputed
+    # frame/patch embeddings of shape (batch, n_prefix, d_model)
+    modality: str = "text"  # 'text' | 'audio' | 'vision'
+    n_prefix: int = 0  # number of stub embedding positions
+
+    # --- cnn / lstm (paper's own models)
+    img_size: int = 0
+    img_channels: int = 3
+    n_classes: int = 10
+    lstm_hidden: int = 0
+
+    # --- distribution
+    fsdp: bool = False  # shard params over 'data' too (≥20B archs)
+    # DSGD client granularity on the production mesh (DESIGN.md §4):
+    #   'data' — one client per data coordinate (16/pod); per-client residual
+    #            lives on the client's model-axis chips.  Small/mid archs.
+    #   'pod'  — one client per pod; dense all-reduce inside the pod (fast
+    #            ICI), SBC compresses the cross-pod (DCN) exchange; residual
+    #            shards over ('data','model').  Required for ≥20B archs where
+    #            per-data-coordinate full-model state cannot fit.
+    client_mode: str = "data"
+    local_opt: str = "momentum"  # client-side optimizer for this arch
+    base_lr: float = 0.01
+    residual_dtype: Any = jnp.float32  # bf16 for ≥20B archs (DESIGN.md §8)
+    remat: bool = True
+    scan_layers: bool = True
+    dtype: Any = jnp.bfloat16
+
+    # --- which input shapes apply ('' reason = runs)
+    skip_shapes: tuple[tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ------------------------------------------------------------- helpers
+
+    @property
+    def layer_kinds(self) -> list[str]:
+        """Per-layer block kind: 'attn' | 'attn_local' | 'attn_chunk' | ssm."""
+        kinds = []
+        for i in range(self.n_layers):
+            if self.ssm_kind and self.attn_every > 1:
+                # jamba-style: attention on every `attn_every`-th layer
+                # (placed mid-period as in the released model)
+                kind = "attn" if (i % self.attn_every) == self.attn_every // 2 else self.ssm_kind
+            elif self.ssm_kind:
+                kind = self.ssm_kind
+            elif self.local_global_ratio:
+                r = self.local_global_ratio
+                kind = "attn" if (i % (r + 1)) == r else "attn_local"
+            elif self.global_every:
+                kind = "attn" if (i % self.global_every) == self.global_every - 1 else "attn_chunk"
+            elif self.window:
+                kind = "attn_window"
+            else:
+                kind = "attn"
+            if self.bidirectional and kind == "attn":
+                kind = "attn_bidir"
+            kinds.append(kind)
+        return kinds
+
+    @property
+    def layer_moe(self) -> list[bool]:
+        if not self.moe_experts:
+            return [False] * self.n_layers
+        return [(i % self.moe_every) == self.moe_every - 1 for i in range(self.n_layers)]
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Bounded or recurrent context per token → long_500k applies."""
+        if self.family in ("lstm",):
+            return True
+        if self.ssm_kind:
+            return True
+        # window / chunked / local-global bound MOST layers; the sparse
+        # global layers are O(L) reads at decode, which is sub-quadratic.
+        return bool(self.window or self.chunk_attn or self.local_global_ratio)
+
+    def skip_reason(self, shape_name: str) -> Optional[str]:
+        for s, reason in self.skip_shapes:
+            if s == shape_name:
+                return reason
+        shape = INPUT_SHAPES[shape_name]
+        if shape["kind"] == "decode" and self.family == "cnn":
+            return "encoder-only CNN: no autoregressive decode step"
+        if shape_name == "long_500k" and not self.sub_quadratic:
+            return "pure full attention: long-context decode requires sub-quadratic attention"
+        return None
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for roofline."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim
+        n_q = self.n_heads * hd
+        n_kv = self.n_kv_heads * hd
+        total = V * d * (1 if self.tie_embeddings else 2)
+        for kind, moe in zip(self.layer_kinds, self.layer_moe):
+            if kind.startswith("attn"):
+                total += d * n_q + 2 * d * n_kv + n_q * d
+            else:  # ssm block
+                di = self.ssm_expand * d
+                if kind == "mamba":
+                    total += d * 2 * di + di * d + di * (2 * self.ssm_state + 2)
+                else:  # rwkv6: r,k,v,g,o,cr projections + decay LoRA + channel mix
+                    total += 6 * d * d + 2 * d * self.d_ff + 2 * d * 64
+            mlp = 3 * d * ff if self.gated_mlp else 2 * d * ff
+            if moe:
+                total += self.moe_experts * mlp + d * self.moe_experts
+            elif not kind.startswith("rwkv"):
+                total += mlp
+            total += 2 * d  # norms
+        if self.enc_layers:
+            total += self.enc_layers * (2 * (d * n_q + 2 * d * n_kv + n_q * d) + 3 * d * ff)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if not self.moe_experts:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        mlp = 3 * d * ff if self.gated_mlp else 2 * d * ff
+        inactive = sum(
+            (self.moe_experts - self.moe_top_k) * mlp for m in self.layer_moe if m
+        )
+        return int(self.param_count() - inactive)
+
+
+# ------------------------------------------------------------- input specs
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, n_clients: int = 1) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of (cfg, shape).
+
+    train:    tokens/labels (clients, per_client_batch, seq) int32
+              (+ prefix embeddings for audio/vision stubs)
+    prefill:  tokens (batch, seq)
+    decode:   tokens (batch, 1) + cache built by serve.init_cache specs
+    """
+    shape = INPUT_SHAPES[shape_name]
+    S, B, kind = shape["seq_len"], shape["global_batch"], shape["kind"]
+    f = jax.ShapeDtypeStruct
+
+    if cfg.family == "cnn":
+        img = (B, cfg.img_size, cfg.img_size, cfg.img_channels)
+        if kind == "train":
+            per = max(1, B // n_clients)
+            return {
+                "images": f((n_clients, per) + img[1:], jnp.float32),
+                "labels": f((n_clients, per), jnp.int32),
+            }
+        return {"images": f(img, jnp.float32)}
+
+    def _extras(lead: tuple[int, ...]) -> dict:
+        """Modality-stub / encoder inputs (the DESIGN.md §5 carve-out)."""
+        ex = {}
+        if cfg.family == "encdec":
+            if cfg.modality == "audio":
+                # precomputed conformer-frontend frame embeddings
+                ex["enc_frames"] = f(lead + (S, cfg.d_model), cfg.dtype)
+            else:
+                ex["enc_tokens"] = f(lead + (S,), jnp.int32)
+        elif cfg.modality in ("audio", "vision"):
+            # decoder-only early fusion: patch/frame embeddings as prefix
+            ex["prefix"] = f(lead + (cfg.n_prefix, cfg.d_model), cfg.dtype)
+        return ex
+
+    if kind == "train":
+        per = max(1, B // n_clients)
+        specs = {
+            "tokens": f((n_clients, per, S), jnp.int32),
+            "labels": f((n_clients, per, S), jnp.int32),
+        }
+        specs.update(_extras((n_clients, per)))
+        return specs
+
+    if kind == "prefill":
+        specs = {"tokens": f((B, S), jnp.int32)}
+        specs.update(_extras((B,)))
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": f((B, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------- registry
+
+ASSIGNED_ARCHS = [
+    "seamless_m4t_medium",
+    "granite_20b",
+    "rwkv6_1p6b",
+    "jamba_v01_52b",
+    "mixtral_8x7b",
+    "phi3_vision_4p2b",
+    "command_r_35b",
+    "qwen15_4b",
+    "gemma3_1b",
+    "llama4_maverick_400b_a17b",
+]
+PAPER_ARCHS = ["lenet5", "resnet32", "charlstm", "wordlstm"]
+
+
+def get_config(name: str, **overrides: Any) -> ModelConfig:
+    """Load ``src/repro/configs/<name>.py`` and return its CONFIG.
+
+    Accepts either the module key (``qwen15_4b``) or the display id
+    (``qwen1.5-4b``) — several dot/dash normalizations are tried.
+    """
+    aliases = {
+        "phi-3-vision-4.2b": "phi3_vision_4p2b",
+        "qwen1.5-4b": "qwen15_4b",
+        "jamba-v0.1-52b": "jamba_v01_52b",
+        "rwkv6-1.6b": "rwkv6_1p6b",
+    }
+    base = aliases.get(name, name).replace("-", "_")
+    candidates = [name, base, base.replace(".", "p"), base.replace(".", ""),
+                  base.replace(".", "_")]
+    mod = None
+    for key in candidates:
+        try:
+            mod = importlib.import_module(f"repro.configs.{key}")
+            break
+        except ModuleNotFoundError:
+            continue
+    if mod is None:
+        raise KeyError(f"no config module found for {name!r} (tried {candidates})")
+    cfg = mod.CONFIG
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def reduced(cfg: ModelConfig, **extra: Any) -> ModelConfig:
+    """Smoke-test variant: ≤2 layers, d_model ≤ 256, ≤4 experts, tiny vocab.
+
+    Keeps the FAMILY (layer pattern, MoE, SSM kind, GQA ratio) so smoke tests
+    exercise the same code paths as the full config.
+    """
+    d = min(cfg.d_model, 256)
+    heads = max(1, min(cfg.n_heads, 4))
+    kv = max(1, min(cfg.n_kv_heads, heads))
+    hd = max(8, d // heads)
+    period = max(cfg.attn_every, (cfg.local_global_ratio + 1) if cfg.local_global_ratio else 1,
+                 cfg.global_every or 1, cfg.moe_every)
+    n_layers = min(cfg.n_layers, max(2, period))
+    changes: dict[str, Any] = dict(
+        n_layers=n_layers,
+        d_model=d,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=hd,
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 512),
+        moe_experts=min(cfg.moe_experts, 4),
+        moe_top_k=min(cfg.moe_top_k, 2) if cfg.moe_experts else cfg.moe_top_k,
+        moe_capacity_factor=8.0,  # smoke scale: no capacity drops
+
+        window=min(cfg.window, 64) if cfg.window else 0,
+        chunk_attn=min(cfg.chunk_attn, 64) if cfg.chunk_attn else 0,
+        local_window=min(cfg.local_window, 64) if cfg.local_window else 0,
+        enc_layers=min(cfg.enc_layers, 2) if cfg.enc_layers else 0,
+        n_prefix=min(cfg.n_prefix, 8) if cfg.n_prefix else 0,
+        ssm_state=min(cfg.ssm_state, 8),
+        lstm_hidden=min(cfg.lstm_hidden, 64) if cfg.lstm_hidden else 0,
+        fsdp=False,
+        dtype=jnp.float32,
+    )
+    changes.update(extra)
+    return dataclasses.replace(cfg, **changes)

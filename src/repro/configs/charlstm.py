@@ -1,0 +1,24 @@
+"""CharLSTM on Shakespeare — paper §IV-A (2×200 LSTM over a 98-character
+vocabulary, plain SGD @ 1.0).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="charlstm",
+    family="lstm",
+    source="paper §IV-A",
+    n_layers=2,
+    d_model=0,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=98,
+    lstm_hidden=200,
+    local_opt="sgd",
+    base_lr=1.0,
+    dtype=jnp.float32,
+    scan_layers=False,
+    remat=False,
+)

@@ -1,0 +1,27 @@
+"""LeNet5-Caffe on MNIST — the paper's smallest benchmark (§IV-A).
+
+Trained with Adam @ 1e-3, batch 128×4 clients (paper Table III).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="lenet5",
+    family="cnn",
+    source="paper §IV-A / Caffe MNIST tutorial",
+    n_layers=0,
+    d_model=0,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=0,
+    img_size=28,
+    img_channels=1,
+    n_classes=10,
+    local_opt="adam",
+    base_lr=1e-3,
+    dtype=jnp.float32,
+    scan_layers=False,
+    remat=False,
+)

@@ -1,0 +1,28 @@
+"""ResNet-32 on CIFAR-10 — paper §IV-A (He et al. '16, 3×5 basic blocks).
+
+Momentum SGD @ 0.1 decay, batch 128×4 clients (paper Table III uses lr 0.01
+with decays at 30k/50k iterations).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="resnet32",
+    family="cnn",
+    source="paper §IV-A / He et al. 2016",
+    n_layers=0,
+    d_model=0,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=0,
+    img_size=32,
+    img_channels=3,
+    n_classes=10,
+    local_opt="momentum",
+    base_lr=0.01,
+    dtype=jnp.float32,
+    scan_layers=False,
+    remat=False,
+)

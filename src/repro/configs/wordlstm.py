@@ -1,0 +1,24 @@
+"""WordLSTM on PTB — paper §IV-A (Zaremba et al. "medium": 2×650 LSTM,
+10000-word vocab, plain SGD @ 1.0 with decay 0.8).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="wordlstm",
+    family="lstm",
+    source="paper §IV-A / Zaremba et al. 2014",
+    n_layers=2,
+    d_model=0,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=10_000,
+    lstm_hidden=650,
+    local_opt="sgd",
+    base_lr=1.0,
+    dtype=jnp.float32,
+    scan_layers=False,
+    remat=False,
+)

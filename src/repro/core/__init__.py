@@ -1,0 +1,35 @@
+"""Sparse Binary Compression core: the paper's contribution as a library."""
+from repro.core import baselines as _baselines  # registers baseline compressors
+from repro.core import sbc as _sbc  # registers "sbc"
+from repro.core.api import (
+    Compressor,
+    CompressorState,
+    LeafCompressed,
+    available,
+    get_compressor,
+)
+from repro.core.golomb import (
+    decode_positions,
+    encode_positions,
+    expected_position_bits,
+    golomb_bstar,
+)
+from repro.core.sbc import SBC_PRESETS
+from repro.core.sparsity import SparsitySchedule, adaptive_total_budget, constant, preset
+
+__all__ = [
+    "Compressor",
+    "CompressorState",
+    "LeafCompressed",
+    "available",
+    "get_compressor",
+    "encode_positions",
+    "decode_positions",
+    "expected_position_bits",
+    "golomb_bstar",
+    "SBC_PRESETS",
+    "SparsitySchedule",
+    "adaptive_total_budget",
+    "constant",
+    "preset",
+]

@@ -1,0 +1,234 @@
+"""Baseline compressors the paper compares against (Table I / Table II).
+
+  none        dense 32-bit DSGD (the ×1 baseline)
+  topk        Gradient Dropping [Aji & Heafield '17]: top-k by magnitude,
+              32-bit values + 16-bit positions, error feedback
+  dgc         Deep Gradient Compression [Lin et al. '18]: same wire format as
+              topk; momentum correction is implicit in our delayed updates and
+              momentum MASKING is honored by the trainer via ``update_mask``
+  signsgd     signSGD [Bernstein et al. '18]: 1 bit/coordinate, NO residual
+              (server majority vote = mean of signs here)
+  onebit      1-bit SGD [Seide et al. '14]: two per-tensor means (like SBC
+              without sparsification) + error feedback
+  terngrad    TernGrad [Wen et al. '17]: stochastic ternary {−s,0,+s}
+  qsgd        QSGD [Alistarh et al. '17]: stochastic uniform quantization on
+              the L2 ball, ``levels`` quantization levels
+  randomk     sketched updates [Konečný et al. '16]: random-k mask with
+              32-bit values; positions derivable from a shared seed
+
+All bit counts follow the accounting the paper uses in Table I.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+
+NAIVE_POS_BITS = 16.0  # the paper's naive fixed-width position encoding
+
+
+# ------------------------------------------------------------------- dense
+
+
+def _dense_compress(flat, p, rng):
+    del p, rng
+    n = flat.shape[0]
+    return api.LeafCompressed(
+        idx=jnp.zeros((0,), jnp.int32),
+        vals=jnp.zeros((0,), jnp.float32),
+        mean=jnp.zeros((), jnp.float32),
+        dense=flat.astype(jnp.float32),
+        nbits=jnp.asarray(32.0 * n, jnp.float32),
+    )
+
+
+def _dense_decompress(comp, n):
+    return comp.dense
+
+
+@api.register("none")
+def make_none(**_):
+    # use_residual=True: a dense round transmits ΔW + any pending residual
+    # in full and leaves R = 0 — identical to vanilla DSGD when used alone,
+    # and the correct "flush" semantics in hybrid sparsity schedules.
+    return api.Compressor("none", _dense_compress, _dense_decompress, use_residual=True)
+
+
+@api.register("fedavg")
+def make_fedavg(**_):
+    # Federated Averaging == dense updates; the saving comes from the delay
+    # schedule (temporal sparsity), handled by the trainer.
+    return api.Compressor("fedavg", _dense_compress, _dense_decompress, use_residual=False)
+
+
+# ---------------------------------------------------- top-k (Grad Dropping)
+
+
+def _topk_compress(flat, p, rng):
+    del rng
+    n = flat.shape[0]
+    k = api.k_for(n, p)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    nbits = jnp.asarray(k * (32.0 + NAIVE_POS_BITS), jnp.float32)
+    return api.LeafCompressed(
+        idx=idx.astype(jnp.int32),
+        vals=vals.astype(jnp.float32),
+        mean=jnp.zeros((), jnp.float32),
+        dense=jnp.zeros((0,), jnp.float32),
+        nbits=nbits,
+    )
+
+
+def _topk_decompress(comp, n):
+    return jnp.zeros((n,), jnp.float32).at[comp.idx].set(comp.vals)
+
+
+@api.register("topk")
+def make_topk(**_):
+    return api.Compressor("topk", _topk_compress, _topk_decompress, use_residual=True)
+
+
+@api.register("dgc")
+def make_dgc(**_):
+    # Wire-identical to topk; the DGC extras (momentum masking, warm-up
+    # sparsity schedule) live in the trainer / sparsity schedule.
+    return api.Compressor("dgc", _topk_compress, _topk_decompress, use_residual=True)
+
+
+# ----------------------------------------------------------------- signSGD
+
+
+def _sign_compress(flat, p, rng):
+    # Scaled sign (SIGNUM-style): our compressors act on weight-DELTAS, so
+    # the bare sign must carry a magnitude — we use mean(|Δ|), transmitted as
+    # one 32-bit scalar per tensor (recorded in DESIGN.md §8).
+    del p, rng
+    n = flat.shape[0]
+    scale = jnp.mean(jnp.abs(flat))
+    return api.LeafCompressed(
+        idx=jnp.zeros((0,), jnp.int32),
+        vals=jnp.zeros((0,), jnp.float32),
+        mean=jnp.zeros((), jnp.float32),
+        dense=(scale * jnp.sign(flat)).astype(jnp.float32),
+        nbits=jnp.asarray(1.0 * n + 32.0, jnp.float32),
+    )
+
+
+@api.register("signsgd")
+def make_signsgd(**_):
+    return api.Compressor("signsgd", _sign_compress, _dense_decompress, use_residual=False)
+
+
+# ----------------------------------------------------------------- 1-bit SGD
+
+
+def _onebit_compress(flat, p, rng):
+    del p, rng
+    n = flat.shape[0]
+    pos = flat >= 0
+    npos = jnp.maximum(jnp.sum(pos), 1)
+    nneg = jnp.maximum(n - jnp.sum(pos), 1)
+    mu_pos = jnp.sum(jnp.where(pos, flat, 0.0)) / npos
+    mu_neg = jnp.sum(jnp.where(pos, 0.0, flat)) / nneg  # negative number
+    dense = jnp.where(pos, mu_pos, mu_neg).astype(jnp.float32)
+    return api.LeafCompressed(
+        idx=jnp.zeros((0,), jnp.int32),
+        vals=jnp.zeros((0,), jnp.float32),
+        mean=jnp.zeros((), jnp.float32),
+        dense=dense,
+        nbits=jnp.asarray(1.0 * n + 64.0, jnp.float32),
+    )
+
+
+@api.register("onebit")
+def make_onebit(**_):
+    return api.Compressor("onebit", _onebit_compress, _dense_decompress, use_residual=True)
+
+
+# ----------------------------------------------------------------- TernGrad
+
+
+def _terngrad_compress(flat, p, rng):
+    del p
+    n = flat.shape[0]
+    s = jnp.max(jnp.abs(flat)) + 1e-12
+    keep = jax.random.bernoulli(rng, jnp.abs(flat) / s)
+    dense = (s * jnp.sign(flat) * keep).astype(jnp.float32)
+    nbits = jnp.asarray(jnp.log2(3.0) * n + 32.0, jnp.float32)
+    return api.LeafCompressed(
+        idx=jnp.zeros((0,), jnp.int32),
+        vals=jnp.zeros((0,), jnp.float32),
+        mean=jnp.zeros((), jnp.float32),
+        dense=dense,
+        nbits=nbits,
+    )
+
+
+@api.register("terngrad")
+def make_terngrad(**_):
+    return api.Compressor(
+        "terngrad", _terngrad_compress, _dense_decompress, use_residual=False, stochastic=True
+    )
+
+
+# --------------------------------------------------------------------- QSGD
+
+
+def _qsgd_compress(flat, p, rng, levels: int = 15):
+    del p
+    n = flat.shape[0]
+    norm = jnp.linalg.norm(flat) + 1e-12
+    scaled = jnp.abs(flat) / norm * levels
+    floor = jnp.floor(scaled)
+    prob = scaled - floor
+    quant = floor + jax.random.bernoulli(rng, prob)
+    dense = (norm * jnp.sign(flat) * quant / levels).astype(jnp.float32)
+    bits_per = jnp.log2(2.0 * levels + 1.0)
+    return api.LeafCompressed(
+        idx=jnp.zeros((0,), jnp.int32),
+        vals=jnp.zeros((0,), jnp.float32),
+        mean=jnp.zeros((), jnp.float32),
+        dense=dense,
+        nbits=jnp.asarray(bits_per * n + 32.0, jnp.float32),
+    )
+
+
+@api.register("qsgd")
+def make_qsgd(levels: int = 15, **_):
+    return api.Compressor(
+        "qsgd",
+        partial(_qsgd_compress, levels=levels),
+        _dense_decompress,
+        use_residual=False,
+        stochastic=True,
+    )
+
+
+# ------------------------------------------------------------------ randomk
+
+
+def _randomk_compress(flat, p, rng):
+    n = flat.shape[0]
+    k = api.k_for(n, p)
+    idx = jax.random.choice(rng, n, shape=(k,), replace=False)
+    vals = flat[idx]
+    # positions derivable from a shared 32-bit seed → only values go on wire
+    nbits = jnp.asarray(k * 32.0 + 32.0, jnp.float32)
+    return api.LeafCompressed(
+        idx=idx.astype(jnp.int32),
+        vals=vals.astype(jnp.float32),
+        mean=jnp.zeros((), jnp.float32),
+        dense=jnp.zeros((0,), jnp.float32),
+        nbits=nbits,
+    )
+
+
+@api.register("randomk")
+def make_randomk(**_):
+    return api.Compressor(
+        "randomk", _randomk_compress, _topk_decompress, use_residual=True, stochastic=True
+    )

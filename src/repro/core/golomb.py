@@ -1,0 +1,181 @@
+"""Golomb position coding (paper Alg. 3 / Alg. 4 and Eq. 5).
+
+Under the paper's model, the gaps between surviving positions of a top-p%
+sparsified tensor are geometric with success probability p, so Golomb coding
+with parameter ``b* = 1 + floor(log2(log(phi-1)/log(1-p)))`` (phi the golden
+ratio) is the optimal prefix code.  Eq. 5 gives the expected bits/position:
+
+    b̄_pos = b* + 1 / (1 - (1-p)^(2^b*))
+
+This module implements BOTH:
+  * the analytic model (``expected_position_bits``) used in-graph for the
+    bit accounting of Eq. 1, and
+  * the exact bitstream encoder/decoder (numpy, host-side) used as the wire
+    format by the federated launcher and validated by round-trip tests.
+
+The bitstream layout per position gap d (>=1):  q = (d-1) // 2^b* unary ones,
+a terminating 0, then b* binary bits of r = (d-1) % 2^b*.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+PHI = (math.sqrt(5.0) + 1.0) / 2.0
+
+
+def golomb_bstar(p: float) -> int:
+    """Optimal Golomb parameter b* for sparsity rate p (paper Alg. 3 l.4)."""
+    if not 0.0 < p < 1.0:
+        raise ValueError(f"sparsity rate must be in (0,1), got {p}")
+    b = 1 + math.floor(math.log2(math.log(PHI - 1.0) / math.log(1.0 - p)))
+    return max(0, int(b))
+
+
+def expected_position_bits(p: float) -> float:
+    """Eq. 5: average bits to encode one non-zero position at sparsity p.
+
+    p ≥ 1 means a dense update — positions are predetermined and cost 0
+    bits (Eq. 1's dense case), which also covers schedules that move
+    through the fully-dense corner of the §III trade-off grid.
+    """
+    if p >= 1.0:
+        return 0.0
+    b = golomb_bstar(p)
+    return b + 1.0 / (1.0 - (1.0 - p) ** (2.0**b))
+
+
+# ------------------------------------------------------------ bit writer/reader
+
+
+class _BitWriter:
+    def __init__(self) -> None:
+        self._bits: list[np.ndarray] = []
+
+    def write(self, bits: np.ndarray) -> None:
+        self._bits.append(np.asarray(bits, dtype=np.uint8))
+
+    def getvalue(self) -> np.ndarray:
+        if not self._bits:
+            return np.zeros((0,), np.uint8)
+        return np.concatenate(self._bits)
+
+
+def _uint_to_bits(x: int, width: int) -> np.ndarray:
+    """Big-endian fixed-width binary expansion."""
+    return np.array([(x >> (width - 1 - i)) & 1 for i in range(width)], np.uint8)
+
+
+def _bits_to_uint(bits: np.ndarray) -> int:
+    out = 0
+    for b in bits:
+        out = (out << 1) | int(b)
+    return out
+
+
+# ------------------------------------------------------------------ encode
+
+
+def encode_positions(indices: np.ndarray, p: float) -> np.ndarray:
+    """Alg. 3: encode sorted non-zero positions as a Golomb bitstream.
+
+    Returns a uint8 array of BITS (one bit per entry; packing to bytes is
+    ``np.packbits`` at the transport layer — bit count is what Eq. 1 meters).
+
+    Vectorized: per gap d the codeword is q unary ones, a 0, then b* binary
+    bits of r, with q = (d−1) div 2^b*, r = (d−1) mod 2^b*.  We compute all
+    codeword offsets with a cumsum and scatter ones/remainder bits at once.
+    """
+    indices = np.sort(np.asarray(indices, dtype=np.int64))
+    if indices.size == 0:
+        return np.zeros((0,), np.uint8)
+    bstar = golomb_bstar(p)
+    gaps = np.diff(np.concatenate([[-1], indices]))  # ≥ 1
+    dm1 = gaps - 1
+    q = dm1 >> bstar
+    r = dm1 & ((1 << bstar) - 1) if bstar else np.zeros_like(dm1)
+
+    lengths = q + 1 + bstar
+    starts = np.concatenate([[0], np.cumsum(lengths[:-1])])
+    total = int(starts[-1] + lengths[-1])
+    out = np.zeros((total,), np.uint8)
+
+    # unary prefixes: ones on [start, start+q) for every codeword
+    if q.sum() > 0:
+        ones_idx = np.repeat(starts, q) + _ragged_arange(q)
+        out[ones_idx] = 1
+    # binary remainders (big-endian), bit j of codeword i at start+q+1+j
+    if bstar:
+        shifts = np.arange(bstar - 1, -1, -1)
+        bits = (r[:, None] >> shifts[None, :]) & 1  # (n, bstar)
+        base = (starts + q + 1)[:, None] + np.arange(bstar)[None, :]
+        out[base.reshape(-1)] = bits.astype(np.uint8).reshape(-1)
+    return out
+
+
+def _ragged_arange(counts: np.ndarray) -> np.ndarray:
+    """concatenate([arange(c) for c in counts]) without a Python loop."""
+    total = int(counts.sum())
+    ends = np.cumsum(counts)
+    out = np.arange(total)
+    out -= np.repeat(ends - counts, counts)
+    return out
+
+
+def decode_positions(msg: np.ndarray, p: float) -> np.ndarray:
+    """Alg. 4: decode a Golomb bitstream back to absolute positions.
+
+    Per-codeword parse: a codeword starts with a unary run of ones, so the
+    first 0 at/after the cursor is its terminator (zeros inside remainder
+    fields are skipped, never scanned).  One searchsorted per codeword.
+    """
+    bstar = golomb_bstar(p)
+    msg = np.asarray(msg, dtype=np.uint8)
+    n = msg.shape[0]
+    zeros = np.nonzero(msg == 0)[0]
+    weights = 1 << np.arange(bstar - 1, -1, -1) if bstar else None
+
+    out: list[int] = []
+    c, j, zi = 0, -1, 0
+    while c < n:
+        zi = np.searchsorted(zeros, c)
+        if zi >= zeros.shape[0]:
+            break  # trailing ones without terminator: not a codeword
+        z = int(zeros[zi])
+        q = z - c
+        r = int(msg[z + 1 : z + 1 + bstar] @ weights) if bstar else 0
+        j = j + q * (1 << bstar) + r + 1
+        out.append(j)
+        c = z + 1 + bstar
+    return np.asarray(out, dtype=np.int64)
+
+
+# ------------------------------------------------- full-message wire format
+
+
+def encode_sbc_message(indices: np.ndarray, mean: float, p: float) -> dict:
+    """Wire form of one SBC-compressed tensor: Golomb positions + 1 float.
+
+    Mirrors the paper's "positions + one mean value per tensor" message.
+    """
+    bits = encode_positions(indices, p)
+    return {
+        "positions": np.packbits(bits) if bits.size else np.zeros((0,), np.uint8),
+        "nbits_positions": int(bits.size),
+        "mean": float(mean),
+        "p": float(p),
+    }
+
+
+def decode_sbc_message(msg: dict, n: int) -> np.ndarray:
+    bits = np.unpackbits(msg["positions"])[: msg["nbits_positions"]]
+    idx = decode_positions(bits, msg["p"])
+    dense = np.zeros((n,), np.float32)
+    dense[idx] = msg["mean"]
+    return dense
+
+
+def message_bits(msg: dict) -> int:
+    """Total wire bits of one encoded tensor (positions + 32-bit mean)."""
+    return msg["nbits_positions"] + 32

@@ -1,0 +1,49 @@
+"""Residual accumulation (error feedback) — paper Eq. 2 and Theorem II.1.
+
+    R_τ = R_{τ-1} + ΔW_τ − ΔW*_τ
+
+Theorem II.1: if transferred updates are restricted to a metric subspace S,
+then ΔW*_T = Proj_S(R_{T-1} + ΔW_T) uniquely minimizes the accumulated error
+‖Σ_t (ΔW_t − ΔW*_t)‖ over S — i.e. error feedback keeps the compressed
+optimization path the orthogonal projection of the uncompressed one.
+
+The mechanics live in :meth:`repro.core.api.Compressor.compress`; this module
+provides the standalone primitives plus the projection utilities the theorem
+property-test (tests/test_residual.py) exercises.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def residual_update(residual: PyTree, delta: PyTree, transferred: PyTree) -> PyTree:
+    """Eq. 2: R ← R + ΔW − ΔW*."""
+    return jax.tree.map(lambda r, d, t: r + d - t, residual, delta, transferred)
+
+
+def accumulated_error(deltas: jax.Array, transferred: jax.Array) -> jax.Array:
+    """‖Σ_t (ΔW_t − ΔW*_t)‖ for stacked (T, n) histories (Eq. 4)."""
+    return jnp.linalg.norm(jnp.sum(deltas - transferred, axis=0))
+
+
+def project_fixed_support(vec: jax.Array, support: jax.Array) -> jax.Array:
+    """Orthogonal projection onto S = {x : x_i = 0 for i ∉ support}.
+
+    A fixed-support sparse set IS a linear subspace, so this is the exact
+    setting of Theorem II.1; tests verify no other element of S beats it.
+    """
+    return jnp.where(support, vec, 0.0)
+
+
+def topk_projection(vec: jax.Array, k: int) -> jax.Array:
+    """Best k-sparse approximation (projection onto the k-sparse union-of-
+    subspaces); top-k-by-magnitude with true values — what Gradient Dropping
+    transfers, and the per-round optimal ΔW* of Theorem II.1 given the
+    residual-accumulated input."""
+    _, idx = jax.lax.top_k(jnp.abs(vec), k)
+    return jnp.zeros_like(vec).at[idx].set(vec[idx])

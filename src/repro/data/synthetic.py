@@ -1,0 +1,175 @@
+"""Deterministic synthetic data pipelines with per-client sharding.
+
+The paper's experiments split a dataset into M equal shards, one per client
+(homogeneous/IID split).  This container is offline, so every reproduction
+task uses a *synthetic but genuinely learnable* stand-in with the same
+interface, seeded deterministically:
+
+  * LM task ("markov"): a fixed random first-order Markov chain over the
+    vocabulary with temperature-controlled entropy.  A model that learns the
+    transition table reaches the chain's entropy floor; an untrained model
+    sits at ln(V).  This gives convergence curves with real headroom, which
+    is what the Table II / Fig. 5-6 analogues need.
+  * LM task ("affine"): x_{t+1} = (a·x_t + b) mod V — near-zero achievable
+    loss, used by fast smoke/integration tests.
+  * Classification ("blobs"): Gaussian class blobs in pixel space (LeNet /
+    ResNet shapes) — fixed class means with additive noise.
+
+Batches are generated on the fly from a counter-based PRNG (jax.random.fold_in)
+so the pipeline is stateless, reproducible, and infinite.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """A data source: ``sample(step, client) -> dict`` plus metadata."""
+
+    name: str
+    sample: Callable[[int, int], PyTree]  # (step, client) -> batch dict
+    vocab_size: int = 0
+    n_classes: int = 0
+    entropy_floor: float = 0.0  # achievable loss (nats/token) for LM tasks
+
+
+# ------------------------------------------------------------------ LM tasks
+
+
+def make_lm_task(
+    *,
+    vocab: int,
+    batch: int,
+    seq_len: int,
+    kind: str = "markov",
+    temperature: float = 1.0,
+    seed: int = 0,
+    extra_fields: Optional[Callable[[jax.Array], PyTree]] = None,
+) -> Task:
+    """Next-token prediction: ``labels[t] = tokens[t+1]`` at every position."""
+    base = jax.random.PRNGKey(seed)
+    floor = 0.0
+
+    if kind == "markov":
+        logits = jax.random.normal(jax.random.fold_in(base, 17), (vocab, vocab))
+        logits = logits / max(temperature, 1e-3)
+        probs = jax.nn.softmax(logits, axis=-1)
+        # entropy floor ≈ mean row entropy (stationary dist of a dense random
+        # chain is near-uniform)
+        row_ent = -jnp.sum(probs * jnp.log(probs + 1e-12), axis=-1)
+        floor = float(jnp.mean(row_ent))
+        log_probs = jnp.log(probs)
+
+        def gen_tokens(rng: jax.Array) -> jax.Array:
+            def step(tok, r):
+                nxt = jax.random.categorical(r, log_probs[tok])
+                return nxt, nxt
+
+            r0, rs = jax.random.split(rng)
+            start = jax.random.randint(r0, (batch,), 0, vocab)
+            keys = jax.random.split(rs, seq_len)
+            _, toks = jax.lax.scan(step, start, keys)  # (S, B)
+            return jnp.concatenate([start[None], toks], axis=0).T  # (B, S+1)
+
+    elif kind == "affine":
+        a, b = 3, 7
+
+        def gen_tokens(rng: jax.Array) -> jax.Array:
+            x0 = jax.random.randint(rng, (batch,), 0, vocab)
+
+            def step(x, _):
+                nxt = (a * x + b) % vocab
+                return nxt, nxt
+
+            _, xs = jax.lax.scan(step, x0, None, length=seq_len)  # (S, B)
+            return jnp.concatenate([x0[None], xs], axis=0).T  # (B, S+1)
+
+    else:
+        raise ValueError(f"unknown LM task kind {kind!r}")
+
+    gen_tokens = jax.jit(gen_tokens)
+
+    def sample(step: int, client: int) -> PyTree:
+        rng = jax.random.fold_in(jax.random.fold_in(base, 1000 + client), step)
+        toks = gen_tokens(rng)  # (B, S+1)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if extra_fields is not None:
+            out.update(extra_fields(rng))
+        return out
+
+    return Task(name=f"lm_{kind}", sample=sample, vocab_size=vocab, entropy_floor=floor)
+
+
+# --------------------------------------------------------- classification
+
+
+def make_classification_task(
+    *,
+    n_classes: int,
+    img_size: int,
+    channels: int,
+    batch: int,
+    noise: float = 0.35,
+    seed: int = 0,
+) -> Task:
+    """Gaussian class-blob images: class c has a fixed mean image; samples
+    add isotropic noise."""
+    base = jax.random.PRNGKey(seed)
+    means = (
+        jax.random.normal(jax.random.fold_in(base, 23), (n_classes, img_size, img_size, channels))
+        * 0.5
+    )
+
+    @jax.jit
+    def gen(rng: jax.Array) -> tuple[jax.Array, jax.Array]:
+        r1, r2 = jax.random.split(rng)
+        labels = jax.random.randint(r1, (batch,), 0, n_classes)
+        imgs = means[labels] + noise * jax.random.normal(
+            r2, (batch, img_size, img_size, channels)
+        )
+        return imgs, labels
+
+    def sample(step: int, client: int) -> PyTree:
+        rng = jax.random.fold_in(jax.random.fold_in(base, 2000 + client), step)
+        imgs, labels = gen(rng)
+        return {"images": imgs, "labels": labels}
+
+    return Task(name="blobs", sample=sample, n_classes=n_classes)
+
+
+# ------------------------------------------------------- client-sharded view
+
+
+def split_among_clients(task: Task, n_clients: int) -> Callable[[int], PyTree]:
+    """``batch_fn(round) -> dict`` with a leading client axis.
+
+    Each client sees a disjoint stream (folded-in client id), mirroring the
+    paper's balanced IID shard split.
+    """
+
+    def batch_fn(round_idx: int) -> PyTree:
+        per = [task.sample(round_idx, c) for c in range(n_clients)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    return batch_fn
+
+
+def client_batches(task: Task, n_clients: int, n_delay: int) -> Callable[[int], PyTree]:
+    """Like :func:`split_among_clients` but with a local-step (delay) axis:
+    returns (clients, n_delay, batch, ...) — one microbatch per local step."""
+
+    def batch_fn(round_idx: int) -> PyTree:
+        steps = []
+        for d in range(n_delay):
+            per = [task.sample(round_idx * n_delay + d, c) for c in range(n_clients)]
+            steps.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *steps)
+
+    return batch_fn

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused sparse-binarize apply + residual update.
+
+The final pass of SBC compression (paper Alg. 2 lines 5-8 + Eq. 2):
+
+    mask  = pos_wins ? (x ≥ t⁺) : (x ≤ −t⁻)
+    ΔW*   = μ · mask                     (μ already signed: +μ⁺ or −μ⁻)
+    R_new = x − ΔW*                      (x is the residual-accumulated ΔW)
+
+Unfused this is ~4 HBM round-trips (mask, select, subtract, write); fused it
+is one read and two writes, which matters because compression streams the
+ENTIRE parameter set once per communication round.  Elementwise over
+(BM, LANES) VMEM tiles; padding zeros produce ΔW* = 0 and R = 0 in the pad
+region, which the caller slices off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.hist2side import DEFAULT_BM, DEFAULT_LANES, _pad_2d
+
+
+def _apply_kernel(x_ref, tpos_ref, tneg_ref, mu_ref, side_ref, out_ref, res_ref):
+    x = x_ref[...]
+    tpos = tpos_ref[0, 0]
+    tneg = tneg_ref[0, 0]
+    mu = mu_ref[0, 0]
+    pos_wins = side_ref[0, 0] > 0.5
+
+    mask = jnp.where(pos_wins, x >= tpos, x <= -tneg)
+    out = jnp.where(mask, mu, 0.0)
+    out_ref[...] = out
+    res_ref[...] = x - out
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "lanes", "interpret"))
+def binarize_apply(
+    flat: jax.Array,
+    t_pos: jax.Array,
+    t_neg: jax.Array,
+    mu: jax.Array,
+    pos_wins: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    lanes: int = DEFAULT_LANES,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (ΔW*, R_new), both f32 of the original flat length."""
+    n = flat.shape[0]
+    x, nblocks = _pad_2d(flat, bm, lanes)
+    scal = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+
+    out, res = pl.pallas_call(
+        _apply_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((bm, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((bm, lanes), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, jnp.float32),
+            jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, scal(t_pos), scal(t_neg), scal(mu), scal(pos_wins))
+    return out.reshape(-1)[:n], res.reshape(-1)[:n]

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: masked first moments for sparse binarization.
+
+Given the top-k thresholds t⁺ and t⁻ (from the histogram passes), one
+streaming HBM→VMEM pass computes, per paper Alg. 2 lines 3-4:
+
+    sum⁺ = Σ x·[x ≥ t⁺]      cnt⁺ = Σ [x ≥ t⁺]
+    sum⁻ = Σ x·[x ≤ −t⁻]     cnt⁻ = Σ [x ≤ −t⁻]
+
+so that μ⁺ = sum⁺/cnt⁺ and μ⁻ = −sum⁻/cnt⁻.  Output is a single (2, 2)
+block accumulated across the sequential grid: [[sum⁺, cnt⁺], [sum⁻, cnt⁻]].
+
+Padding zeros are never selected because t⁺, t⁻ > 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.hist2side import DEFAULT_BM, DEFAULT_LANES, _pad_2d
+
+
+def _moments_kernel(x_ref, tpos_ref, tneg_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    tpos = tpos_ref[0, 0]
+    tneg = tneg_ref[0, 0]
+
+    pos = x >= tpos
+    neg = x <= -tneg
+    sum_pos = jnp.sum(jnp.where(pos, x, 0.0))
+    cnt_pos = jnp.sum(jnp.where(pos, 1.0, 0.0))
+    sum_neg = jnp.sum(jnp.where(neg, x, 0.0))
+    cnt_neg = jnp.sum(jnp.where(neg, 1.0, 0.0))
+
+    out_ref[...] += jnp.array([[sum_pos, cnt_pos], [sum_neg, cnt_neg]], jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "lanes", "interpret"))
+def masked_moments(
+    flat: jax.Array,
+    t_pos: jax.Array,
+    t_neg: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    lanes: int = DEFAULT_LANES,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (2,2) f32: [[sum⁺, cnt⁺], [sum⁻, cnt⁻]]."""
+    x, nblocks = _pad_2d(flat, bm, lanes)
+    tp = jnp.asarray(t_pos, jnp.float32).reshape(1, 1)
+    tn = jnp.asarray(t_neg, jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        _moments_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((bm, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, 2), jnp.float32),
+        interpret=interpret,
+    )(x, tp, tn)

@@ -1,0 +1,170 @@
+"""Public jit'd wrappers over the Pallas SBC kernels.
+
+Pipeline (the TPU-native replacement for the paper's top-p% sort):
+
+  1. ``threshold_two_pass`` — coarse (2, nbins) log-magnitude histogram over
+     [absmax·2⁻³⁰, absmax), survival counts pick the bucket holding the k-th
+     largest entry per side; a second histogram zoomed into that bucket
+     refines the threshold to nbins² effective resolution (~0.03 octaves at
+     nbins=128, i.e. ≤2% relative threshold error).
+  2. ``masked_moments`` — μ⁺/μ⁻ over the selected entries (Alg. 2 l.4).
+  3. ``binarize_apply`` — fused ΔW* write + residual update (Eq. 2).
+
+Three streaming passes total vs. an O(n log n) sort; each pass is
+memory-bound at ~4 B/element read.  On CPU (this container) every kernel
+runs with ``interpret=True``; on TPU set ``interpret=False``.
+
+``sbc_compress_hist`` composes the full pipeline and returns everything the
+trainer's exchange needs.  ``sbc_compress_exact`` is the faithful
+``lax.top_k`` path (the baseline recorded in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.golomb import expected_position_bits
+from repro.kernels.binarize_apply import binarize_apply
+from repro.kernels.hist2side import SPAN_OCTAVES, bucket_lower_edges, hist2side
+from repro.kernels.moments import masked_moments
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _side_threshold(
+    hist_row: jax.Array, edges: jax.Array, k: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pick the bucket of the k-th largest entry from survival counts.
+
+    Returns (bucket_lo_edge, bucket_hi_edge, count_above_bucket).
+    If the side has fewer than k entries the threshold collapses to the
+    lowest edge (select everything on that side).
+    """
+    nbins = hist_row.shape[0]
+    # survival[b] = number of entries in bucket >= b
+    survival = jnp.cumsum(hist_row[::-1])[::-1]
+    feasible = survival >= k
+    any_feasible = jnp.any(feasible)
+    # largest feasible bucket index (survival is non-increasing)
+    bstar = jnp.where(any_feasible, jnp.sum(feasible.astype(jnp.int32)) - 1, 0)
+    lo_edge = jnp.where(any_feasible, edges[bstar], edges[0])
+    hi_edge = jnp.where(
+        bstar + 1 < nbins, edges[jnp.minimum(bstar + 1, nbins - 1)], edges[nbins - 1] * 2.0
+    )
+    above = jnp.where(
+        bstar + 1 < nbins,
+        jnp.concatenate([survival[1:], jnp.zeros((1,))])[bstar],
+        0.0,
+    )
+    return lo_edge, hi_edge, above
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nbins", "interpret"))
+def threshold_two_pass(
+    flat: jax.Array,
+    k: int,
+    *,
+    nbins: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(t⁺, t⁻): approximate k-th-largest thresholds for each side of ΔW."""
+    x = flat.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x)) + 1e-30
+    lo0 = scale * 2.0**-SPAN_OCTAVES
+    hi0 = scale * 1.0001
+
+    h1 = hist2side(x, lo0, hi0, nbins=nbins, interpret=interpret)
+    edges0 = bucket_lower_edges(lo0, hi0, nbins)
+
+    kf = jnp.asarray(k, jnp.float32)
+    lo_p, hi_p, above_p = _side_threshold(h1[0], edges0, kf)
+    lo_n, hi_n, above_n = _side_threshold(h1[1], edges0, kf)
+
+    # pass 2: zoom into the winning bucket per side
+    h2 = hist2side(
+        x,
+        jnp.stack([lo_p, lo_n]),
+        jnp.stack([hi_p, hi_n]),
+        nbins=nbins,
+        interpret=interpret,
+    )
+    edges_p = bucket_lower_edges(lo_p, hi_p, nbins)
+    edges_n = bucket_lower_edges(lo_n, hi_n, nbins)
+    t_pos, _, _ = _side_threshold(h2[0], edges_p, kf - above_p)
+    t_neg, _, _ = _side_threshold(h2[1], edges_n, kf - above_n)
+    return t_pos, t_neg
+
+
+class SBCCompressed(NamedTuple):
+    """Everything one SBC compression of a flat tensor produces."""
+
+    delta_star: jax.Array  # dense ΔW* (f32[n])
+    residual: jax.Array  # new residual = acc − ΔW* (f32[n])
+    mean: jax.Array  # signed μ (f32[])
+    count: jax.Array  # number of surviving entries m (f32[])
+    nbits: jax.Array  # analytic wire bits: m·b̄_pos(p) + 32
+
+
+@functools.partial(jax.jit, static_argnames=("p", "nbins", "interpret"))
+def sbc_compress_hist(
+    acc: jax.Array,
+    *,
+    p: float,
+    nbins: int = 128,
+    interpret: bool = True,
+) -> SBCCompressed:
+    """Histogram-threshold SBC over a residual-accumulated flat update."""
+    n = acc.shape[0]
+    k = max(1, min(n, int(round(p * n))))
+    x = acc.astype(jnp.float32)
+
+    t_pos, t_neg = threshold_two_pass(x, k, nbins=nbins, interpret=interpret)
+    mom = masked_moments(x, t_pos, t_neg, interpret=interpret)
+    mu_pos = mom[0, 0] / jnp.maximum(mom[0, 1], 1.0)
+    mu_neg = -mom[1, 0] / jnp.maximum(mom[1, 1], 1.0)  # positive magnitude
+
+    pos_wins = mu_pos > mu_neg
+    mu = jnp.where(pos_wins, mu_pos, -mu_neg)
+    count = jnp.where(pos_wins, mom[0, 1], mom[1, 1])
+
+    out, res = binarize_apply(
+        x, t_pos, t_neg, mu, pos_wins.astype(jnp.float32), interpret=interpret
+    )
+    nbits = count * expected_position_bits(p) + 32.0
+    return SBCCompressed(out, res, mu, count, nbits)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def sbc_compress_exact(acc: jax.Array, *, p: float) -> SBCCompressed:
+    """Faithful Alg. 2 via lax.top_k (exactly k survivors)."""
+    n = acc.shape[0]
+    k = max(1, min(n, int(round(p * n))))
+    x = acc.astype(jnp.float32)
+
+    val_pos, idx_pos = jax.lax.top_k(x, k)
+    val_neg, idx_neg = jax.lax.top_k(-x, k)
+    mu_pos = jnp.mean(val_pos)
+    mu_neg = jnp.mean(val_neg)
+    pos_wins = mu_pos > mu_neg
+    idx = jnp.where(pos_wins, idx_pos, idx_neg)
+    mu = jnp.where(pos_wins, mu_pos, -mu_neg)
+
+    out = jnp.zeros_like(x).at[idx].set(mu)
+    nbits = jnp.asarray(k * expected_position_bits(p) + 32.0, jnp.float32)
+    return SBCCompressed(out, x - out, mu, jnp.asarray(k, jnp.float32), nbits)
+
+
+def dense_to_sparse(dense: jax.Array, k_cap: int) -> tuple[jax.Array, jax.Array]:
+    """Extract (idx[k_cap], valid[k_cap]) from a dense masked tensor.
+
+    Used by the exchange when the survivor count is only approximately k
+    (histogram path).  Padding slots carry valid=0 so scatter-adds are no-ops.
+    """
+    idx = jnp.nonzero(dense, size=k_cap, fill_value=0)[0].astype(jnp.int32)
+    m = jnp.sum((dense != 0).astype(jnp.int32))
+    valid = (jnp.arange(k_cap) < m).astype(jnp.float32)
+    return idx, valid

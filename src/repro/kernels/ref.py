@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hist2side_ref(flat: jax.Array, lo, hi, nbins: int = 128) -> jax.Array:
+    """Oracle for kernels.hist2side.hist2side (identical binning rule).
+
+    ``lo``/``hi`` broadcast to (2,): per-side magnitude ranges.
+    """
+    x = flat.astype(jnp.float32)
+    absx = jnp.abs(x)
+    lo = jnp.broadcast_to(jnp.asarray(lo, jnp.float32), (2,))
+    hi = jnp.broadcast_to(jnp.asarray(hi, jnp.float32), (2,))
+    rows = []
+    for side, sel in ((0, x > 0.0), (1, x < 0.0)):
+        in_range = sel & (absx >= lo[side]) & (absx < hi[side])
+        log_lo = jnp.log2(jnp.maximum(lo[side], 1e-38))
+        log_hi = jnp.log2(jnp.maximum(hi[side], 2e-38))
+        f = (jnp.log2(jnp.maximum(absx, 1e-38)) - log_lo) / (log_hi - log_lo)
+        bucket = jnp.clip((f * nbins).astype(jnp.int32), 0, nbins - 1)
+        rows.append(jnp.zeros((nbins,)).at[bucket].add(jnp.where(in_range, 1.0, 0.0)))
+    return jnp.stack(rows, axis=0)
+
+
+def masked_moments_ref(flat: jax.Array, t_pos, t_neg) -> jax.Array:
+    x = flat.astype(jnp.float32)
+    pos = x >= t_pos
+    neg = x <= -t_neg
+    return jnp.array(
+        [
+            [jnp.sum(jnp.where(pos, x, 0.0)), jnp.sum(pos.astype(jnp.float32))],
+            [jnp.sum(jnp.where(neg, x, 0.0)), jnp.sum(neg.astype(jnp.float32))],
+        ],
+        jnp.float32,
+    )
+
+
+def binarize_apply_ref(flat, t_pos, t_neg, mu, pos_wins):
+    x = flat.astype(jnp.float32)
+    mask = jnp.where(pos_wins > 0.5, x >= t_pos, x <= -t_neg)
+    out = jnp.where(mask, jnp.asarray(mu, jnp.float32), 0.0)
+    return out, x - out
+
+
+def sbc_exact_ref(flat: jax.Array, k: int) -> jax.Array:
+    """Exact top-k SBC (paper Alg. 2) — the oracle the histogram pipeline
+    approximates.  Returns the dense ΔW*."""
+    val_pos, idx_pos = jax.lax.top_k(flat, k)
+    val_neg, idx_neg = jax.lax.top_k(-flat, k)
+    mu_pos = jnp.mean(val_pos)
+    mu_neg = jnp.mean(val_neg)
+    pos_wins = mu_pos > mu_neg
+    idx = jnp.where(pos_wins, idx_pos, idx_neg)
+    mean = jnp.where(pos_wins, mu_pos, -mu_neg)
+    return jnp.zeros_like(flat).at[idx].set(mean)

@@ -1,0 +1,510 @@
+"""GSPMD distributed DSGD: sharded train_step / serve_step builders.
+
+Design (DESIGN.md §4):
+
+* **Clients.**  ``cfg.client_mode``:
+    - 'data': one client per data coordinate (×pod) — per-client ΔW never
+      crosses the data axis; the ONLY cross-client traffic is the sparse
+      exchange.  Small/mid archs (params replicated over 'data').
+    - 'pod':  one client per pod; grads all-reduce densely *inside* a pod
+      (fast ICI), SBC compresses the cross-pod exchange (slow DCN).  ≥20B
+      archs (params FSDP-sharded over 'data').
+
+* **Shard-wise compression** (the TPU-native re-think of paper Alg. 2):
+  compression runs inside ``shard_map`` — every device applies exact
+  top-k + binarization to ITS OWN shard of ΔW, so the paper's O(n log n)
+  global sort becomes an embarrassingly-local per-shard top-k, and the μ±
+  means are per-(tensor, shard) instead of per-tensor (finer granularity,
+  same wire format: one 32-bit scalar per shard).  The exchange is an
+  explicit ``jax.lax.all_gather`` of (idx[k] int32, μ f32) over the client
+  axes — the ×p bandwidth saving is therefore visible in the lowered HLO
+  collective schedule, not just in a wire-format codec.
+
+* **Dense baseline** (``compressor='none'``): the exchange is a mean over
+  the client axis of the full ΔW — lowers to the dense all-reduce that the
+  paper's Eq. 1 baseline counts.
+
+Bit accounting is static (shapes and sparsity are compile-time): per leaf,
+``L·S_shards·(k_loc·b̄_pos(p) + 32)`` wire bits per client per round.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+try:  # jax >= 0.7 moved shard_map to the top level
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_vma=False)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_rep=False)
+
+from repro.configs.base import ModelConfig
+from repro.core.golomb import expected_position_bits
+from repro.models import hints
+from repro.models.model import Model, build_model
+from repro.optim.optimizers import get_optimizer
+
+PyTree = Any
+
+
+# ----------------------------------------------------------- client topology
+
+
+def client_topology(cfg: ModelConfig, mesh: Mesh) -> tuple[int, tuple[str, ...]]:
+    """(n_clients, client mesh axes).  See module docstring."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if cfg.client_mode == "pod":
+        return (sizes["pod"], ("pod",)) if "pod" in sizes else (1, ())
+    axes = tuple(a for a in ("pod", "data") if a in sizes)
+    return math.prod(sizes[a] for a in axes), axes
+
+
+def _lead_spec(client_axes: tuple[str, ...]):
+    if not client_axes:
+        return None
+    return client_axes[0] if len(client_axes) == 1 else client_axes
+
+
+# ------------------------------------------------------------- spec plumbing
+
+
+def stacked_specs(inner_specs: PyTree, client_axes: tuple[str, ...]) -> PyTree:
+    """Specs for a (C,)+param-shaped tree (residual / momentum / adam)."""
+    lead = _lead_spec(client_axes)
+    return jax.tree.map(
+        lambda s: P(lead, *s), inner_specs, is_leaf=lambda s: isinstance(s, P)
+    )
+
+
+def opt_state_specs(opt_name: str, param_specs: PyTree, client_axes) -> PyTree:
+    inner = stacked_specs(param_specs, client_axes)
+    if opt_name == "sgd":
+        return ()
+    if opt_name == "momentum":
+        return inner
+    if opt_name == "adam":
+        from repro.optim.optimizers import AdamState
+
+        return AdamState(inner, inner)
+    raise ValueError(opt_name)
+
+
+def _shards_of(spec: P, mesh_sizes: dict[str, int]) -> int:
+    total = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            total *= mesh_sizes.get(ax, 1)
+    return total
+
+
+# ----------------------------------------------- shard-wise compress+exchange
+
+
+def _sbc_local(acc_flat: jax.Array, p: float, client_axes, n_clients: int,
+               out_dtype=jnp.float32):
+    """Inside shard_map: exact per-shard SBC (paper Alg. 2) + sparse exchange.
+
+    acc_flat: (L, n_loc) — residual-accumulated ΔW, THIS device's shard
+    (any float dtype; per-layer math runs in f32).
+    Returns (mean_delta (L, n_loc), own_delta_star (L, n_loc)) in out_dtype.
+
+    Layers are processed through a lax.scan so only ONE layer's f32
+    working set is live at a time (§Perf lowmem iteration — the vmap
+    formulation materialized 3 full-leaf f32 buffers).
+    """
+    L, n_loc = acc_flat.shape
+    k = max(1, min(n_loc, int(round(p * n_loc))))
+
+    def one_layer(_, x_row):
+        x = x_row.astype(jnp.float32)
+        val_pos, idx_pos = jax.lax.top_k(x, k)
+        val_neg, idx_neg = jax.lax.top_k(-x, k)
+        mu_pos, mu_neg = jnp.mean(val_pos), jnp.mean(val_neg)
+        pos_wins = mu_pos > mu_neg
+        idx = jnp.where(pos_wins, idx_pos, idx_neg).astype(jnp.int32)
+        mu = jnp.where(pos_wins, mu_pos, -mu_neg).astype(jnp.float32)
+        own_row = jnp.zeros((n_loc,), out_dtype).at[idx].set(mu.astype(out_dtype))
+        return None, (idx, mu, own_row)
+
+    _, (idx, mu, own) = jax.lax.scan(one_layer, None, acc_flat)
+
+    if client_axes and n_clients > 1:
+        # THE exchange: tiny (idx, μ) tensors cross the client axes.
+        gidx, gmu = idx, mu
+        for ax in client_axes:
+            gidx = jax.lax.all_gather(gidx, ax)
+            gmu = jax.lax.all_gather(gmu, ax)
+        gidx = gidx.reshape(n_clients, L, k)
+        gmu = gmu.reshape(n_clients, L)
+
+        def dense_layer(_, args):
+            rows_i, mus_i = args  # (C, k), (C,)
+            row = jnp.zeros((n_loc,), jnp.float32)
+
+            def add(acc, ci):
+                return acc.at[rows_i[ci]].add(mus_i[ci] / n_clients), None
+
+            row, _ = jax.lax.scan(add, row, jnp.arange(n_clients))
+            return None, row.astype(out_dtype)
+
+        _, dense = jax.lax.scan(
+            dense_layer, None, (gidx.transpose(1, 0, 2), gmu.transpose(1, 0))
+        )
+    else:
+        dense = own
+    return dense, own
+
+
+def _dense_local(acc_flat, client_axes, n_clients):
+    """Dense baseline: pmean over clients == all-reduce of the full ΔW."""
+    out = acc_flat
+    for ax in client_axes:
+        out = jax.lax.pmean(out, ax)
+    return out, acc_flat
+
+
+# ------------------------------------------------------------ train builder
+
+
+class DistTrainFns(NamedTuple):
+    train_step: Callable  # (state, batch) -> (state, metrics)
+    init_state: Callable  # rng -> state (unsharded; dry-run never calls it)
+    state_shardings: Any
+    batch_shardings: Callable  # batch pytree -> shardings pytree
+    abstract_state: Any
+    bits_per_client: float  # static Eq. 1 wire bits per round
+    bits_dense: float
+
+
+def make_dist_train(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    compressor: str = "sbc",
+    sparsity: float = 0.001,
+    model: Optional[Model] = None,
+    opts: frozenset = frozenset(),
+) -> DistTrainFns:
+    """Build the sharded DSGD train_step for (cfg, mesh).
+
+    State = {'params', 'opt', 'residual'}; batch has a leading client axis
+    of size ``client_topology(cfg, mesh)[0]``.
+
+    ``opts`` — §Perf beyond-baseline toggles (baseline = empty set):
+      'expert_parallel'  experts shard over 'data', dispatch follows
+      'seq_every2'       sequence-parallel hint on every 2nd block only
+    """
+    from repro.models.model import make_param_specs
+
+    model = model or build_model(cfg)
+    n_clients, client_axes = client_topology(cfg, mesh)
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    opt_kw = {} if cfg.local_opt == "sgd" else {"state_dtype": cfg.residual_dtype}
+    opt = get_optimizer(cfg.local_opt, **opt_kw)
+    sparse = compressor == "sbc"
+    # the cfg's dispatch mode decides the MoE weight sharding rules
+    # ('flat_ep'/'grouped' → EP rules; 'flat_fsdp' → baseline fsdp rules)
+    ep_rules = cfg.moe_dispatch in ("flat_ep", "grouped")
+
+    # ---- abstract state + shardings
+    a_params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = make_param_specs(a_params, mesh, fsdp=cfg.fsdp,
+                               expert_parallel=ep_rules)
+    flat_p = jax.tree_util.tree_flatten_with_path(a_params)[0]
+    scanned = [
+        "stack/scan" in "/".join(k.key if hasattr(k, "key") else str(k) for k in path)
+        for path, _ in flat_p
+    ]
+    flat_specs = jax.tree.leaves(p_specs, is_leaf=lambda s: isinstance(s, P))
+    lead = _lead_spec(client_axes)
+    flat_r_specs = [P(lead, *s) for s in flat_specs]
+
+    def stack_c(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_clients,) + x.shape).copy(), tree
+        )
+
+    def init_state(rng):
+        params = model.init(rng)
+        residual = jax.tree.map(
+            lambda x: jnp.zeros((n_clients,) + x.shape, cfg.residual_dtype), params
+        )
+        return {"params": params, "opt": stack_c(opt.init(params)), "residual": residual}
+
+    a_state = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    state_specs = {
+        "params": p_specs,
+        "opt": opt_state_specs(cfg.local_opt, p_specs, client_axes),
+        "residual": jax.tree.unflatten(
+            jax.tree.structure(p_specs, is_leaf=lambda s: isinstance(s, P)), flat_r_specs
+        ),
+    }
+    ns = lambda spec: NamedSharding(mesh, spec)
+    state_shardings = jax.tree.map(ns, state_specs, is_leaf=lambda s: isinstance(s, P))
+
+    # ---- static Eq. 1 bit accounting per round per client
+    bits_sparse = bits_dense = 0.0
+    for (path, leaf), spec, is_scan in zip(flat_p, flat_specs, scanned):
+        L = leaf.shape[0] if is_scan and leaf.ndim > 1 else 1
+        shards = _shards_of(spec, mesh_sizes)
+        n_loc = max(1, leaf.size // (L * shards))
+        k_loc = max(1, min(n_loc, int(round(sparsity * n_loc))))
+        bits_sparse += L * shards * (k_loc * expected_position_bits(sparsity) + 32.0)
+        bits_dense += 32.0 * leaf.size
+
+    # ---- batch shardings
+    inner = "data" if cfg.client_mode == "pod" else None
+
+    def batch_shardings(batch_tree):
+        def one(x):
+            return ns(P(lead, inner, *([None] * (x.ndim - 2))))
+
+        return jax.tree.map(one, batch_tree)
+
+    # ---- the step
+    def train_step(state, batch):
+        params = state["params"]
+
+        def local(opt_state, client_batch):
+            loss, g = jax.value_and_grad(model.loss_fn)(params, client_batch)
+            p2, os2 = opt.apply(opt_state, g, params, cfg.base_lr, jnp.zeros((), jnp.int32))
+            delta = jax.tree.map(
+                lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)).astype(
+                    cfg.residual_dtype
+                ),
+                p2,
+                params,
+            )
+            return delta, os2, loss
+
+        deltas, opt_states, losses = jax.vmap(local)(state["opt"], batch)
+
+        # residual add (Alg. 1 l.10): acc = R + ΔW
+        acc = jax.tree.map(
+            lambda r, d: (r.astype(jnp.float32) + d.astype(jnp.float32)).astype(
+                cfg.residual_dtype
+            ),
+            state["residual"],
+            deltas,
+        )
+        acc_leaves, acc_def = jax.tree.flatten(acc)
+        in_specs = tuple(flat_r_specs)
+        need_mask = cfg.local_opt != "sgd"  # momentum masking needs ΔW*_i
+
+        def exchange(*leaves):
+            """Per-leaf: compress own shard, exchange, and emit
+            (mean ΔW, NEW residual = acc − own) — own itself never leaves
+            the shard_map unless momentum masking needs it (§Perf B9)."""
+            means, residuals, owns = [], [], []
+            for leaf, is_scan in zip(leaves, scanned):
+                body = leaf[0]  # client dim is locally 1 (sharded over clients)
+                L = body.shape[0] if is_scan and body.ndim > 1 else 1
+                flat = body.reshape(L, -1)
+                if sparse:
+                    dense, own = _sbc_local(flat, sparsity, client_axes, n_clients,
+                                            out_dtype=leaf.dtype)
+                else:
+                    dense, own = _dense_local(flat.astype(jnp.float32),
+                                              client_axes, n_clients)
+                new_res = (flat.astype(jnp.float32) - own.astype(jnp.float32)).astype(
+                    cfg.residual_dtype
+                )
+                means.append(dense.reshape(body.shape).astype(leaf.dtype)[None])
+                residuals.append(new_res.reshape(body.shape).astype(leaf.dtype)[None])
+                owns.append(own.reshape(body.shape).astype(leaf.dtype)[None]
+                            if need_mask else jnp.zeros((1,) * leaf.ndim, leaf.dtype))
+            return tuple(means), tuple(residuals), tuple(owns)
+
+        own_specs = in_specs if need_mask else tuple(P() for _ in flat_r_specs)
+        mean_leaves, res_leaves, own_leaves = shard_map(
+            exchange, mesh=mesh, in_specs=in_specs,
+            out_specs=(in_specs, in_specs, own_specs),
+        )(*acc_leaves)
+
+        mean_tree = jax.tree.unflatten(acc_def, mean_leaves)
+        new_residual = jax.tree.unflatten(acc_def, res_leaves)
+
+        # every client reconstructs the identical mean update; take client 0
+        mean_delta = jax.tree.map(lambda m: m[0], mean_tree)
+
+        new_params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) + d.astype(jnp.float32)).astype(p.dtype),
+            params,
+            mean_delta,
+        )
+        # momentum masking (supplement A) at transmitted coordinates
+        if need_mask:
+            own_tree = jax.tree.unflatten(acc_def, own_leaves)
+            transmitted = jax.tree.map(lambda o: (o != 0).astype(jnp.float32), own_tree)
+            opt_states = jax.vmap(opt.mask)(opt_states, transmitted)
+
+        metrics = {"loss": jnp.mean(losses)}
+        return (
+            {"params": new_params, "opt": opt_states, "residual": new_residual},
+            metrics,
+        )
+
+    def wrapped(state, batch):
+        b_axes = ("data",) if cfg.client_mode == "pod" else None
+        with hints.activation_sharding(
+            mesh, batch_axes=b_axes, seq_axis="model",
+            expert_axis="data" if cfg.moe_dispatch == "flat_ep" else None,
+            seq_every=2 if "seq_every2" in opts else 1,
+            lean_moe="lean_moe" in opts,
+        ):
+            return train_step(state, batch)
+
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=(state_shardings, None),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,),
+    )
+    return DistTrainFns(
+        jitted, init_state, state_shardings, batch_shardings, a_state,
+        bits_per_client=bits_sparse if sparse else bits_dense,
+        bits_dense=bits_dense,
+    )
+
+
+# --------------------------------------------------------------- serve side
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, a_caches: PyTree) -> PyTree:
+    """Shardings for decode caches.
+
+    k/v (B, L, Hkv, hd): batch over ('pod','data') when divisible; kv heads
+    over 'model' when divisible, else the cache *sequence* dim over 'model'
+    (flash-decoding style — DESIGN.md §4).  SSM states: channels over 'model'.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    b_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    b_total = math.prod(sizes[a] for a in b_axes) if b_axes else 1
+    b_spec = _lead_spec(b_axes)
+
+    def spec_for(path: str, leaf) -> P:
+        shape = leaf.shape
+        off = 1 if path.startswith("scan/") else 0
+        dims: list[Any] = [None] * len(shape)
+        name = path.split("/")[-1]
+        if name in ("k", "v", "cross_k", "cross_v"):
+            B, L, H = shape[off], shape[off + 1], shape[off + 2]
+            if b_axes and B % b_total == 0:
+                dims[off] = b_spec
+            if H % m == 0:
+                dims[off + 2] = "model"
+            elif L % m == 0:
+                dims[off + 1] = "model"
+        elif name == "h":  # mamba (B, di, N)
+            B, di = shape[off], shape[off + 1]
+            if b_axes and B % b_total == 0:
+                dims[off] = b_spec
+            if di % m == 0:
+                dims[off + 1] = "model"
+        elif name in ("conv", "tm_prev", "cm_prev"):  # (B, w, ch)
+            B, ch = shape[off], shape[-1]
+            if b_axes and B % b_total == 0:
+                dims[off] = b_spec
+            if ch % m == 0:
+                dims[-1] = "model"
+        elif name == "s":  # rwkv (B, H, hs, hs)
+            B, H = shape[off], shape[off + 1]
+            if b_axes and B % b_total == 0:
+                dims[off] = b_spec
+            if H % m == 0:
+                dims[off + 1] = "model"
+        return P(*dims)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(a_caches)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(k.key if hasattr(k, "key") else str(k) for k in path)
+        specs.append(spec_for(pstr, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+class DistServeFns(NamedTuple):
+    serve_step: Callable
+    param_shardings: Any
+    cache_shardings: Any
+    abstract_caches: Any
+
+
+def make_dist_serve(
+    cfg: ModelConfig, mesh: Mesh, *, batch: int, seq_len: int,
+    model: Optional[Model] = None,
+) -> DistServeFns:
+    """One-token decode step against a ``seq_len``-deep sharded KV/SSM cache."""
+    model = model or build_model(cfg)
+    a_params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = model.param_specs(a_params, mesh)
+    ns = lambda s: NamedSharding(mesh, s)
+    p_shard = jax.tree.map(ns, p_specs, is_leaf=lambda s: isinstance(s, P))
+
+    a_caches = jax.eval_shape(lambda: model.init_caches(None, batch, seq_len))
+    c_shard = jax.tree.map(
+        ns, cache_specs(cfg, mesh, a_caches), is_leaf=lambda s: isinstance(s, P)
+    )
+
+    def step(params, tokens, caches, pos):
+        with hints.activation_sharding(mesh, batch_axes=None, seq_axis=None):
+            return model.decode_step(params, tokens, caches, pos)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, ns(P(None, None)), c_shard, ns(P())),
+        out_shardings=(None, c_shard),
+        donate_argnums=(2,),
+    )
+    return DistServeFns(jitted, p_shard, c_shard, a_caches)
+
+
+class DistPrefillFns(NamedTuple):
+    prefill: Callable
+    param_shardings: Any
+    batch_shardings: Callable
+
+
+def make_dist_prefill(
+    cfg: ModelConfig, mesh: Mesh, *, model: Optional[Model] = None
+) -> DistPrefillFns:
+    """Full-sequence prefill returning (hidden, caches) — the prefill_32k unit."""
+    model = model or build_model(cfg)
+    a_params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = model.param_specs(a_params, mesh)
+    ns = lambda s: NamedSharding(mesh, s)
+    p_shard = jax.tree.map(ns, p_specs, is_leaf=lambda s: isinstance(s, P))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    b_total = math.prod(sizes[a] for a in b_axes) if b_axes else 1
+    lead = _lead_spec(b_axes)
+
+    def pre(params, batch):
+        with hints.activation_sharding(mesh, batch_axes=b_axes, seq_axis="model"):
+            return model.prefill(params, batch)
+
+    def batch_shardings(batch_tree):
+        def one(x):
+            head = lead if x.shape[0] % b_total == 0 else None
+            return ns(P(head, *([None] * (x.ndim - 1))))
+
+        return jax.tree.map(one, batch_tree)
+
+    jitted = jax.jit(pre, in_shardings=(p_shard, None))
+    return DistPrefillFns(jitted, p_shard, batch_shardings)

@@ -1,0 +1,217 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × input shape × mesh).
+
+For each live pair this script:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. lowers the appropriate step — train_step (train_4k), prefill
+     (prefill_32k) or serve_step (decode_32k / long_500k) — against
+     ShapeDtypeStruct stand-ins (zero allocation),
+  3. compiles, prints memory_analysis() (proof-of-fit) and cost_analysis(),
+  4. derives the three roofline terms (launch.roofline) and appends a JSON
+     record to experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, input_specs
+from repro.launch import roofline
+from repro.launch.dist import (
+    client_topology,
+    make_dist_prefill,
+    make_dist_serve,
+    make_dist_train,
+)
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def scan_trips_for(cfg) -> int:
+    from repro.models.transformer import stack_pattern
+
+    try:
+        _, n_scan, _ = stack_pattern(cfg)
+        return max(1, n_scan)
+    except Exception:
+        return 1
+
+
+def lower_pair(cfg, shape_name: str, mesh, *, compressor: str = "sbc",
+               sparsity: float = 0.001, opts: frozenset = frozenset()):
+    """Returns (lowered, compiled, meta dict)."""
+    shape = INPUT_SHAPES[shape_name]
+    kind = shape["kind"]
+    n_dev = mesh.devices.size
+
+    if kind == "train":
+        fns = make_dist_train(cfg, mesh, compressor=compressor, sparsity=sparsity,
+                              opts=opts)
+        n_clients, _ = client_topology(cfg, mesh)
+        batch_sds = input_specs(cfg, shape_name, n_clients=n_clients)
+        # drop the labels/tokens etc already shaped (C, per, ...) — attach shardings
+        b_shard = fns.batch_shardings(batch_sds)
+        batch_sds = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            batch_sds, b_shard,
+        )
+        state_sds = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            fns.abstract_state, fns.state_shardings,
+        )
+        lowered = fns.train_step.lower(state_sds, batch_sds)
+        meta = {"unit": "train_step", "n_clients": n_clients,
+                "bits_per_client": fns.bits_per_client, "bits_dense": fns.bits_dense}
+    elif kind == "prefill":
+        fns = make_dist_prefill(cfg, mesh)
+        batch_sds = input_specs(cfg, shape_name)
+        b_shard = fns.batch_shardings(batch_sds)
+        batch_sds = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            batch_sds, b_shard,
+        )
+        params_sds = _param_sds(cfg, fns.param_shardings)
+        lowered = fns.prefill.lower(params_sds, batch_sds)
+        meta = {"unit": "prefill"}
+    else:  # decode
+        fns = make_dist_serve(cfg, mesh, batch=shape["global_batch"], seq_len=shape["seq_len"])
+        params_sds = _param_sds(cfg, fns.param_shardings)
+        caches_sds = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            fns.abstract_caches, fns.cache_shardings,
+        )
+        tok_sds = jax.ShapeDtypeStruct((shape["global_batch"], 1), jax.numpy.int32)
+        pos_sds = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        lowered = fns.serve_step.lower(params_sds, tok_sds, caches_sds, pos_sds)
+        meta = {"unit": "serve_step"}
+
+    compiled = lowered.compile()
+    return lowered, compiled, meta
+
+
+def _param_sds(cfg, p_shardings):
+    from repro.models.model import build_model
+
+    model = build_model(cfg)
+    a_params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        a_params, p_shardings,
+    )
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool, *, compressor="sbc",
+             sparsity=0.001, save=True, verbose=True,
+             opts: frozenset = frozenset()) -> dict:
+    cfg = get_config(arch)
+    mesh_name = "multi" if multi_pod else "single"
+    if opts:
+        mesh_name += "+" + "+".join(sorted(opts))
+    record: dict = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+                    "compressor": compressor, "opts": sorted(opts)}
+    reason = cfg.skip_reason(shape_name)
+    if reason:
+        record["status"] = "skip"
+        record["reason"] = reason
+        if verbose:
+            print(f"[skip]   {cfg.name} × {shape_name}: {reason}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        lowered, compiled, meta = lower_pair(
+            cfg, shape_name, mesh, compressor=compressor, sparsity=sparsity,
+            opts=opts,
+        )
+        record.update(meta)
+        mem = compiled.memory_analysis()
+        shape = INPUT_SHAPES[shape_name]
+        rf = roofline.analyze(
+            compiled,
+            n_devices=mesh.devices.size,
+            model_flops=roofline.model_flops_for(cfg, shape, shape["kind"]),
+            pod_group_size=2 if multi_pod else None,
+            scan_trips=scan_trips_for(cfg),
+        )
+        record["status"] = "ok"
+        record["compile_s"] = round(time.time() - t0, 1)
+        record["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        record["roofline"] = rf.summary()
+        if verbose:
+            tb = record["memory"]["temp_bytes"] or 0
+            print(
+                f"[ok]     {cfg.name} × {shape_name} × {mesh_name}  "
+                f"compile {record['compile_s']}s  temp/dev "
+                f"{tb/2**30:.2f} GiB  dominant={rf.dominant}  "
+                f"(C={rf.compute_s:.3f}s M={rf.memory_s:.3f}s X={rf.collective_s:.3f}s)"
+            )
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[ERROR]  {cfg.name} × {shape_name} × {mesh_name}: {record['error'][:200]}")
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        key = cfg.name.replace("/", "_")  # canonical id regardless of alias
+        path = os.path.join(OUT_DIR, f"{key}__{shape_name}__{mesh_name}.json")
+        slim = {k: v for k, v in record.items() if k != "traceback"}
+        with open(path, "w") as f:
+            json.dump(slim, f, indent=1, default=str)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--compressor", default="sbc")
+    ap.add_argument("--sparsity", type=float, default=0.001)
+    ap.add_argument("--opts", default="", help="comma list: expert_parallel,seq_every2")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    opts = frozenset(o for o in args.opts.split(",") if o)
+
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(
+                    run_pair(arch, shape, mp, compressor=args.compressor,
+                             sparsity=args.sparsity, opts=opts)
+                )
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum(r["status"] == "skip" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\n== dry-run: {ok} ok / {skip} skip / {err} error ==")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Single pod : (16, 16) axes ('data', 'model')          — 256 chips (v5e pod)
+Multi-pod  : (2, 16, 16) axes ('pod', 'data', 'model') — 512 chips
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    # pin Auto axis types: the framework relies on GSPMD sharding
+    # propagation (jax v0.9 flips the default to Explicit)
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh():
+    """A 1-device mesh for CPU tests of the distributed code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+
+
+def axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

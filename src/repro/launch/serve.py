@@ -1,0 +1,71 @@
+"""Serving driver: prefill a batch of prompts, decode new tokens.
+
+CPU-scale demonstration of the serving substrate (the decode shapes of the
+dry-run exercise the same ``serve_step`` at production scale).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
+      --batch 4 --prompt-len 64 --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.models.model import build_model
+from repro.serve import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced smoke variant)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    engine = ServeEngine(model)
+
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    batch = {
+        "tokens": jax.random.randint(
+            rng, (args.batch, args.prompt_len), 0, cfg.vocab_size
+        )
+    }
+    if cfg.family == "encdec":
+        if cfg.modality == "audio":
+            batch["enc_frames"] = 0.1 * jax.random.normal(
+                rng, (args.batch, args.prompt_len, cfg.d_model)
+            )
+        else:
+            batch["enc_tokens"] = batch["tokens"]
+    elif cfg.modality == "vision":
+        batch["prefix"] = 0.1 * jax.random.normal(
+            rng, (args.batch, cfg.n_prefix, cfg.d_model)
+        )
+
+    t0 = time.time()
+    out = engine.generate(
+        params, batch, max_new_tokens=args.new_tokens, temperature=args.temperature
+    )
+    dt = time.time() - t0
+    total = args.batch * args.new_tokens
+    print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s incl. compile)")
+    print("sample token ids:", out[0, :16].tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+"""Attention: MHA/GQA/MQA, causal / sliding-window / chunked-local / cross.
+
+Three entry points:
+  * ``attn_train``   — full-sequence training/prefill forward (optionally
+                       returning a decode cache), q-chunked flash-style scan
+                       so scores never materialize at (S, S).
+  * ``attn_decode``  — one-token step against a cache.
+  * ``init_cache``   — per-layer cache pytree (k, v, pos).
+
+GQA is computed in grouped form (no repeat of KV heads), so a 1-kv-head
+model (granite, gemma3) never materializes H-sized KV tensors.
+
+Attention kinds (cfg.layer_kinds):
+  attn         full causal
+  attn_window  sliding window of cfg.window
+  attn_local   sliding window of cfg.local_window (gemma3 local layers)
+  attn_chunk   chunked-local of cfg.chunk_attn (llama4): tokens attend only
+               within their chunk
+  cross        full bidirectional over encoder memory
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, rope
+
+NEG_INF = -1e30
+
+
+def window_for(kind: str, cfg) -> int:
+    if kind == "attn_window":
+        return cfg.window
+    if kind == "attn_local":
+        return cfg.local_window or cfg.window
+    return 0
+
+
+def _round128(n: int) -> int:
+    return ((n + 127) // 128) * 128
+
+
+def cache_len_for(kind: str, cfg, seq_len: int, margin: int = 8) -> int:
+    """Decode-cache depth for a layer of this kind.
+
+    Rounded up to a multiple of 128 so the cache sequence dim stays
+    shardable over the 16-way model axis (DESIGN.md §4).
+    """
+    if kind in ("attn_window", "attn_local"):
+        return min(window_for(kind, cfg), _round128(seq_len + margin))
+    if kind == "attn_chunk":
+        return min(cfg.chunk_attn, _round128(seq_len + margin))
+    return _round128(seq_len + margin)  # full / global
+
+
+def init_attention(rng, cfg, *, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    ks = jax.random.split(rng, 4)
+    bias = cfg.qkv_bias
+    return {
+        "wq": init_dense(ks[0], d, nq, bias=bias, dtype=cfg.dtype),
+        "wk": init_dense(ks[1], d, nkv, bias=bias, dtype=cfg.dtype),
+        "wv": init_dense(ks[2], d, nkv, bias=bias, dtype=cfg.dtype),
+        "wo": init_dense(ks[3], nq, d, dtype=cfg.dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n_heads: int, hd: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n_heads, hd))
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,Hkv,G,hd)  k: (B,Sk,Hkv,hd) → (B,Hkv,G,Sq,Sk) f32."""
+    return jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    )
+
+
+def _gqa_out(probs, v):
+    """probs: (B,Hkv,G,Sq,Sk)  v: (B,Sk,Hkv,hd) → (B,Sq,Hkv,G,hd)."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+
+
+def _masked_attention(q, k, v, mask, scale):
+    """Grouped attention core.  mask broadcastable to (B,1,1,Sq,Sk)."""
+    scores = _gqa_scores(q, k) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (e.g. cache slots empty) produce uniform probs over
+    # NEG_INF; zero them so they contribute nothing.
+    probs = jnp.where(jnp.any(mask, axis=-1, keepdims=True), probs, 0.0)
+    return _gqa_out(probs, v)
+
+
+def attn_train(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    kind: str,
+    *,
+    positions: Optional[jax.Array] = None,
+    kv_x: Optional[jax.Array] = None,
+    q_chunk: int = 0,
+    return_cache_seq: bool = False,
+):
+    """Full-sequence attention.  x: (B, S, d).
+
+    kv_x: encoder memory for cross-attention (no causal mask, no RoPE
+    relative semantics issues — positions of memory used directly).
+    Returns (out, (k, v)) — roped K/V returned when return_cache_seq so the
+    serving engine can build a decode cache from prefill.
+    """
+    B, S, _ = x.shape
+    hd, Hkv = cfg.head_dim, cfg.n_kv_heads
+    G = cfg.n_heads // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    cross = kind == "cross"
+    causal = kind not in ("cross", "attn_bidir")
+
+    if positions is None:
+        positions = jnp.arange(S)
+
+    q = _split_heads(dense(params["wq"], x), cfg.n_heads, hd)
+    src = kv_x if cross else x
+    Sk = src.shape[1]
+    if q_chunk == 0:
+        # bound the (B, H, q_chunk, Sk) f32 score tile; the chunk body is
+        # rematerialized (checkpointed) below so only ~2 tiles are ever
+        # live — without that remat the scan saves EVERY chunk's probs for
+        # backward, i.e. the full (B,H,S,Sk) matrix (§Perf iteration B6/B7)
+        q_chunk = max(128, min(1024, (1 << 22) // max(Sk, 1)))
+    k = _split_heads(dense(params["wk"], src), Hkv, hd)
+    v = _split_heads(dense(params["wv"], src), Hkv, hd)
+
+    if not cross:
+        kv_positions = positions if src is x else jnp.arange(Sk)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    q = q.reshape(B, S, Hkv, G, hd)
+
+    window = window_for(kind, cfg)
+    chunk = cfg.chunk_attn if kind == "attn_chunk" else 0
+
+    def mask_fn(qi: jax.Array, kj: jax.Array) -> jax.Array:
+        """qi: (Sq,) global query positions; kj: (Sk,) key positions."""
+        m = jnp.ones((qi.shape[0], kj.shape[0]), bool)
+        if causal:
+            m &= kj[None, :] <= qi[:, None]
+        if window:
+            m &= kj[None, :] > qi[:, None] - window
+        if chunk:
+            m &= (kj[None, :] // chunk) == (qi[:, None] // chunk)
+        m &= kj[None, :] >= 0
+        return m
+
+    if S <= q_chunk:
+        mask = mask_fn(positions, positions if not cross else jnp.arange(Sk))
+        out = _masked_attention(q, k, v, mask[None, None, None], scale)
+    else:
+        n_chunks = S // q_chunk
+        assert S % q_chunk == 0, f"seq {S} not divisible by q_chunk {q_chunk}"
+        qc = q.reshape(B, n_chunks, q_chunk, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+        kj = positions if not cross else jnp.arange(Sk)
+
+        @jax.checkpoint  # recompute scores/probs per chunk in backward
+        def chunk_attn(qch, i):
+            qi = positions[0] + i * q_chunk + jnp.arange(q_chunk)
+            mask = mask_fn(qi, kj)
+            return _masked_attention(qch, k, v, mask[None, None, None], scale)
+
+        def body(carry, args):
+            i, qch = args
+            return carry, chunk_attn(qch, i)
+
+        _, outs = jax.lax.scan(body, (), (jnp.arange(n_chunks), qc))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Hkv, G, hd)
+
+    out = out.reshape(B, S, cfg.n_heads * hd).astype(x.dtype)
+    out = dense(params["wo"], out)
+    return (out, (k, v)) if return_cache_seq else (out, None)
+
+
+# ------------------------------------------------------------------ decode
+
+
+def init_cache(cfg, kind: str, batch: int, seq_len: int, dtype) -> dict:
+    L = cache_len_for(kind, cfg, seq_len)
+    hd, Hkv = cfg.head_dim, cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((batch, L, Hkv, hd), dtype),
+        "v": jnp.zeros((batch, L, Hkv, hd), dtype),
+        "pos": jnp.full((L,), -1, jnp.int32),
+    }
+
+
+def cache_slot(kind: str, cfg, pos: jax.Array) -> jax.Array:
+    window = window_for(kind, cfg)
+    if window:
+        return pos % window
+    if kind == "attn_chunk":
+        return pos % cfg.chunk_attn
+    return pos
+
+
+def fill_cache_from_prefill(cache: dict, kind: str, cfg, k: jax.Array, v: jax.Array) -> dict:
+    """Scatter prefill K/V (already roped) into the rolling decode cache."""
+    S = k.shape[1]
+    pos = jnp.arange(S)
+    slots = cache_slot(kind, cfg, pos)
+    # later positions overwrite earlier ones in rolling buffers: scatter in
+    # increasing position order (jnp scatter applies updates in order).
+    new_k = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+    new_v = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+    new_pos = cache["pos"].at[slots].set(pos.astype(jnp.int32))
+    return {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def attn_decode(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    kind: str,
+    cache: dict,
+    pos: jax.Array,
+    *,
+    cross_memory: Optional[tuple[jax.Array, jax.Array]] = None,
+):
+    """One-token attention.  x: (B, 1, d); pos: scalar current position.
+
+    Returns (out (B,1,d), new_cache).  For kind == 'cross', ``cross_memory``
+    is the (k, v) of the encoder output and the cache is untouched.
+    """
+    B = x.shape[0]
+    hd, Hkv = cfg.head_dim, cfg.n_kv_heads
+    G = cfg.n_heads // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    q = _split_heads(dense(params["wq"], x), cfg.n_heads, hd)
+
+    if kind == "cross":
+        k, v = cross_memory
+        mask = jnp.ones((1, k.shape[1]), bool)
+        q = q.reshape(B, 1, Hkv, G, hd)
+        out = _masked_attention(q, k, v, mask[None, None, None], scale)
+        out = dense(params["wo"], out.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype))
+        return out, cache
+
+    q = rope(q, pos[None], cfg.rope_theta).reshape(B, 1, Hkv, G, hd)
+    k_new = rope(_split_heads(dense(params["wk"], x), Hkv, hd), pos[None], cfg.rope_theta)
+    v_new = _split_heads(dense(params["wv"], x), Hkv, hd)
+
+    slot = cache_slot(kind, cfg, pos)
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1),
+        "pos": jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos[None].astype(jnp.int32), slot, 0),
+    }
+
+    cpos = new_cache["pos"]
+    valid = (cpos >= 0) & (cpos <= pos)
+    window = window_for(kind, cfg)
+    if window:
+        valid &= cpos > pos - window
+    if kind == "attn_chunk":
+        valid &= cpos >= (pos // cfg.chunk_attn) * cfg.chunk_attn
+
+    out = _masked_attention(
+        q, new_cache["k"], new_cache["v"], valid[None, None, None, None, :], scale
+    )
+    out = dense(params["wo"], out.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype))
+    return out, new_cache

@@ -1,0 +1,101 @@
+"""CNN classifiers — the paper's LeNet5-Caffe (MNIST) and a ResNet-32
+CIFAR-style residual network (He et al. '16: 3 stages × 5 basic blocks,
+widths 16/32/64).
+
+BatchNorm uses batch statistics in both train and eval (no running-stat
+state) — adequate at reproduction scale and keeps everything functional;
+noted in DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def conv(p, x, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, p, (stride, stride), padding, dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def batchnorm(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+# ------------------------------------------------------------------- LeNet5
+
+
+def init_lenet5(rng, cfg) -> dict:
+    ks = jax.random.split(rng, 4)
+    return {
+        "c1": _conv_init(ks[0], 5, 5, cfg.img_channels, 20),
+        "c2": _conv_init(ks[1], 5, 5, 20, 50),
+        "f1": jax.random.normal(ks[2], ((cfg.img_size // 4) ** 2 * 50, 500), jnp.float32)
+        * math.sqrt(2.0 / ((cfg.img_size // 4) ** 2 * 50)),
+        "f1b": jnp.zeros((500,), jnp.float32),
+        "f2": jax.random.normal(ks[3], (500, cfg.n_classes), jnp.float32) * math.sqrt(2.0 / 500),
+        "f2b": jnp.zeros((cfg.n_classes,), jnp.float32),
+    }
+
+
+def lenet5_apply(params, images, cfg):
+    x = conv(params["c1"], images)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = conv(params["c2"], x)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1"] + params["f1b"])
+    return x @ params["f2"] + params["f2b"]
+
+
+# ------------------------------------------------------------------ ResNet32
+
+
+def init_resnet32(rng, cfg, blocks_per_stage: int = 5, widths=(16, 32, 64)) -> dict:
+    ks = iter(jax.random.split(rng, 3 * blocks_per_stage * 3 + 8))
+    p = {"stem": _conv_init(next(ks), 3, 3, cfg.img_channels, widths[0]), "stem_bn": _bn_init(widths[0])}
+    cin = widths[0]
+    for s, w in enumerate(widths):
+        for b in range(blocks_per_stage):
+            blk = {
+                "c1": _conv_init(next(ks), 3, 3, cin, w),
+                "bn1": _bn_init(w),
+                "c2": _conv_init(next(ks), 3, 3, w, w),
+                "bn2": _bn_init(w),
+            }
+            if cin != w:
+                blk["proj"] = _conv_init(next(ks), 1, 1, cin, w)
+            p[f"s{s}b{b}"] = blk
+            cin = w
+    p["head"] = jax.random.normal(next(ks), (widths[-1], cfg.n_classes), jnp.float32) * math.sqrt(
+        2.0 / widths[-1]
+    )
+    p["head_b"] = jnp.zeros((cfg.n_classes,), jnp.float32)
+    return p
+
+
+def resnet32_apply(params, images, cfg, blocks_per_stage: int = 5, widths=(16, 32, 64)):
+    x = jax.nn.relu(batchnorm(params["stem_bn"], conv(params["stem"], images)))
+    for s, w in enumerate(widths):
+        for b in range(blocks_per_stage):
+            blk = params[f"s{s}b{b}"]
+            stride = 2 if (s > 0 and b == 0) else 1
+            h = jax.nn.relu(batchnorm(blk["bn1"], conv(blk["c1"], x, stride)))
+            h = batchnorm(blk["bn2"], conv(blk["c2"], h))
+            sc = x if "proj" not in blk else conv(blk["proj"], x, stride)
+            x = jax.nn.relu(h + sc)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["head"] + params["head_b"]

@@ -1,0 +1,111 @@
+"""Activation-sharding hints (GSPMD ``with_sharding_constraint`` wrappers).
+
+The launch layer installs an ambient (mesh, batch_axes, seq_axis) context;
+model code calls :func:`act` on the residual stream between blocks.  With a
+seq_axis this is *sequence parallelism*: checkpointed activations shard over
+the model axis between layers (16× less live activation memory at 4k-32k
+sequence lengths), at the cost of an all-gather feeding each attention/ssm
+block — GSPMD inserts those automatically.
+
+On CPU tests no context is installed and every hint is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_CTX: dict[str, Any] = {"mesh": None, "batch": None, "seq": None, "expert": None,
+                        "seq_every": 1, "_block": 0, "lean_moe": False}
+
+
+def lean_moe() -> bool:
+    """§Perf: bf16 MoE combine + capacity factor 1.0 (set by launch opts)."""
+    return bool(_CTX["lean_moe"])
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, *, batch_axes=None, seq_axis: Optional[str] = "model",
+                        expert_axis: Optional[str] = None, seq_every: int = 1,
+                        lean_moe: bool = False):
+    """Install hints for the duration of a trace.
+
+    batch_axes  shards the leading batch dim of residual-stream activations
+    seq_axis    ('model') sequence parallelism between blocks
+    expert_axis ('data')  MoE expert parallelism: dispatch buffers align
+                their expert dim with the expert-sharded weights (§Perf)
+    seq_every   apply the sequence hint only on every k-th block (trades
+                all-gather count against live activation memory — §Perf)
+    """
+    old = dict(_CTX)
+    _CTX.update(mesh=mesh, batch=batch_axes, seq=seq_axis, expert=expert_axis,
+                seq_every=max(1, seq_every), _block=0, lean_moe=lean_moe)
+    try:
+        yield
+    finally:
+        _CTX.update(old)
+
+
+def _fits(mesh, axes, dim) -> bool:
+    if not axes:
+        return False
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= sizes.get(a, 1)
+    return dim % total == 0
+
+
+def act(x: jax.Array) -> jax.Array:
+    """Hint for a (B, S, d) residual-stream activation (between blocks)."""
+    mesh = _CTX["mesh"]
+    if mesh is None or x.ndim < 3:
+        return x
+    blk = _CTX["_block"]
+    _CTX["_block"] = blk + 1
+    if blk % _CTX["seq_every"] != 0:
+        return x
+    b_ax = _CTX["batch"] if _fits(mesh, _CTX["batch"], x.shape[0]) else None
+    s_ax = _CTX["seq"] if x.shape[1] > 1 and _fits(mesh, _CTX["seq"], x.shape[1]) else None
+    if b_ax is None and s_ax is None:
+        return x
+    spec = P(b_ax, s_ax, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def expert_mode(n_experts: int) -> str:
+    """'ep' when experts divide the expert axis (flat dispatch + expert
+    parallelism — llama4/jamba), 'group' otherwise (grouped per-row
+    dispatch — mixtral) or when no launch context is installed."""
+    mesh = _CTX["mesh"]
+    ax = _CTX["expert"]
+    if mesh is None or ax is None:
+        return "group"
+    return "ep" if _fits(mesh, ax, n_experts) else "group"
+
+
+def expert_flat(x: jax.Array) -> jax.Array:
+    """Hint for a flat-dispatch (E, C, d) buffer: experts over the expert
+    axis (weights stay local; dispatch reshard lowers as a2a)."""
+    mesh = _CTX["mesh"]
+    ax = _CTX["expert"]
+    if mesh is None or ax is None or not _fits(mesh, ax, x.shape[0]):
+        return x
+    spec = P(ax, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def expert_grouped(x: jax.Array) -> jax.Array:
+    """Hint for a grouped-dispatch buffer (B, E, C, d): the GROUP dim
+    shards over the batch axes — compute stays where the tokens are and
+    the data-replicated, model-sharded expert weights broadcast."""
+    mesh = _CTX["mesh"]
+    b_ax = _CTX["batch"]
+    if mesh is None or not _fits(mesh, b_ax, x.shape[0]):
+        return x
+    lead = b_ax if not isinstance(b_ax, tuple) or len(b_ax) > 1 else b_ax[0]
+    spec = P(lead, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,97 @@
+"""Shared building blocks (functional, no framework dependency).
+
+Params are nested dicts of jnp arrays.  Every ``init_*`` returns a dict,
+every ``*_apply`` is a pure function.  Compute-sensitive reductions (norms,
+softmax) run in f32 regardless of the param dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(rng, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.bfloat16,
+               scale: Optional[float] = None) -> dict:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_norm(d: int, kind: str = "rmsnorm", dtype=jnp.bfloat16) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p: dict, x: jax.Array, kind: str = "rmsnorm", eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_embed(rng, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    e = jax.random.normal(rng, (vocab, d), jnp.float32) * (1.0 / math.sqrt(d))
+    return {"embedding": e.astype(dtype)}
+
+
+def embed_lookup(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+# ----------------------------------------------------------------- rotary
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Rotary embedding.  x: (..., seq, heads, head_dim); positions: (seq,)
+    or broadcastable to x's seq dim."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLP
+
+
+def init_mlp(rng, d: int, ff: int, *, gated: bool = True, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(rng, 3)
+    p = {"up": init_dense(ks[0], d, ff, dtype=dtype), "down": init_dense(ks[1], ff, d, dtype=dtype)}
+    if gated:
+        p["gate"] = init_dense(ks[2], d, ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    h = dense(p["up"], x)
+    if "gate" in p:
+        h = jax.nn.silu(dense(p["gate"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return dense(p["down"], h)

@@ -1,0 +1,48 @@
+"""Losses.  ``chunked_softmax_xent`` never materializes (B, S, V) logits —
+essential for the 150k-262k vocab architectures at seq 4k-32k, where full
+logits would be terabytes (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy.  logits (..., V), labels (...) int."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_softmax_xent(
+    hidden: jax.Array,
+    embedding: jax.Array,
+    labels: jax.Array,
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy from final hidden states and (V, d) output embedding.
+
+    hidden: (B, S, d); labels: (B, S).  Scans over S in ``chunk``-sized
+    slabs with remat, so peak logit memory is (B, chunk, V).
+    """
+    B, S, d = hidden.shape
+    if S % chunk != 0:
+        chunk = S  # small sequences: single slab
+    n = S // chunk
+    h = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    y = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def slab(carry, xs):
+        hc, yc = xs
+        logits = hc.astype(jnp.float32) @ embedding.T.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(slab, jnp.zeros((), jnp.float32), (h, y))
+    return total / (B * S)

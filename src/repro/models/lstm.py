@@ -1,0 +1,65 @@
+"""Multi-layer LSTM language models — the paper's WordLSTM / CharLSTM
+(Zaremba et al. '14 "medium" style: embedding → n-layer LSTM → tied head).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_embed
+
+
+def init_lstm_cell(rng, d_in: int, d_hidden: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(rng)
+    s = 1.0 / math.sqrt(d_hidden)
+    return {
+        "wx": (jax.random.normal(k1, (d_in, 4 * d_hidden), jnp.float32) * s).astype(dtype),
+        "wh": (jax.random.normal(k2, (d_hidden, 4 * d_hidden), jnp.float32) * s).astype(dtype),
+        "b": jnp.zeros((4 * d_hidden,), dtype),
+    }
+
+
+def lstm_cell(p: dict, x: jax.Array, h: jax.Array, c: jax.Array):
+    gates = (x @ p["wx"] + h @ p["wh"] + p["b"]).astype(jnp.float32)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h.astype(x.dtype), c
+
+
+def init_lstm_lm(rng, cfg) -> dict:
+    ks = jax.random.split(rng, cfg.n_layers + 2)
+    d = cfg.lstm_hidden
+    p = {"embed": init_embed(ks[0], cfg.vocab_size, d, dtype=jnp.float32)}
+    for i in range(cfg.n_layers):
+        p[f"cell{i}"] = init_lstm_cell(ks[i + 1], d, d)
+    p["head"] = {
+        "w": (jax.random.normal(ks[-1], (d, cfg.vocab_size), jnp.float32) / math.sqrt(d))
+    }
+    return p
+
+
+def lstm_lm_apply(params: dict, tokens: jax.Array, cfg) -> jax.Array:
+    """tokens: (B, S) → logits (B, S, V)."""
+    B, S = tokens.shape
+    d = cfg.lstm_hidden
+    x = jnp.take(params["embed"]["embedding"], tokens, axis=0)  # (B,S,d)
+
+    def step(carry, xt):
+        hs, cs = carry
+        new_h, new_c = [], []
+        inp = xt
+        for i in range(cfg.n_layers):
+            h, c = lstm_cell(params[f"cell{i}"], inp, hs[i], cs[i])
+            new_h.append(h)
+            new_c.append(c)
+            inp = h
+        return (tuple(new_h), tuple(new_c)), inp
+
+    h0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(cfg.n_layers))
+    c0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(cfg.n_layers))
+    _, hs = jax.lax.scan(step, (h0, c0), x.transpose(1, 0, 2))
+    out = hs.transpose(1, 0, 2)  # (B,S,d)
+    return out @ params["head"]["w"]

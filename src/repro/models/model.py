@@ -1,0 +1,197 @@
+"""build_model(cfg) → Model: init/loss/prefill/decode + sharding specs.
+
+Sharding is path-rule based (Megatron-style TP over 'model', optional FSDP
+over 'data' for ≥20B configs).  Rules silently fall back to replication when
+a dimension doesn't divide the mesh axis (e.g. seamless' 256206 vocab), so
+every config lowers on every mesh.  Leaves smaller than 1 MiB replicate.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import cnn, lstm, transformer
+from repro.models.losses import chunked_softmax_xent, softmax_xent
+
+PyTree = Any
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[jax.Array], PyTree]
+    loss_fn: Callable[[PyTree, dict], jax.Array]  # batch → scalar loss
+    prefill: Optional[Callable]  # (params, batch) → (hidden, caches)
+    decode_step: Optional[Callable]  # (params, tokens, caches, pos) → (logits, caches)
+    init_caches: Optional[Callable]  # (params, batch, seq_len) → caches
+    param_specs: Callable[[PyTree, Any], PyTree]  # (params, mesh) → specs
+
+
+# -------------------------------------------------------------- spec rules
+# (regex over '/'-joined path, spec per dimension). '+data' marks the dim
+# that additionally shards over 'data' in FSDP mode.
+
+_RULES: list[tuple[str, tuple[Optional[str], ...], Optional[int]]] = [
+    # pattern, per-dim axes, fsdp_dim (index that gains 'data')
+    (r"embedding$", ("model", None), 1),
+    (r"(wq|wk|wv|wg|wr)/w$", (None, "model"), 0),
+    (r"(wq|wk|wv|wg|wr)/b$", ("model",), None),
+    (r"wo/w$", ("model", None), 1),
+    (r"(up|gate)/w$", (None, "model"), 0),
+    (r"down/w$", ("model", None), 1),
+    (r"moe/router$", (None, None), None),
+    (r"moe/(up|gate)$", (None, None, "model"), 1),
+    (r"moe/down$", (None, "model", None), 2),
+]
+
+# §Perf expert-parallel variant: experts shard over 'data' (weights never
+# all-gather; dispatch buffers follow via hints.expert) and the contraction
+# dims stay UNSHARDED over 'data' — kills the partial-sum all-reduce the
+# baseline fsdp rules induce.  Falls back to the baseline rule when E does
+# not divide the data axis (mixtral's 8 experts on a 16-way axis).
+_EP_RULES: list[tuple[str, tuple, Optional[int]]] = [
+    (r"moe/(up|gate)$", ("data", None, "model"), None),
+    (r"moe/down$", ("data", "model", None), None),
+    (r"in_proj/w$", (None, "model"), 0),
+    (r"conv_w$", (None, None, "model"), None),
+    (r"(conv_b|D)$", ("model",), None),
+    (r"x_proj/w$", ("model", None), None),
+    (r"dt_proj/w$", (None, "model"), None),
+    (r"dt_proj/b$", ("model",), None),
+    (r"A_log$", ("model", None), None),
+    (r"out_proj/w$", ("model", None), 1),
+    (r"(ck|cr)/w$", (None, "model"), 0),
+    (r"cv/w$", ("model", None), 1),
+    (r"(w0|ln_x|cmix_k|cmix_r|mix_w)$", ("model",), None),
+]
+
+_MIN_SHARD_BYTES = 1 << 20
+
+
+def _spec_for(path: str, leaf: jax.Array, mesh, fsdp: bool, scan_prefix: bool,
+              expert_parallel: bool = False) -> P:
+    if leaf.size * leaf.dtype.itemsize < _MIN_SHARD_BYTES:
+        return P()
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules = (_EP_RULES + _RULES) if expert_parallel else _RULES
+
+    for pat, axes, fsdp_dim in rules:
+        if re.search(pat, path):
+            # scanned stacks have a leading superblock dim → shift right
+            offset = 1 if scan_prefix else 0
+            ndim = leaf.ndim
+            dims: list[Any] = [None] * ndim
+            for i, ax in enumerate(axes):
+                j = i + offset
+                if ax is None or j >= ndim:
+                    continue
+                if leaf.shape[j] % axis_size.get(ax, 1) == 0:
+                    dims[j] = ax
+            # NOTE (§Perf A2 lesson): when the expert dim does not divide
+            # 'data' (mixtral: 8/16), EP keeps MoE weights data-replicated;
+            # that is only safe because hints.expert() then shards the
+            # dispatch CAPACITY dim over 'data' — without that constraint
+            # XLA replicates the expert compute (10× flops).
+            if expert_parallel and "data" in dims:
+                fsdp_dim = None  # expert dim already consumed the data axis
+            if fsdp and fsdp_dim is not None and "data" not in dims:
+                j = fsdp_dim + offset
+                if j < ndim and dims[j] is None:
+                    need = axis_size.get("data", 1)
+                    if leaf.shape[j] % need == 0:
+                        dims[j] = "data"
+            return P(*dims)
+    return P()
+
+
+def make_param_specs(params: PyTree, mesh, *, fsdp: bool = False,
+                     expert_parallel: bool = False) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(
+            k.key if hasattr(k, "key") else str(k) for k in path
+        )
+        scan_prefix = "stack/scan" in pstr or pstr.startswith("scan")
+        specs.append(_spec_for(pstr, leaf, mesh, fsdp, scan_prefix, expert_parallel))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------- builders
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "cnn":
+        return _build_cnn(cfg)
+    if cfg.family == "lstm":
+        return _build_lstm(cfg)
+    return _build_transformer(cfg)
+
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss coefficient
+
+
+def _build_transformer(cfg: ModelConfig) -> Model:
+    def init(rng):
+        return transformer.init_decoder_lm(rng, cfg)
+
+    def _kwargs(batch):
+        return {k: batch[k] for k in ("prefix", "enc_tokens", "enc_frames") if k in batch}
+
+    def loss_fn(params, batch):
+        hidden, aux = transformer.decoder_hidden(params, batch["tokens"], cfg, **_kwargs(batch))
+        emb = transformer.output_embedding(params, cfg)
+        loss = chunked_softmax_xent(hidden, emb, batch["labels"])
+        return loss + AUX_WEIGHT * aux
+
+    def prefill(params, batch):
+        return transformer.decoder_prefill(params, batch["tokens"], cfg, **_kwargs(batch))
+
+    def decode_step(params, tokens, caches, pos):
+        return transformer.decoder_decode_step(params, tokens, cfg, caches, pos)
+
+    def init_caches(params, batch, seq_len):
+        return transformer.init_decode_caches(params, cfg, batch, seq_len)
+
+    def param_specs(params, mesh):
+        return make_param_specs(
+            params, mesh, fsdp=cfg.fsdp,
+            expert_parallel=cfg.moe_dispatch in ("flat_ep", "grouped"),
+        )
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_caches, param_specs)
+
+
+def _build_lstm(cfg: ModelConfig) -> Model:
+    def init(rng):
+        return lstm.init_lstm_lm(rng, cfg)
+
+    def loss_fn(params, batch):
+        logits = lstm.lstm_lm_apply(params, batch["tokens"], cfg)
+        return softmax_xent(logits, batch["labels"])
+
+    def param_specs(params, mesh):
+        return jax.tree.map(lambda _: P(), params)
+
+    return Model(cfg, init, loss_fn, None, None, None, param_specs)
+
+
+def _build_cnn(cfg: ModelConfig) -> Model:
+    is_lenet = cfg.name == "lenet5"
+
+    def init(rng):
+        return cnn.init_lenet5(rng, cfg) if is_lenet else cnn.init_resnet32(rng, cfg)
+
+    def loss_fn(params, batch):
+        apply = cnn.lenet5_apply if is_lenet else cnn.resnet32_apply
+        logits = apply(params, batch["images"], cfg)
+        return softmax_xent(logits, batch["labels"])
+
+    def param_specs(params, mesh):
+        return jax.tree.map(lambda _: P(), params)
+
+    return Model(cfg, init, loss_fn, None, None, None, param_specs)

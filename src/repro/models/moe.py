@@ -1,0 +1,200 @@
+"""Mixture-of-Experts MLP: top-k router + capacity-based gather dispatch.
+
+Dispatch strategy (TPU/GSPMD-friendly, no ragged shapes):
+
+  1. router logits → top-k experts per token, renormalized gates
+  2. position-in-expert via cumulative one-hot counts; tokens beyond the
+     per-expert capacity ``C = ceil(T·k/E · capacity_factor)`` are DROPPED
+     (their gate contribution is zero — residual stream passes through)
+  3. a (E, C) token-index buffer gathers tokens into (E, C, d), experts run
+     as one batched einsum against stacked weights (E, d, ff), and results
+     scatter-add back weighted by gates.
+
+Expert weights are stacked on a leading E axis so expert parallelism is a
+PartitionSpec away (llama4: E sharded over 'data'; mixtral: ff sharded over
+('data','model')).  The aux load-balance loss is the standard
+Shazeer/Switch form the MoE sources use.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import hints
+
+
+def init_moe(rng, cfg) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * s).astype(jnp.float32),
+        "up": (jax.random.normal(ks[1], (E, d, ff), jnp.float32) * s).astype(cfg.dtype),
+        "down": (jax.random.normal(ks[2], (E, ff, d), jnp.float32) / math.sqrt(ff)).astype(cfg.dtype),
+    }
+    if cfg.gated_mlp:
+        p["gate"] = (jax.random.normal(ks[3], (E, d, ff), jnp.float32) * s).astype(cfg.dtype)
+    return p
+
+
+def moe_apply(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    *,
+    capacity_factor: float = 0.0,
+    full_capacity: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (out (B,S,d), aux_loss scalar).
+
+    Two GSPMD-verified dispatch strategies (§Perf iterations A2-A5/B10):
+
+    * **grouped** (GShard-style; default, and whenever E does not divide
+      the expert-parallel axis — mixtral's 8 experts on 16 chips): routing,
+      capacity ranking, gather and combine all happen PER BATCH ROW.  With
+      the batch dim sharded over 'data' every gather/scatter is device-
+      local; replicated/model-sharded weights broadcast.  Flat token-level
+      gathers instead force full rematerialization in SPMD (unaligned
+      indices): −32 GiB/layer and −69% collective time on mixtral.
+    * **flat + expert parallelism** (when E divides the axis — llama4 128,
+      jamba 16): one global (E, C, d) buffer whose expert dim shards over
+      'data'; the dispatch reshard lowers as an all-to-all and both expert
+      einsums stay local with fully-sharded weights.
+
+    ``full_capacity=True`` → dropless (decode path: prefill/decode
+    consistency requires no capacity drops).
+    """
+    mode = getattr(cfg, "moe_dispatch", "grouped")
+    if mode == "grouped":
+        return _moe_grouped(params, x, cfg, capacity_factor, full_capacity)
+    return _moe_flat(params, x, cfg, capacity_factor, full_capacity,
+                     use_hint=(mode == "flat_ep"))
+
+
+def _moe_grouped(params, x, cfg, capacity_factor, full_capacity):
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    capacity_factor = capacity_factor or cfg.moe_capacity_factor
+    if full_capacity:
+        C = S
+    else:
+        if hints.lean_moe():
+            capacity_factor = min(capacity_factor, 1.0)  # §Perf B8
+        C = max(1, int(math.ceil(S * k / E * capacity_factor)))
+    acc_dtype = x.dtype if hints.lean_moe() else jnp.float32  # §Perf B8
+
+    def route_group(xg: jax.Array):
+        """One group (S, d) → (gathered (E,C,d), buf, gate_buf, aux terms)."""
+        logits = (xg.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)  # (S, E)
+        gates, experts = jax.lax.top_k(probs, k)  # (S, k)
+        gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+        flat_e = experts.reshape(-1)  # (S·k,)
+        flat_g = gates.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(S), k)
+
+        one_hot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (S·k, E)
+        pos = jnp.sum((jnp.cumsum(one_hot, axis=0) - 1) * one_hot, axis=-1)
+        keep = pos < C
+
+        buf = jnp.full((E * C,), S, jnp.int32)  # sentinel S → pad row
+        addr = jnp.where(keep, flat_e * C + pos, E * C)
+        buf = buf.at[addr].set(flat_tok.astype(jnp.int32), mode="drop")
+        gate_buf = jnp.zeros((E * C,), acc_dtype).at[addr].set(
+            jnp.where(keep, flat_g, 0.0).astype(acc_dtype), mode="drop"
+        )
+        xpad = jnp.concatenate([xg, jnp.zeros((1, d), xg.dtype)], axis=0)
+        gathered = xpad[buf].reshape(E, C, d)
+        # aux load-balance terms (Switch/Mixtral form), summed over groups
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(experts[:, 0], E), axis=0)
+        return gathered, buf, gate_buf, me, ce
+
+    gathered, buf, gate_buf, me, ce = jax.vmap(route_group)(x)
+    aux = E * jnp.sum(jnp.mean(me, 0) * jnp.mean(ce, 0))
+
+    # dispatch buffers: groups over 'data' / experts over the expert axis
+    # (hints are no-ops outside a launch context)
+    gathered = hints.expert_grouped(gathered)
+
+    # ---- expert computation: batched einsum over stacked weights
+    h = jnp.einsum("becd,edf->becf", gathered, params["up"])
+    if "gate" in params:
+        g = jnp.einsum("becd,edf->becf", gathered, params["gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    expert_out = hints.expert_grouped(jnp.einsum("becf,efd->becd", h, params["down"]))
+
+    # ---- combine: per-group scatter-add back, weighted by gate
+    def combine_group(eo, buf_g, gate_g):
+        contrib = eo.reshape(E * C, d).astype(acc_dtype) * gate_g[:, None]
+        return jnp.zeros((S + 1, d), acc_dtype).at[buf_g].add(contrib)[:S]
+
+    out = jax.vmap(combine_group)(expert_out, buf, gate_buf)
+    out = hints.act(out)
+    return out.astype(x.dtype), aux
+
+
+def _moe_flat(params, x, cfg, capacity_factor, full_capacity, use_hint=True):
+    """Flat token-level dispatch, optionally with expert-parallel hints."""
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    capacity_factor = capacity_factor or cfg.moe_capacity_factor
+    if full_capacity:
+        C = T
+    else:
+        if hints.lean_moe():
+            capacity_factor = min(capacity_factor, 1.0)  # §Perf B8
+        C = max(1, int(math.ceil(T * k / E * capacity_factor)))
+    acc_dtype = x.dtype if hints.lean_moe() else jnp.float32  # §Perf B8
+
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, k)  # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(experts[:, 0], E), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    flat_e = experts.reshape(-1)
+    flat_g = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    one_hot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.sum((jnp.cumsum(one_hot, axis=0) - 1) * one_hot, axis=-1)
+    keep = pos < C
+
+    buf = jnp.full((E * C,), T, jnp.int32)
+    addr = jnp.where(keep, flat_e * C + pos, E * C)
+    buf = buf.at[addr].set(flat_tok.astype(jnp.int32), mode="drop")
+
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    gathered = xpad[buf].reshape(E, C, d)
+    if use_hint:
+        gathered = hints.expert_flat(gathered)
+
+    h = jnp.einsum("ecd,edf->ecf", gathered, params["up"])
+    if "gate" in params:
+        g = jnp.einsum("ecd,edf->ecf", gathered, params["gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["down"])
+    if use_hint:
+        expert_out = hints.expert_flat(expert_out)
+    expert_out = expert_out.reshape(E * C, d)
+
+    gate_buf = jnp.zeros((E * C,), acc_dtype).at[addr].set(
+        jnp.where(keep, flat_g, 0.0).astype(acc_dtype), mode="drop"
+    )
+    contrib = expert_out.astype(acc_dtype) * gate_buf[:, None]
+    out = jnp.zeros((T + 1, d), acc_dtype).at[buf].add(contrib)[:T]
+    out = hints.act(out.reshape(B, S, d))
+    return out.astype(x.dtype), aux

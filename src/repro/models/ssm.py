@@ -1,0 +1,292 @@
+"""State-space / linear-recurrence blocks: Mamba (jamba) and RWKV6 (finch).
+
+Both are implemented as exact sequential recurrences via ``lax.scan`` in f32
+state — the faithful baseline.  DESIGN.md §Perf notes the chunked-parallel
+(GLA-style) reformulation as the TPU optimization target; the recurrence
+here is the correctness oracle for it.
+
+Decode is a single recurrence step carrying the state pytree, which is what
+makes ``long_500k`` O(1) memory per token for these architectures.
+
+Fidelity notes (recorded in DESIGN.md):
+  * Mamba: ZOH discretization simplified to Ā=exp(ΔA), B̄=Δ·B (the common
+    "Euler-B" simplification used by most reimplementations).
+  * RWKV6: the five data-dependent token-shift LoRAs are reduced to static
+    per-channel mixes except the decay ``w`` which keeps its LoRA
+    (data-dependent decay is the defining Finch feature, arXiv:2404.05892).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense
+
+# ===================================================================== Mamba
+
+
+def mamba_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return di, dt_rank, cfg.ssm_state
+
+
+def init_mamba(rng, cfg) -> dict:
+    d = cfg.d_model
+    di, dt_rank, N = mamba_dims(cfg)
+    ks = jax.random.split(rng, 6)
+    dt = cfg.dtype
+    p = {
+        "in_proj": init_dense(ks[0], d, 2 * di, dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, 1, di), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": init_dense(ks[2], di, dt_rank + 2 * N, dtype=dt),
+        "dt_proj": init_dense(ks[3], dt_rank, di, bias=True, dtype=dt),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(ks[4], di, d, dtype=dt),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B,S,di), w: (width,1,di)."""
+    width = w.shape[0]
+    di = x.shape[-1]
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1,),
+        padding=[(width - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=di,
+    )
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_ssm_params(params, x_in, cfg):
+    """Shared projection math.  x_in: (..., di) post-conv activations.
+
+    Returns (dt, Bs, Cs, A): dt (..., di), Bs/Cs (..., N), A (di, N)."""
+    di, dt_rank, N = mamba_dims(cfg)
+    proj = dense(params["x_proj"], x_in).astype(jnp.float32)
+    dt_in, Bs, Cs = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt_in @ params["dt_proj"]["w"].astype(jnp.float32)
+        + params["dt_proj"]["b"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"])  # (di, N), negative
+    return dt, Bs, Cs, A
+
+
+def mamba_train(params, x, cfg):
+    """x: (B,S,d) → (out, final_state (B,di,N), conv_tail (B,w−1,di)).
+
+    ``conv_tail`` is the last w−1 PRE-conv activations — the exact conv
+    state a subsequent decode step needs (prefill → decode continuity)."""
+    B, S, d = x.shape
+    di, dt_rank, N = mamba_dims(cfg)
+
+    xz = dense(params["in_proj"], x)
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    w = cfg.ssm_conv
+    if S >= w - 1:
+        conv_tail = x_raw[:, S - (w - 1):, :].astype(jnp.float32)
+    else:
+        conv_tail = jnp.concatenate(
+            [jnp.zeros((B, w - 1 - S, di), jnp.float32), x_raw.astype(jnp.float32)],
+            axis=1,
+        )
+    x_in = jax.nn.silu(_causal_conv(x_raw, params["conv_w"], params["conv_b"]).astype(jnp.float32))
+
+    dt, Bs, Cs, A = mamba_ssm_params(params, x_in.astype(x.dtype), cfg)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (B,di), (B,di), (B,N), (B,N)
+        a = jnp.exp(dtt[..., None] * A[None])  # (B,di,N)
+        u = (dtt * xt)[..., None] * Bt[:, None, :]  # (B,di,N)
+        h = a * h + u
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    xs = (
+        x_in.transpose(1, 0, 2),
+        dt.transpose(1, 0, 2),
+        Bs.transpose(1, 0, 2),
+        Cs.transpose(1, 0, 2),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + x_in * params["D"][None, None, :]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(params["out_proj"], y.astype(x.dtype))
+    return out, h_final, conv_tail
+
+
+def mamba_init_state(cfg, batch: int) -> dict:
+    di, _, N = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.float32),
+    }
+
+
+def mamba_decode(params, x, cfg, state):
+    """x: (B,1,d) one token.  state: {'h': (B,di,N), 'conv': (B,w-1,di)}."""
+    B = x.shape[0]
+    xz = dense(params["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+
+    # causal conv over the carried window
+    win = jnp.concatenate([state["conv"], x_in.astype(jnp.float32)], axis=1)  # (B,w,di)
+    w = params["conv_w"].astype(jnp.float32)  # (w,1,di)
+    y = jnp.sum(win * w[:, 0, :][None], axis=1) + params["conv_b"].astype(jnp.float32)
+    x_c = jax.nn.silu(y)[:, None, :]  # (B,1,di)
+
+    dt, Bs, Cs, A = mamba_ssm_params(params, x_c.astype(x.dtype), cfg)
+    dtt, Bt, Ct = dt[:, 0], Bs[:, 0], Cs[:, 0]
+    a = jnp.exp(dtt[..., None] * A[None])
+    u = (dtt * x_c[:, 0].astype(jnp.float32))[..., None] * Bt[:, None, :]
+    h = a * state["h"] + u
+    yt = jnp.einsum("bdn,bn->bd", h, Ct) + x_c[:, 0].astype(jnp.float32) * params["D"][None]
+    yt = yt * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = dense(params["out_proj"], yt[:, None, :].astype(x.dtype))
+    new_state = {"h": h, "conv": win[:, 1:]}
+    return out, new_state
+
+
+# ===================================================================== RWKV6
+
+RWKV_HEAD = 64  # Finch head size
+
+
+def rwkv_dims(cfg):
+    H = cfg.d_model // RWKV_HEAD
+    return H, RWKV_HEAD
+
+
+def init_rwkv6(rng, cfg) -> dict:
+    d = cfg.d_model
+    H, hs = rwkv_dims(cfg)
+    ks = jax.random.split(rng, 10)
+    dt = cfg.dtype
+    lora = 64
+    return {
+        # time-mix
+        "mix": jnp.full((4, d), 0.5, jnp.float32),  # static shift mixes r,k,v,g
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "wr": init_dense(ks[0], d, d, dtype=dt),
+        "wk": init_dense(ks[1], d, d, dtype=dt),
+        "wv": init_dense(ks[2], d, d, dtype=dt),
+        "wg": init_dense(ks[3], d, d, dtype=dt),
+        "w0": jnp.linspace(-6.0, -1.0, d, dtype=jnp.float32),  # base decay logits
+        "w_lora_a": init_dense(ks[4], d, lora, dtype=dt),
+        "w_lora_b": init_dense(ks[5], lora, d, dtype=dt),
+        "bonus": jnp.zeros((H, hs), jnp.float32),  # u
+        "ln_x": jnp.ones((d,), jnp.float32),  # per-head group-norm scale
+        "wo": init_dense(ks[6], d, d, dtype=dt),
+        # channel-mix
+        "cmix_k": jnp.full((d,), 0.5, jnp.float32),
+        "cmix_r": jnp.full((d,), 0.5, jnp.float32),
+        "ck": init_dense(ks[7], d, cfg.d_ff, dtype=dt),
+        "cv": init_dense(ks[8], cfg.d_ff, d, dtype=dt),
+        "cr": init_dense(ks[9], d, d, dtype=dt),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """Token shift: x_{t-1} with ``prev`` as the t=0 predecessor.
+
+    x: (B,S,d); prev: (B,1,d)."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_projections(params, x, xprev, cfg):
+    """Compute r,k,v,g,w for a (B,S,d) slab given shifted predecessors."""
+    mix = params["mix"]
+
+    def lerp(i):
+        m = mix[i][None, None].astype(jnp.float32)
+        return (x.astype(jnp.float32) * m + xprev.astype(jnp.float32) * (1 - m)).astype(x.dtype)
+
+    r = dense(params["wr"], lerp(0))
+    k = dense(params["wk"], lerp(1))
+    v = dense(params["wv"], lerp(2))
+    g = dense(params["wg"], lerp(3))
+    mw = params["mix_w"][None, None].astype(jnp.float32)
+    xw = (x.astype(jnp.float32) * mw + xprev.astype(jnp.float32) * (1 - mw)).astype(x.dtype)
+    # data-dependent decay (the Finch contribution): w = exp(-exp(w0 + lora))
+    lora = dense(params["w_lora_b"], jnp.tanh(dense(params["w_lora_a"], xw).astype(jnp.float32)).astype(x.dtype))
+    wlog = params["w0"][None, None] + lora.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog))  # (B,S,d) in (0,1)
+    return r, k, v, g, w
+
+
+def _heads(x, H, hs):
+    return x.reshape(x.shape[:-1] + (H, hs))
+
+
+def rwkv6_time_mix(params, x, cfg, state_s, prev_tok):
+    """x: (B,S,d).  state_s: (B,H,hs,hs) wkv state; prev_tok: (B,1,d).
+
+    Returns (out, new_state_s, new_prev_tok)."""
+    B, S, d = x.shape
+    H, hs = rwkv_dims(cfg)
+    xprev = _shift(x, prev_tok)
+    r, k, v, g, w = _rwkv_projections(params, x, xprev, cfg)
+    rh = _heads(r.astype(jnp.float32), H, hs)
+    kh = _heads(k.astype(jnp.float32), H, hs)
+    vh = _heads(v.astype(jnp.float32), H, hs)
+    wh = _heads(w, H, hs)
+    u = params["bonus"][None]  # (1,H,hs)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,hs) each
+        # o_j = Σ_i r_i s_ij + (Σ_i r_i u_i k_i) v_j
+        o = jnp.einsum("bhi,bhij->bhj", rt, s) + jnp.einsum(
+            "bhi,bhi->bh", rt, u * kt
+        )[..., None] * vt
+        s = wt[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, o
+
+    xs = (
+        rh.transpose(1, 0, 2, 3),
+        kh.transpose(1, 0, 2, 3),
+        vh.transpose(1, 0, 2, 3),
+        wh.transpose(1, 0, 2, 3),
+    )
+    s_final, os = jax.lax.scan(step, state_s, xs)
+    o = os.transpose(1, 0, 2, 3).reshape(B, S, d)  # (B,S,d) f32
+
+    # per-head group norm, then gate
+    oh = o.reshape(B, S, H, hs)
+    oh = oh * jax.lax.rsqrt(jnp.mean(jnp.square(oh), axis=-1, keepdims=True) + 1e-6)
+    o = oh.reshape(B, S, d) * params["ln_x"][None, None]
+    o = o * jax.nn.silu(g.astype(jnp.float32))
+    out = dense(params["wo"], o.astype(x.dtype))
+    return out, s_final, x[:, -1:, :]
+
+
+def rwkv6_channel_mix(params, x, cfg, prev_tok):
+    """RWKV ffn with token shift.  Returns (out, new_prev_tok)."""
+    xprev = _shift(x, prev_tok)
+    mk = params["cmix_k"][None, None].astype(jnp.float32)
+    mr = params["cmix_r"][None, None].astype(jnp.float32)
+    xk = (x.astype(jnp.float32) * mk + xprev.astype(jnp.float32) * (1 - mk)).astype(x.dtype)
+    xr = (x.astype(jnp.float32) * mr + xprev.astype(jnp.float32) * (1 - mr)).astype(x.dtype)
+    k = dense(params["ck"], xk).astype(jnp.float32)
+    k = jnp.square(jax.nn.relu(k)).astype(x.dtype)
+    r = jax.nn.sigmoid(dense(params["cr"], xr).astype(jnp.float32))
+    out = r * dense(params["cv"], k).astype(jnp.float32)
+    return out.astype(x.dtype), x[:, -1:, :]
+
+
+def rwkv6_init_state(cfg, batch: int) -> dict:
+    H, hs = rwkv_dims(cfg)
+    return {
+        "s": jnp.zeros((batch, H, hs, hs), jnp.float32),
+        "tm_prev": jnp.zeros((batch, 1, cfg.d_model), cfg.dtype),
+        "cm_prev": jnp.zeros((batch, 1, cfg.d_model), cfg.dtype),
+    }

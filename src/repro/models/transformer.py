@@ -1,0 +1,419 @@
+"""Decoder / encoder-decoder assembly for every assigned architecture.
+
+Layer stacks compile as a ``lax.scan`` over *superblocks*: one superblock is
+the smallest repeating pattern of the architecture (jamba: 7 mamba + 1 attn
+with MoE every 2nd → period 8; gemma3: 5 local + 1 global → period 6;
+homogeneous archs → period 1).  Remainder layers (26 = 4·6 + 2 for gemma3)
+are unrolled.  Compile time therefore scales with the period, not n_layers
+(DESIGN.md §7).
+
+Block kinds come from ``cfg.layer_kinds``:
+  attn / attn_window / attn_local / attn_chunk → attention block + MLP/MoE
+  mamba → Mamba block (no separate MLP)
+  rwkv6 → RWKV time-mix + channel-mix pair
+
+Three execution modes share the block code: train (full seq, no caches),
+prefill (full seq, returns caches), decode (1 token, carries caches).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import hints
+from repro.models import moe as moe_lib
+from repro.models import ssm
+from repro.models.layers import dense, embed_lookup, init_embed, init_mlp, init_norm, mlp_apply, norm_apply
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------ blocks
+
+
+def init_block(rng, cfg, kind: str, use_moe: bool, *, cross: bool = False) -> dict:
+    ks = jax.random.split(rng, 5)
+    p: dict = {"norm1": init_norm(cfg.d_model, cfg.norm, cfg.dtype)}
+    if kind == "mamba":
+        p["inner"] = ssm.init_mamba(ks[0], cfg)
+        if cfg.ssm_ffn:  # jamba: mamba mixer + FFN/MoE (arXiv:2403.19887)
+            p["norm2"] = init_norm(cfg.d_model, cfg.norm, cfg.dtype)
+            if use_moe:
+                p["moe"] = moe_lib.init_moe(ks[2], cfg)
+            else:
+                p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                                    gated=cfg.gated_mlp, dtype=cfg.dtype)
+        return p  # pure-mamba archs: no separate MLP
+    if kind == "rwkv6":
+        p["inner"] = ssm.init_rwkv6(ks[0], cfg)
+        p["norm2"] = init_norm(cfg.d_model, cfg.norm, cfg.dtype)
+        return p  # channel-mix lives inside the rwkv params
+    p["inner"] = attn.init_attention(ks[0], cfg)
+    if cross:
+        p["norm_x"] = init_norm(cfg.d_model, cfg.norm, cfg.dtype)
+        p["cross"] = attn.init_attention(ks[1], cfg, cross=True)
+    p["norm2"] = init_norm(cfg.d_model, cfg.norm, cfg.dtype)
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp, dtype=cfg.dtype)
+    return p
+
+
+def _block_train(params, x, cfg, kind, use_moe, positions, enc_out=None, want_cache=False):
+    """Returns (x, aux, cache_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = norm_apply(params["norm1"], x, cfg.norm)
+    if kind == "mamba":
+        y, h_final, conv_tail = ssm.mamba_train(params["inner"], h, cfg)
+        x = x + y
+        if "norm2" in params:  # jamba FFN/MoE
+            h2 = norm_apply(params["norm2"], x, cfg.norm)
+            if use_moe:
+                y2, aux = moe_lib.moe_apply(params["moe"], h2, cfg)
+            else:
+                y2 = mlp_apply(params["mlp"], h2)
+            x = x + y2
+        if want_cache:
+            # exact decode continuity: carried SSM state + true conv window
+            cache = {"h": h_final, "conv": conv_tail}
+        return x, aux, cache
+    if kind == "rwkv6":
+        B = x.shape[0]
+        st = ssm.rwkv6_init_state(cfg, B)
+        y, s_final, tm_prev = ssm.rwkv6_time_mix(params["inner"], h, cfg, st["s"], st["tm_prev"])
+        x = x + y
+        h2 = norm_apply(params["norm2"], x, cfg.norm)
+        y2, cm_prev = ssm.rwkv6_channel_mix(params["inner"], h2, cfg, st["cm_prev"])
+        x = x + y2
+        if want_cache:
+            cache = {"s": s_final, "tm_prev": tm_prev, "cm_prev": cm_prev}
+        return x, aux, cache
+
+    # attention block
+    y, kv = attn.attn_train(
+        params["inner"], h, cfg, kind, positions=positions, return_cache_seq=want_cache
+    )
+    x = x + y
+    if "cross" in params:
+        hx = norm_apply(params["norm_x"], x, cfg.norm)
+        yx, cross_kv = attn.attn_train(
+            params["cross"], hx, cfg, "cross", kv_x=enc_out, return_cache_seq=want_cache
+        )
+        x = x + yx
+    h2 = norm_apply(params["norm2"], x, cfg.norm)
+    if use_moe:
+        y2, aux = moe_lib.moe_apply(params["moe"], h2, cfg)
+    else:
+        y2 = mlp_apply(params["mlp"], h2)
+    x = x + y2
+    if want_cache:
+        S = x.shape[1]
+        c = attn.init_cache(cfg, kind, x.shape[0], S, cfg.dtype)
+        cache = attn.fill_cache_from_prefill(c, kind, cfg, kv[0], kv[1])
+        if "cross" in params:
+            cache["cross_k"], cache["cross_v"] = cross_kv
+    return x, aux, cache
+
+
+def _block_decode(params, x, cfg, kind, use_moe, cache, pos):
+    """One-token step.  Returns (x, new_cache)."""
+    h = norm_apply(params["norm1"], x, cfg.norm)
+    if kind == "mamba":
+        y, new_state = ssm.mamba_decode(params["inner"], h, cfg, cache)
+        x = x + y
+        if "norm2" in params:  # jamba FFN/MoE
+            h2 = norm_apply(params["norm2"], x, cfg.norm)
+            if use_moe:
+                y2, _ = moe_lib.moe_apply(params["moe"], h2, cfg, full_capacity=True)
+            else:
+                y2 = mlp_apply(params["mlp"], h2)
+            x = x + y2
+        return x, new_state
+    if kind == "rwkv6":
+        y, s_final, tm_prev = ssm.rwkv6_time_mix(
+            params["inner"], h, cfg, cache["s"], cache["tm_prev"]
+        )
+        x = x + y
+        h2 = norm_apply(params["norm2"], x, cfg.norm)
+        y2, cm_prev = ssm.rwkv6_channel_mix(params["inner"], h2, cfg, cache["cm_prev"])
+        x = x + y2
+        return x, {"s": s_final, "tm_prev": tm_prev, "cm_prev": cm_prev}
+
+    attn_cache = {k: cache[k] for k in ("k", "v", "pos")}
+    y, new_attn_cache = attn.attn_decode(params["inner"], h, cfg, kind, attn_cache, pos)
+    x = x + y
+    new_cache = dict(new_attn_cache)
+    if "cross" in params:
+        hx = norm_apply(params["norm_x"], x, cfg.norm)
+        yx, _ = attn.attn_decode(
+            params["cross"], hx, cfg, "cross", None, pos,
+            cross_memory=(cache["cross_k"], cache["cross_v"]),
+        )
+        x = x + yx
+        new_cache["cross_k"], new_cache["cross_v"] = cache["cross_k"], cache["cross_v"]
+    h2 = norm_apply(params["norm2"], x, cfg.norm)
+    if use_moe:
+        y2, _ = moe_lib.moe_apply(params["moe"], h2, cfg, full_capacity=True)
+    else:
+        y2 = mlp_apply(params["mlp"], h2)
+    return x + y2, new_cache
+
+
+# ------------------------------------------------------- stack organization
+
+
+def stack_pattern(cfg) -> tuple[int, int, int]:
+    """(period, n_scan_superblocks, n_remainder_layers)."""
+    def lcm(a, b):
+        return a * b // math.gcd(a, b)
+
+    period = 1
+    if cfg.ssm_kind and cfg.attn_every > 1:
+        period = lcm(period, cfg.attn_every)
+    if cfg.local_global_ratio:
+        period = lcm(period, cfg.local_global_ratio + 1)
+    if cfg.global_every:
+        period = lcm(period, cfg.global_every)
+    if cfg.moe_experts:
+        period = lcm(period, cfg.moe_every)
+    if not cfg.scan_layers:
+        return cfg.n_layers, 1 if cfg.n_layers else 0, cfg.n_layers % max(cfg.n_layers, 1)
+    n_scan = cfg.n_layers // period
+    rem = cfg.n_layers - n_scan * period
+    return period, n_scan, rem
+
+
+def layer_desc(cfg, i: int) -> tuple[str, bool]:
+    return cfg.layer_kinds[i], cfg.layer_moe[i]
+
+
+def init_stack(rng, cfg, *, cross: bool = False) -> dict:
+    """Stacked superblock params (+ remainder).  Structure:
+    {'scan': {bj: stacked-over-superblocks}, 'rem': {bj: params}}"""
+    period, n_scan, rem = stack_pattern(cfg)
+    ks = jax.random.split(rng, max(n_scan, 1) * period + rem + 1)
+    ki = iter(ks)
+
+    def superblock(base_layer: int) -> dict:
+        return {
+            f"b{j}": init_block(next(ki), cfg, *layer_desc(cfg, base_layer + j), cross=cross)
+            for j in range(period)
+        }
+
+    out: dict = {}
+    if n_scan:
+        blocks = [superblock(sb * period) for sb in range(n_scan)]
+        out["scan"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    if rem:
+        out["rem"] = {
+            f"b{j}": init_block(next(ki), cfg, *layer_desc(cfg, n_scan * period + j), cross=cross)
+            for j in range(rem)
+        }
+    return out
+
+
+def _apply_stack_train(stack, x, cfg, positions, enc_out=None, want_cache=False, cross=False):
+    """Run all layers.  Returns (x, aux_total, caches)."""
+    period, n_scan, rem = stack_pattern(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: dict = {}
+
+    def block_fn(kind: str, use_moe: bool):
+        def fn(p, x, positions, enc_out):
+            x, a, c = _block_train(p, x, cfg, kind, use_moe, positions, enc_out,
+                                   want_cache=want_cache)
+            # sequence-parallel checkpoint boundary (no-op without a mesh ctx)
+            return hints.act(x), a, c
+        return jax.checkpoint(fn) if cfg.remat else fn
+
+    def superblock_body(carry, sb_params):
+        x, aux = carry
+        cs = {}
+        for j in range(period):
+            kind, use_moe = layer_desc(cfg, j)  # pattern is period-invariant
+            x, a, c = block_fn(kind, use_moe)(sb_params[f"b{j}"], x, positions, enc_out)
+            aux = aux + a
+            if want_cache:
+                cs[f"b{j}"] = c
+        return (x, aux), cs
+
+    if n_scan:
+        (x, aux_total), scan_caches = jax.lax.scan(superblock_body, (x, aux_total), stack["scan"])
+        if want_cache:
+            caches["scan"] = scan_caches
+    if rem:
+        rem_caches = {}
+        for j in range(rem):
+            kind, use_moe = layer_desc(cfg, n_scan * period + j)
+            x, a, c = block_fn(kind, use_moe)(
+                stack["rem"][f"b{j}"], x, positions, enc_out,
+            )
+            aux_total = aux_total + a
+            if want_cache:
+                rem_caches[f"b{j}"] = c
+        if want_cache:
+            caches["rem"] = rem_caches
+    return x, aux_total, caches
+
+
+def _apply_stack_decode(stack, x, cfg, caches, pos):
+    period, n_scan, rem = stack_pattern(cfg)
+
+    def superblock_body(x, args):
+        sb_params, sb_caches = args
+        new_cs = {}
+        for j in range(period):
+            kind, use_moe = layer_desc(cfg, j)
+            x, nc = _block_decode(sb_params[f"b{j}"], x, cfg, kind, use_moe, sb_caches[f"b{j}"], pos)
+            new_cs[f"b{j}"] = nc
+        return x, new_cs
+
+    new_caches: dict = {}
+    if n_scan:
+        x, new_caches["scan"] = jax.lax.scan(superblock_body, x, (stack["scan"], caches["scan"]))
+    if rem:
+        new_caches["rem"] = {}
+        for j in range(rem):
+            kind, use_moe = layer_desc(cfg, n_scan * period + j)
+            x, nc = _block_decode(
+                stack["rem"][f"b{j}"], x, cfg, kind, use_moe, caches["rem"][f"b{j}"], pos
+            )
+            new_caches["rem"][f"b{j}"] = nc
+    return x, new_caches
+
+
+# ------------------------------------------------------------ full models
+
+
+def init_decoder_lm(rng, cfg) -> dict:
+    ks = jax.random.split(rng, 4)
+    p = {
+        "embed": init_embed(ks[0], cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "stack": init_stack(ks[1], cfg),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = init_embed(ks[2], cfg.vocab_size, cfg.d_model, cfg.dtype)
+    if cfg.family == "encdec":
+        import dataclasses
+
+        enc_cfg = dataclasses.replace(
+            cfg, n_layers=cfg.enc_layers, ssm_kind="", moe_experts=0,
+            local_global_ratio=0, global_every=0, window=0,
+        )
+        p["encoder"] = {
+            "stack": init_stack(ks[3], enc_cfg),
+            "final_norm": init_norm(cfg.d_model, cfg.norm, cfg.dtype),
+        }
+        p["stack"] = init_stack(ks[1], cfg, cross=True)
+    return p
+
+
+def _embed_inputs(params, tokens, cfg, prefix=None):
+    x = embed_lookup(params["embed"], tokens) * math.sqrt(cfg.d_model)
+    x = x.astype(cfg.dtype)
+    if prefix is not None:
+        # modality stub: precomputed frame/patch embeddings occupy the first
+        # n_prefix positions (early fusion)
+        npre = prefix.shape[-2]
+        x = jnp.concatenate([prefix.astype(cfg.dtype), x[..., npre:, :]], axis=-2)
+    return x
+
+
+def _enc_cfg(cfg):
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg, n_layers=cfg.enc_layers, ssm_kind="", moe_experts=0, family="decoder",
+        local_window=0, local_global_ratio=0, global_every=0, window=0,
+        bidirectional=True, attn_every=1,
+    )
+
+
+def _encode(params, enc_inp, cfg):
+    """Encoder forward.  ``enc_inp`` is either int token ids (B, S) or — for
+    the audio modality stub — precomputed frame embeddings (B, S, d)."""
+    enc_cfg = _enc_cfg(cfg)
+    if jnp.issubdtype(enc_inp.dtype, jnp.floating):
+        x = enc_inp.astype(cfg.dtype)
+    else:
+        x = _embed_inputs(params, enc_inp, cfg)
+    positions = jnp.arange(x.shape[-2])
+    x, _, _ = _apply_stack_train(params["encoder"]["stack"], x, enc_cfg, positions)
+    return norm_apply(params["encoder"]["final_norm"], x, cfg.norm)
+
+
+def decoder_hidden(params, tokens, cfg, *, prefix=None, enc_tokens=None, enc_frames=None):
+    """(B,S) tokens → final hidden (B,S,d).  Runs encoder first for encdec."""
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, enc_frames if enc_frames is not None else enc_tokens, cfg)
+    x = _embed_inputs(params, tokens, cfg, prefix)
+    positions = jnp.arange(tokens.shape[-1])
+    x, aux, _ = _apply_stack_train(params["stack"], x, cfg, positions, enc_out=enc_out)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def output_embedding(params, cfg) -> jax.Array:
+    head = params["head"] if "head" in params else params["embed"]
+    return head["embedding"]
+
+
+def decoder_prefill(params, tokens, cfg, *, prefix=None, enc_tokens=None, enc_frames=None):
+    """Full-sequence forward that also returns decode caches."""
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, enc_frames if enc_frames is not None else enc_tokens, cfg)
+    x = _embed_inputs(params, tokens, cfg, prefix)
+    positions = jnp.arange(tokens.shape[-1])
+    x, aux, caches = _apply_stack_train(
+        params["stack"], x, cfg, positions, enc_out=enc_out, want_cache=True
+    )
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return x, caches
+
+
+def decoder_decode_step(params, tokens, cfg, caches, pos):
+    """tokens: (B,1) new token ids; pos: scalar position.  → (logits, caches)."""
+    x = _embed_inputs(params, tokens, cfg)
+    x, new_caches = _apply_stack_decode(params["stack"], x, cfg, caches, pos)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = x.astype(jnp.float32) @ output_embedding(params, cfg).T.astype(jnp.float32)
+    return logits, new_caches
+
+
+def init_decode_caches(params, cfg, batch: int, seq_len: int):
+    """Zero caches shaped for a ``seq_len``-deep decode session."""
+    period, n_scan, rem = stack_pattern(cfg)
+
+    def one(kind: str) -> dict:
+        if kind == "mamba":
+            return ssm.mamba_init_state(cfg, batch)
+        if kind == "rwkv6":
+            return ssm.rwkv6_init_state(cfg, batch)
+        c = attn.init_cache(cfg, kind, batch, seq_len, cfg.dtype)
+        if cfg.family == "encdec":
+            hd, Hkv = cfg.head_dim, cfg.n_kv_heads
+            c["cross_k"] = jnp.zeros((batch, seq_len, Hkv, hd), cfg.dtype)
+            c["cross_v"] = jnp.zeros((batch, seq_len, Hkv, hd), cfg.dtype)
+        return c
+
+    caches: dict = {}
+    if n_scan:
+        per = {f"b{j}": one(layer_desc(cfg, j)[0]) for j in range(period)}
+        caches["scan"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_scan,) + x.shape), per
+        )
+    if rem:
+        caches["rem"] = {
+            f"b{j}": one(layer_desc(cfg, n_scan * period + j)[0]) for j in range(rem)
+        }
+    return caches

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import Optimizer, adam, get_optimizer, momentum, sgd
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "get_optimizer"]

@@ -1,0 +1,104 @@
+"""Native JAX optimizers for the DSGD trainer.
+
+These are the CLIENT-side optimizers of paper Alg. 1 (``SGD_n(W_i, D_i)``):
+each client runs n local iterations with its own optimizer state.  The
+server-side update is always ``W ← W + mean_i(ΔW*_i)`` (Alg. 1 l.19) and
+needs no state.
+
+Momentum masking (paper supplement A / DGC): after a communication round the
+trainer calls :meth:`Optimizer.mask` with a 0/1 pytree marking coordinates
+that were just transmitted; momentum there is zeroed so stale momentum does
+not carry the optimization in an outdated direction.
+
+``state_dtype`` lets big-model configs keep momentum in bf16 (recorded in
+DESIGN.md §8 — at 400B params per-client f32 momentum does not fit HBM).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[PyTree], PyTree]
+    # (state, grads, params, lr, step) -> (new_params, new_state)
+    apply: Callable[..., tuple[PyTree, PyTree]]
+    # (state, transmitted_mask) -> state with momentum zeroed where mask==1
+    mask: Callable[[PyTree, PyTree], PyTree]
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def apply(state, grads, params, lr, step):
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer("sgd", init, apply, lambda s, m: s)
+
+
+def momentum(beta: float = 0.9, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+
+    def apply(state, grads, params, lr, step):
+        new_m = jax.tree.map(
+            lambda m, g: (beta * m.astype(jnp.float32) + g.astype(jnp.float32)).astype(state_dtype),
+            state, grads,
+        )
+        new_p = jax.tree.map(lambda p, m: p - (lr * m.astype(jnp.float32)).astype(p.dtype), params, new_m)
+        return new_p, new_m
+
+    def mask(state, transmitted):
+        # DGC momentum masking: zero momentum at transmitted coordinates
+        return jax.tree.map(
+            lambda m, t: m * (1.0 - t.astype(jnp.float32)).astype(m.dtype), state, transmitted
+        )
+
+    return Optimizer("momentum", init, apply, mask)
+
+
+class AdamState(NamedTuple):
+    m: PyTree
+    v: PyTree
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamState(jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def apply(state, grads, params, lr, step):
+        t = step.astype(jnp.float32) + 1.0
+        new_m = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(state_dtype),
+            state.m, grads,
+        )
+        new_v = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(state_dtype),
+            state.v, grads,
+        )
+        def upd(p, m, v):
+            mh = m.astype(jnp.float32) / (1 - b1**t)
+            vh = v.astype(jnp.float32) / (1 - b2**t)
+            return p - (lr * mh / (jnp.sqrt(vh) + eps)).astype(p.dtype)
+
+        return jax.tree.map(upd, params, new_m, new_v), AdamState(new_m, new_v)
+
+    def mask(state, transmitted):
+        zero = lambda m, t: m * (1.0 - t.astype(jnp.float32)).astype(m.dtype)
+        return AdamState(jax.tree.map(zero, state.m, transmitted), state.v)
+
+    return Optimizer("adam", init, apply, mask)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam}[name](**kw)

@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill → iterative one-token decode.
+
+``serve_step`` (one new token against a ``seq_len``-deep cache) is the unit
+the decode_32k / long_500k dry-run shapes lower; ``generate`` drives it for
+the runnable examples.  Sampling is greedy or temperature-categorical.
+
+The engine is stateless — caches are explicit pytrees — so the same step
+function serves any number of concurrent batched sessions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+PyTree = Any
+
+
+@dataclasses.dataclass(eq=False)
+class ServeEngine:
+    model: Model
+
+    def prefill(self, params: PyTree, batch: dict) -> tuple[jax.Array, PyTree]:
+        """Run the full-sequence forward; returns (next_token_logits, caches)."""
+        hidden, caches = self.model.prefill(params, batch)
+        from repro.models import transformer
+
+        emb = transformer.output_embedding(params, self.model.cfg)
+        logits = hidden[:, -1:, :].astype(jnp.float32) @ emb.T.astype(jnp.float32)
+        return logits, caches
+
+    @partial(jax.jit, static_argnames=("self",))
+    def serve_step(
+        self, params: PyTree, tokens: jax.Array, caches: PyTree, pos: jax.Array
+    ) -> tuple[jax.Array, PyTree]:
+        """ONE new token for the whole batch.  tokens: (B, 1) int32."""
+        return self.model.decode_step(params, tokens, caches, pos)
+
+    def generate(
+        self,
+        params: PyTree,
+        batch: dict,
+        *,
+        max_new_tokens: int,
+        rng: Optional[jax.Array] = None,
+        temperature: float = 0.0,
+    ) -> jax.Array:
+        """Prefill then decode ``max_new_tokens``; returns (B, max_new_tokens)."""
+        logits, caches = self.prefill(params, batch)
+        prompt_len = batch["tokens"].shape[1]
+        B = batch["tokens"].shape[0]
+
+        def pick(lg, r):
+            if temperature <= 0.0:
+                return jnp.argmax(lg[:, -1, :], axis=-1)
+            return jax.random.categorical(r, lg[:, -1, :] / temperature)
+
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        toks = []
+        tok = pick(logits, rng)
+        toks.append(tok)
+        for i in range(1, max_new_tokens):
+            rng, r = jax.random.split(rng)
+            logits, caches = self.serve_step(
+                params, tok[:, None].astype(jnp.int32), caches, jnp.asarray(prompt_len + i - 1)
+            )
+            tok = pick(logits, r)
+            toks.append(tok)
+        return jnp.stack(toks, axis=1)

@@ -1,0 +1,3 @@
+from repro.train.trainer import DSGDTrainer, TrainState
+
+__all__ = ["DSGDTrainer", "TrainState"]

@@ -1,0 +1,22 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only launch/dryrun.py fakes 512 devices (in its own process).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_decoder(**kw) -> ModelConfig:
+    base = dict(
+        name="tiny", family="decoder", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=97, dtype=jnp.float32,
+    )
+    base.update(kw)
+    return ModelConfig(**base)

@@ -1,0 +1,78 @@
+"""Golomb position coding (paper Alg. 3/4, Eq. 5) — exact round-trip +
+property tests + agreement between the analytic bit model and the real
+bitstream."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import golomb
+
+
+def test_bstar_paper_value():
+    """Paper quotes b̄_pos = 8.38 at p = 0.01, but its OWN Eq. 5 formula
+    b* = 1 + floor(log2(log(φ−1)/log(1−p))) gives b* = 6 → 8.11 bits
+    (8.38 corresponds to b* = 7, which Eq. 5 rates strictly worse).  We
+    follow the formula: the measured bitstream (test below) confirms 8.11
+    bits/position — slightly BETTER than the paper's quoted figure.
+    Recorded in EXPERIMENTS.md §Repro."""
+    assert golomb.golomb_bstar(0.01) == 6
+    assert abs(golomb.expected_position_bits(0.01) - 8.108) < 0.01
+    # the paper's ×1.9-vs-16-bit claim still holds (ours is ×1.97)
+    assert 16.0 / golomb.expected_position_bits(0.01) > 1.9
+
+
+@pytest.mark.parametrize("p", [0.3, 0.1, 0.01, 0.001, 0.0001])
+def test_roundtrip_random(p):
+    rng = np.random.default_rng(42)
+    n = 50_000
+    mask = rng.random(n) < p
+    idx = np.nonzero(mask)[0]
+    if idx.size == 0:
+        idx = np.array([7])
+    bits = golomb.encode_positions(idx, p)
+    back = golomb.decode_positions(bits, p)
+    np.testing.assert_array_equal(idx, back)
+
+
+@pytest.mark.parametrize("p", [0.1, 0.01, 0.001])
+def test_bits_match_analytic_model(p):
+    """Real bitstream length ≈ Eq. 5 expectation (±5%) on geometric data."""
+    rng = np.random.default_rng(0)
+    n = 2_000_000
+    idx = np.nonzero(rng.random(n) < p)[0]
+    bits = golomb.encode_positions(idx, p)
+    per_pos = bits.size / idx.size
+    expected = golomb.expected_position_bits(p)
+    assert abs(per_pos - expected) / expected < 0.05
+
+
+@given(
+    idx=st.lists(st.integers(0, 10_000), min_size=1, max_size=200, unique=True),
+    p=st.sampled_from([0.2, 0.05, 0.01, 0.002]),
+)
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_property(idx, p):
+    idx = np.sort(np.asarray(idx))
+    bits = golomb.encode_positions(idx, p)
+    back = golomb.decode_positions(bits, p)
+    np.testing.assert_array_equal(idx, back)
+
+
+def test_message_roundtrip():
+    idx = np.array([3, 77, 2048, 9999])
+    msg = golomb.encode_sbc_message(idx, mean=0.125, p=0.01)
+    dense = golomb.decode_sbc_message(msg, n=10_000)
+    assert dense[idx].tolist() == [0.125] * 4
+    assert np.count_nonzero(dense) == 4
+    assert golomb.message_bits(msg) == msg["nbits_positions"] + 32
+
+
+def test_worst_case_gap():
+    # single survivor at the last position of a large tensor
+    idx = np.array([999_999])
+    bits = golomb.encode_positions(idx, 0.001)
+    back = golomb.decode_positions(bits, 0.001)
+    np.testing.assert_array_equal(idx, back)

@@ -1,0 +1,99 @@
+"""Sharding-hint no-op behavior + parameter-spec rule tests (single device)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, get_config
+from repro.launch.mesh import make_production_mesh  # noqa: F401 (not built here)
+from repro.models import hints
+from repro.models.model import build_model, make_param_specs
+
+
+class TestHintsNoop:
+    def test_act_identity_without_context(self):
+        x = jnp.ones((2, 8, 4))
+        np.testing.assert_array_equal(np.asarray(hints.act(x)), np.asarray(x))
+
+    def test_expert_hints_identity_without_context(self):
+        x = jnp.ones((4, 2, 3, 5))
+        np.testing.assert_array_equal(np.asarray(hints.expert_grouped(x)), np.asarray(x))
+        np.testing.assert_array_equal(np.asarray(hints.expert_flat(x)), np.asarray(x))
+
+    def test_lean_moe_default_off(self):
+        assert hints.lean_moe() is False
+
+
+class _FakeMesh:
+    """Shape-only stand-in so spec rules can be tested on one device."""
+
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        import numpy as _np
+
+        self.devices = _np.empty(tuple(sizes.values()), dtype=object)
+
+
+class TestParamSpecRules:
+    def _specs(self, cfg, **kw):
+        model = build_model(cfg)
+        a = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        mesh = _FakeMesh({"data": 16, "model": 16})
+        return a, make_param_specs(a, mesh, **kw)
+
+    def test_attention_tp_rules(self):
+        cfg = ModelConfig(name="t", family="decoder", n_layers=2, d_model=1024,
+                          n_heads=8, n_kv_heads=8, d_ff=4096, vocab_size=32000,
+                          dtype=jnp.bfloat16)
+        a, specs = self._specs(cfg)
+        got = {}
+        for path, s in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]:
+            got["/".join(k.key for k in path)] = s
+        # scanned stack: leading superblock dim must stay unsharded
+        wq = [v for k, v in got.items() if k.endswith("inner/wq/w")][0]
+        assert wq == P(None, None, "model")
+        wo = [v for k, v in got.items() if k.endswith("inner/wo/w")][0]
+        assert wo == P(None, "model", None)
+        emb = got["embed/embedding"]
+        assert emb == P("model", None)
+
+    def test_small_leaves_replicate(self):
+        cfg = ModelConfig(name="t", family="decoder", n_layers=2, d_model=64,
+                          n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=96,
+                          dtype=jnp.float32)
+        a, specs = self._specs(cfg)
+        for path, s in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]:
+            assert s == P(), path  # every tiny leaf replicated
+
+    def test_expert_parallel_rules(self):
+        cfg = get_config("llama4-maverick-400b-a17b")
+        model = build_model(cfg)
+        a = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        mesh = _FakeMesh({"data": 16, "model": 16})
+        specs = make_param_specs(a, mesh, fsdp=True, expert_parallel=True)
+        got = {}
+        for path, s in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]:
+            got["/".join(k.key for k in path)] = s
+        up = [v for k, v in got.items() if k.endswith("moe/up")][0]
+        # (scan, E, d, ff): experts over data, ff over model, d UNSHARDED
+        assert up == P(None, "data", None, "model")
+        down = [v for k, v in got.items() if k.endswith("moe/down")][0]
+        assert down == P(None, "data", "model", None)
+
+    def test_mixtral_grouped_rules_keep_weights_data_free(self):
+        cfg = get_config("mixtral-8x7b")
+        model = build_model(cfg)
+        a = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        mesh = _FakeMesh({"data": 16, "model": 16})
+        specs = make_param_specs(a, mesh, fsdp=True, expert_parallel=True)
+        for path, s in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]:
+            key = "/".join(k.key for k in path)
+            if "moe/" in key and key.split("/")[-1] in ("up", "gate", "down"):
+                flat_axes = [a for e in s for a in
+                             (e if isinstance(e, tuple) else (e,)) if a]
+                assert "data" not in flat_axes, (key, s)

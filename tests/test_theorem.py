@@ -1,0 +1,80 @@
+"""Theorem II.1 — residual accumulation minimizes the accumulated error.
+
+If transferred updates live in a subspace S, then
+ΔW*_T = Proj_S(R_{T−1} + ΔW_T) uniquely minimizes
+err(ΔW*_T) = ‖Σ_t (ΔW_t − ΔW*_t)‖ over S.  We verify numerically for
+fixed-support subspaces (a true linear subspace — the paper's setting)
+AND for the top-k union-of-subspaces used in practice.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import residual
+
+
+def _history(seed, T, n):
+    return jax.random.normal(jax.random.PRNGKey(seed), (T, n))
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_projection_minimizes_fixed_support(seed):
+    T, n = 4, 32
+    deltas = _history(seed, T, n)
+    support = jax.random.bernoulli(jax.random.PRNGKey(seed + 1), 0.3, (n,))
+
+    # run T−1 rounds of residual-accumulated projection
+    res = jnp.zeros(n)
+    sent = []
+    for t in range(T - 1):
+        star = residual.project_fixed_support(res + deltas[t], support)
+        res = res + deltas[t] - star
+        sent.append(star)
+
+    # round T: the theorem's choice
+    v = residual.project_fixed_support(res + deltas[T - 1], support)
+    err_v = residual.accumulated_error(deltas, jnp.stack(sent + [v]))
+
+    # any other element of S does no better
+    rng = np.random.default_rng(seed)
+    for _ in range(20):
+        other = residual.project_fixed_support(
+            jnp.asarray(rng.normal(size=n), jnp.float32), support
+        )
+        err_o = residual.accumulated_error(deltas, jnp.stack(sent + [other]))
+        assert float(err_v) <= float(err_o) + 1e-4
+
+    # and the error of the theorem's choice equals the off-support mass
+    expect = jnp.linalg.norm(jnp.where(support, 0.0, jnp.sum(deltas, 0)))
+    np.testing.assert_allclose(float(err_v), float(expect), rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 60))
+@settings(max_examples=20, deadline=None)
+def test_topk_projection_is_best_k_sparse(seed):
+    """top-k-with-values is the metric projection onto k-sparse vectors."""
+    n, k = 64, 8
+    v = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    proj = residual.topk_projection(v, k)
+    # any other k-sparse candidate is farther from v
+    rng = np.random.default_rng(seed)
+    for _ in range(20):
+        idx = rng.choice(n, k, replace=False)
+        cand = jnp.zeros(n).at[idx].set(v[idx])  # best values on that support
+        assert float(jnp.linalg.norm(v - proj)) <= float(jnp.linalg.norm(v - cand)) + 1e-5
+
+
+def test_residual_identity_eq2():
+    """R_τ = Σ(ΔW_t − ΔW*_t) — the unrolled form of Eq. 2."""
+    T, n = 6, 40
+    deltas = _history(0, T, n)
+    stars = _history(1, T, n) * 0.1
+    res = jnp.zeros(n)
+    for t in range(T):
+        res = residual.residual_update(res, deltas[t], stars[t])
+    np.testing.assert_allclose(
+        np.asarray(res), np.asarray(jnp.sum(deltas - stars, 0)), rtol=1e-4, atol=1e-5
+    )
