@@ -7,6 +7,9 @@
   fig3_sparsity_grid  Fig. 3/9  temporal × gradient sparsity trade-off
   fig5_convergence    Fig. 5-8  loss vs iterations and vs transferred bits
   roofline_table      §Roofline aggregation of dry-run records (if present)
+  wire_throughput     §Wire    pack/unpack microbench (DESIGN.md §5)
+
+``--smoke`` runs only the fast, training-free benchmarks (what CI runs).
 """
 from __future__ import annotations
 
@@ -14,16 +17,21 @@ import argparse
 import sys
 import time
 
+SMOKE = ("table1_rates", "wire_throughput")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale runs (slow)")
     ap.add_argument("--only", default=None, help="run a single benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast training-free subset (CI)")
     args = ap.parse_args(argv)
     quick = not args.full
 
     from benchmarks import (fig3_sparsity_grid, fig4_stagewise, fig5_convergence,
-                            roofline_table, table1_rates, table2_accuracy)
+                            roofline_table, table1_rates, table2_accuracy,
+                            wire_throughput)
 
     suite = {
         "table1_rates": table1_rates.run,
@@ -32,8 +40,9 @@ def main(argv=None):
         "fig4_stagewise": fig4_stagewise.run,
         "fig5_convergence": fig5_convergence.run,
         "roofline_table": roofline_table.run,
+        "wire_throughput": wire_throughput.run,
     }
-    names = [args.only] if args.only else list(suite)
+    names = [args.only] if args.only else list(SMOKE) if args.smoke else list(suite)
     failures = []
     for name in names:
         print(f"\n===== {name} =====")

@@ -1,0 +1,79 @@
+"""Wire-format microbench: pack/unpack throughput per codec.
+
+Measures the host-side serialization cost of `repro.core.wire` — bytes
+produced, pack and unpack wall time, and effective MB/s over the dense
+equivalent — for each registered codec on a mid-sized update.  This is the
+number that bounds how fast a parameter server can turn around client
+uploads (DESIGN.md §5).
+
+  PYTHONPATH=src python -m benchmarks.wire_throughput          # quick
+  PYTHONPATH=src python -m benchmarks.run --only wire_throughput
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import api
+from repro.core.wire import wire_for
+
+CODECS = ["sbc", "topk", "signsgd", "terngrad", "qsgd", "none"]
+
+
+def bench_one(name: str, n: int, p: float, repeats: int) -> dict:
+    delta = {"w": jax.random.normal(jax.random.PRNGKey(0), (n,)) * 0.01}
+    comp = api.get_compressor(name)
+    state = comp.init_state(delta)
+    ctree, dense, _ = comp.compress(delta, state, p)
+    ctree = jax.tree.map(np.asarray, ctree)  # host-side, like a real server
+    wire = wire_for(comp.resolve(delta), delta, p)
+
+    blob = wire.pack(ctree)  # warm-up + correctness anchor
+    rec = wire.unpack(blob)
+    np.testing.assert_allclose(rec["w"], np.asarray(dense["w"], np.float32))
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        wire.pack(ctree)
+    t_pack = (time.perf_counter() - t0) / repeats
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        wire.unpack(blob)
+    t_unpack = (time.perf_counter() - t0) / repeats
+
+    dense_mb = 4.0 * n / 1e6
+    return {
+        "codec": name,
+        "n": n,
+        "p": p,
+        "packed_bytes": len(blob),
+        "measured_bits": wire.measured_bits(ctree),
+        "compression": 32.0 * n / max(wire.measured_bits(ctree), 1),
+        "pack_ms": 1e3 * t_pack,
+        "unpack_ms": 1e3 * t_unpack,
+        "pack_dense_mb_s": dense_mb / t_pack,
+        "unpack_dense_mb_s": dense_mb / t_unpack,
+    }
+
+
+def run(quick: bool = True) -> None:
+    n = 1_000_000 if quick else 25_000_000
+    repeats = 5 if quick else 20
+    rows = [bench_one(name, n, 0.01, repeats) for name in CODECS]
+    print(f"{'codec':10s} {'packed':>10s} {'ratio':>8s} {'pack ms':>9s} "
+          f"{'unpack ms':>9s} {'pack MB/s':>10s} {'unpack MB/s':>11s}")
+    for r in rows:
+        print(f"{r['codec']:10s} {r['packed_bytes']:>9d}B "
+              f"×{r['compression']:>6.0f} {r['pack_ms']:>8.2f} "
+              f"{r['unpack_ms']:>8.2f} {r['pack_dense_mb_s']:>9.0f} "
+              f"{r['unpack_dense_mb_s']:>10.0f}")
+    path = save_json("wire_throughput", rows)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,13 +1,18 @@
 """Federated-learning wire simulation — the paper's privacy-preserving
-setting (§I): clients exchange ONLY Golomb-coded SBC messages (real
-bitstreams, not in-process arrays) with a parameter server.
+setting (§I): clients exchange ONLY packed byte buffers (real bitstreams,
+not in-process arrays) with a parameter server.
 
-Each round:
-  1. every client trains locally (communication delay n) and SBC-compresses
-     its weight-update,
-  2. the update crosses the "network" as packed bytes
-     (positions: Golomb bitstream, Alg. 3; one float32 mean per tensor),
-  3. the server decodes (Alg. 4), averages, and broadcasts new weights.
+Built on the staged codec pipeline (DESIGN.md):
+
+  * a per-leaf :class:`CompressionPolicy` sends biases/norm parameters
+    dense (they are tiny and sparsification hurts them most — the DGC
+    recipe) and SBC-compresses every matrix at 1%,
+  * each client's update is serialized by :class:`repro.core.wire.Wire`
+    into ONE framed buffer — Golomb position bitstreams (Alg. 3), one
+    float32 mean per sparse tensor, raw float32 for the dense leaves,
+  * the server holds the same Wire contract (model config + policy are
+    shared), unpacks every client's buffer (Alg. 4), averages, and
+    broadcasts new weights.
 
 Run:  PYTHONPATH=src python examples/federated_wire.py
 """
@@ -16,8 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.api import get_compressor
-from repro.core.golomb import decode_sbc_message, encode_sbc_message, message_bits
+from repro.core.api import CompressionPolicy, PolicyRule
+from repro.core.codec import make_codec
+from repro.core.wire import wire_for
 from repro.data import make_lm_task
 from repro.models.model import build_model
 from repro.optim import get_optimizer
@@ -30,13 +36,22 @@ cfg = ModelConfig(name="fed-tiny", family="decoder", n_layers=2, d_model=128,
 model = build_model(cfg)
 task = make_lm_task(vocab=256, batch=8, seq_len=64, temperature=0.5)
 opt = get_optimizer("momentum")
-sbc = get_compressor("sbc")
+
+policy = CompressionPolicy(
+    default=make_codec("sbc"),
+    rules=(PolicyRule(r"(^|/)(bias|scale|norm[^/]*)(/|$)", codec="dense32"),),
+    name="sbc+dense-small",
+)
 
 rng = jax.random.PRNGKey(0)
 server_w = model.init(rng)
-client_state = [sbc.init_state(server_w) for _ in range(N_CLIENTS)]
+resolved = policy.resolve(server_w)
+wire = wire_for(resolved, server_w, SPARSITY)  # both ends share this contract
+client_state = [resolved.init_state(server_w) for _ in range(N_CLIENTS)]
 client_opt = [opt.init(server_w) for _ in range(N_CLIENTS)]
+rates = resolved.rates(SPARSITY)
 
+print(resolved.describe())
 step_fn = jax.jit(jax.value_and_grad(model.loss_fn))
 
 n_params = sum(x.size for x in jax.tree.leaves(server_w))
@@ -53,28 +68,26 @@ for r in range(ROUNDS):
         losses.append(float(loss))
         delta = jax.tree.map(lambda a, b: a - b, w, server_w)
 
-        # --- compress + encode to actual bytes
-        ctree, dense, client_state[c] = sbc.compress(delta, client_state[c], SPARSITY)
-        msgs = {}
-        for path, leaf in jax.tree_util.tree_flatten_with_path(
-                ctree, is_leaf=lambda x: hasattr(x, "idx"))[0]:
-            key = "/".join(k.key for k in path)
-            msgs[key] = encode_sbc_message(np.asarray(leaf.idx),
-                                           float(leaf.mean), SPARSITY)
-        uploads.append(msgs)
-        total_wire_bytes += sum(message_bits(m) for m in msgs.values()) / 8
+        # --- compress (per-leaf policy + error feedback) + pack to bytes
+        ctree, dense, client_state[c] = resolved.compress(
+            delta, client_state[c], rates
+        )
+        blob = wire.pack(ctree)
+        uploads.append(blob)
+        total_wire_bytes += len(blob)
 
-    # --- server: decode every client's bitstream, average, apply
-    flat_w, treedef = jax.tree_util.tree_flatten_with_path(server_w)
-    new_leaves = []
-    for path, leaf in flat_w:
-        key = "/".join(k.key for k in path)
-        acc = np.zeros(leaf.size, np.float32)
-        for c in range(N_CLIENTS):
-            acc += decode_sbc_message(uploads[c][key], leaf.size)
-        new_leaves.append(leaf + (acc / N_CLIENTS).reshape(leaf.shape))
-    server_w = jax.tree_util.tree_unflatten(
-        jax.tree.structure(server_w), new_leaves)
+    # --- server: decode every client's byte buffer, average, apply
+    mean_update = None
+    for blob in uploads:
+        update = wire.unpack(blob)  # dense numpy pytree
+        if mean_update is None:
+            mean_update = update
+        else:
+            mean_update = jax.tree.map(np.add, mean_update, update)
+    server_w = jax.tree.map(
+        lambda p, u: p + jnp.asarray(u / N_CLIENTS, p.dtype),
+        server_w, mean_update,
+    )
 
     dense_bytes = 4 * n_params * N_CLIENTS * (r + 1) * DELAY
     print(f"round {r+1:2d}: mean client loss {np.mean(losses):.4f}  "
@@ -83,4 +96,4 @@ for r in range(ROUNDS):
           f"×{dense_bytes/max(total_wire_bytes,1):.0f})")
 
 print("\nfederated run complete — every byte that crossed the 'network' was a "
-      "real Golomb bitstream")
+      "real packed SBW1 buffer")

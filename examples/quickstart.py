@@ -1,50 +1,74 @@
-"""Quickstart: compress one weight-update with SBC, end to end.
+"""Quickstart: the staged codec pipeline, end to end on one weight update.
 
-Walks the full paper pipeline on a single tensor:
-  residual add → top-p% sparsify → binarize to ±μ (Alg. 2)
-  → Golomb-encode positions (Alg. 3) → wire message → decode (Alg. 4).
+Walks the full paper pipeline through the PR's API layers:
+  codec stages (Selector → Quantizer → Encoder)  …  Alg. 2
+  per-leaf policy (dense biases, SBC matrices)   …  DGC-style rules
+  error feedback through compress()              …  Alg. 1 l.10-12 / Eq. 2
+  packed wire bytes + measured-vs-analytic bits  …  Alg. 3/4, Eq. 1/5
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import golomb
-from repro.core.api import get_compressor
-from repro.core.golomb import decode_sbc_message, encode_sbc_message, message_bits
+from repro.core.api import CompressionPolicy, PolicyRule, get_compressor
+from repro.core.codec import make_codec
+from repro.core.wire import wire_for
 
-# a fake "weight update" for one layer
+# a fake "weight update": one matrix + one bias vector
 rng = jax.random.PRNGKey(0)
-delta = {"layer0/w": jax.random.normal(rng, (512, 256)) * 0.01}
+delta = {
+    "layer0/w": jax.random.normal(rng, (512, 256)) * 0.01,
+    "layer0/bias": jax.random.normal(jax.random.PRNGKey(1), (256,)) * 0.01,
+}
 
-# --- compress with error feedback (paper Alg. 1 lines 10-12)
-sbc = get_compressor("sbc")
-state = sbc.init_state(delta)
+# --- 1. a codec is a composition of three registered stages
+sbc = get_compressor("sbc")  # shim → topk_signed|binarize|golomb
+print(f"SBC as a staged codec: {sbc.codec.spec}")
+
+# --- 2. per-leaf policy: the bias rides dense, the matrix gets SBC
+policy = CompressionPolicy(
+    default=make_codec("sbc"),
+    rules=(PolicyRule(r"bias$", codec="dense32"),),
+    name="quickstart",
+)
+resolved = policy.resolve(delta)
+print(resolved.describe())
+
+# --- 3. compress with error feedback (paper Alg. 1 lines 10-12)
 p = 0.01
-compressed, dense_update, state = sbc.compress(delta, state, p)
+state = resolved.init_state(delta)
+rates = resolved.rates(p)
+compressed, dense_update, state = resolved.compress(delta, state, rates)
 
 leaf = compressed["layer0/w"]
 n = delta["layer0/w"].size
-print(f"tensor: {n} params, sparsity p={p}")
+print(f"\nmatrix: {n} params, sparsity p={p}")
 print(f"survivors: {leaf.idx.shape[0]} positions, ONE value μ={float(leaf.mean):.6f}")
 print(f"analytic wire size: {float(leaf.nbits):.0f} bits "
       f"(dense 32-bit: {32*n} bits → ×{32*n/float(leaf.nbits):.0f})")
 
-# --- exact wire format: Golomb-coded positions + one 32-bit mean (Alg. 3)
-msg = encode_sbc_message(np.asarray(leaf.idx), float(leaf.mean), p)
-print(f"exact bitstream: {message_bits(msg)} bits "
-      f"({msg['nbits_positions']/leaf.idx.shape[0]:.2f} bits/position; "
-      f"Eq. 5 predicts {golomb.expected_position_bits(p):.2f})")
+# --- 4. exact wire format: pack the whole update to one byte buffer
+wire = wire_for(resolved, delta, p)
+blob = wire.pack(compressed)
+measured = wire.measured_bits(compressed)
+print(f"\npacked buffer: {len(blob)} bytes; measured payload {measured} bits "
+      f"vs analytic {float(resolved.total_bits(compressed)):.0f} bits "
+      f"(Eq. 5 predicts {golomb.expected_position_bits(p):.2f} bits/position)")
 
-# --- receiver side (Alg. 4)
-reconstructed = decode_sbc_message(msg, n).reshape(512, 256)
-np.testing.assert_allclose(reconstructed, np.asarray(dense_update["layer0/w"]),
-                           rtol=1e-6)
+# --- 5. receiver side (Alg. 4): bytes → identical dense update
+reconstructed = wire.unpack(blob)
+for key in delta:
+    np.testing.assert_allclose(reconstructed[key],
+                               np.asarray(dense_update[key]), rtol=1e-6)
 print("receiver reconstruction matches ✓")
 
-# --- the residual keeps what was not sent (Eq. 2)
+# --- 6. the residual keeps what was not sent (Eq. 2); the dense bias
+#        leaf transmits in full, so its residual is exactly zero
 res = state.residual["layer0/w"]
 np.testing.assert_allclose(np.asarray(res + dense_update["layer0/w"]),
                            np.asarray(delta["layer0/w"]), rtol=1e-5)
+np.testing.assert_allclose(np.asarray(state.residual["layer0/bias"]), 0.0,
+                           atol=1e-7)
 print("residual + transmitted == full update ✓ (no information lost)")

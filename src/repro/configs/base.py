@@ -238,7 +238,7 @@ def input_specs(cfg: ModelConfig, shape_name: str, n_clients: int = 1) -> dict:
         return {"images": f(img, jnp.float32)}
 
     def _extras(lead: tuple[int, ...]) -> dict:
-        """Modality-stub / encoder inputs (the DESIGN.md §5 carve-out)."""
+        """Modality-stub / encoder inputs (the DESIGN.md §7 carve-out)."""
         ex = {}
         if cfg.family == "encdec":
             if cfg.modality == "audio":

@@ -1,35 +1,59 @@
-"""Sparse Binary Compression core: the paper's contribution as a library."""
-from repro.core import baselines as _baselines  # registers baseline compressors
+"""Sparse Binary Compression core: the paper's contribution as a library.
+
+Layered as a staged codec pipeline (DESIGN.md):
+stages → codec → policy → api (compressor shim), with golomb + wire as the
+byte-level serialization and bits as the analytic Eq. 1 accounting.
+"""
+from repro.core import baselines as _baselines  # registers baseline codecs
 from repro.core import sbc as _sbc  # registers "sbc"
 from repro.core.api import (
+    CompressionPolicy,
     Compressor,
     CompressorState,
     LeafCompressed,
+    PolicyRule,
     available,
     get_compressor,
 )
+from repro.core.baselines import dgc_policy
+from repro.core.codec import Codec, available_codecs, make_codec
 from repro.core.golomb import (
     decode_positions,
     encode_positions,
     expected_position_bits,
     golomb_bstar,
 )
+from repro.core.policy import ResolvedPolicy
 from repro.core.sbc import SBC_PRESETS
 from repro.core.sparsity import SparsitySchedule, adaptive_total_budget, constant, preset
+from repro.core.stages import available_stages, decompress_leaf
+from repro.core.wire import LeafSpec, Wire, wire_for
 
 __all__ = [
+    "Codec",
+    "CompressionPolicy",
     "Compressor",
     "CompressorState",
     "LeafCompressed",
-    "available",
-    "get_compressor",
-    "encode_positions",
-    "decode_positions",
-    "expected_position_bits",
-    "golomb_bstar",
+    "LeafSpec",
+    "PolicyRule",
+    "ResolvedPolicy",
     "SBC_PRESETS",
     "SparsitySchedule",
+    "Wire",
     "adaptive_total_budget",
+    "available",
+    "available_codecs",
+    "available_stages",
     "constant",
+    "decode_positions",
+    "decompress_leaf",
+    "dgc_policy",
+    "encode_positions",
+    "expected_position_bits",
+    "get_compressor",
+    "golomb_bstar",
+    "make_codec",
     "preset",
+    "wire_for",
 ]

@@ -1,150 +1,159 @@
 """Compressor API for communication-efficient DSGD (paper Alg. 1).
 
-A *compressor* maps a weight-update pytree ``delta`` (ΔW in the paper) to a
-:class:`CompressedUpdate` — a fixed-shape pytree that (a) can be exchanged
-over the mesh with far fewer bytes than the dense update and (b) can be
-deterministically decompressed back to a dense pytree on every receiver.
+The core abstraction is the staged codec pipeline (DESIGN.md §2-§5):
 
-Everything here is functional and jit/vmap-friendly: compressor state
+  :mod:`repro.core.stages`  Selector → Quantizer → Encoder stage registry
+  :mod:`repro.core.codec`   Codec: one composed per-leaf method
+  :mod:`repro.core.policy`  CompressionPolicy: per-leaf codecs by path regex
+  :mod:`repro.core.wire`    pack/unpack: compressed pytrees ⇄ real bytes
+
+This module keeps the original *compressor* surface as a thin shim over
+that pipeline: :func:`get_compressor` returns a :class:`Compressor` that
+wraps a single-codec policy, with the same ``compress_leaf`` /
+``decompress_leaf`` / ``compress`` / ``decompress`` / ``init_state``
+methods the seed API had — existing call sites and configs
+(``--compressor sbc``) keep working unchanged.
+
+Everything is functional and jit/vmap-friendly: compressor state
 (residuals, RNG, round counters) is an explicit pytree threaded through
-``compress``.  ``vmap`` over a leading *client* axis gives the per-client
+``compress``; ``vmap`` over a leading *client* axis gives the per-client
 compression of paper Alg. 1 lines 10-14.
-
-Registry: concrete compressors register under a string name so configs can
-select them (``--compressor sbc``).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
-import jax.numpy as jnp
+
+from repro.core.codec import Codec, available_codecs, make_codec
+from repro.core.policy import (
+    CompressionPolicy,
+    CompressorState,
+    PolicyRule,
+    ResolvedPolicy,
+)
+from repro.core.stages import LeafCompressed, decompress_leaf, k_for
 
 PyTree = Any
 
-
-class LeafCompressed(NamedTuple):
-    """Compressed form of ONE flattened tensor.
-
-    Exactly one of the value encodings is "live" per method; dead fields are
-    zero-size arrays so the pytree structure stays static under jit.
-
-    idx:  int32[k]   positions of surviving entries (sorted not required)
-    vals: f32[k] | f32[0]   per-entry values (Gradient Dropping / DGC)
-    mean: f32[]      single signed mean value (SBC: ±μ, 0 value bits)
-    dense: f32[n] | f32[0]  dense payload (sign/ternary/quantized methods)
-    nbits: f32[]     analytic wire size of this leaf for this round (Eq. 1)
-    """
-
-    idx: jax.Array
-    vals: jax.Array
-    mean: jax.Array
-    dense: jax.Array
-    nbits: jax.Array
-
-
-class CompressorState(NamedTuple):
-    """Per-client compressor state threaded through training.
-
-    residual: pytree like params — error-feedback accumulator (Eq. 2).
-    rng:      PRNG key for stochastic quantizers (TernGrad/QSGD).
-    step:     round counter (drives sparsity / warm-up schedules).
-    """
-
-    residual: PyTree
-    rng: jax.Array
-    step: jax.Array
+__all__ = [
+    "Compressor",
+    "CompressorState",
+    "CompressionPolicy",
+    "PolicyRule",
+    "LeafCompressed",
+    "register",
+    "get_compressor",
+    "available",
+    "k_for",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class Compressor:
-    """A concrete compression method.
+    """A named compression method — a single-codec (or richer) policy with
+    the legacy per-leaf/per-tree call surface.
 
-    compress_leaf(flat_delta, p, rng) -> LeafCompressed
-    decompress_leaf(LeafCompressed, n) -> f32[n]
-
-    use_residual: whether error feedback (Eq. 2) wraps compression.
-    name: registry key.
+    ``compress_leaf``/``decompress_leaf`` operate on the policy's *default*
+    codec; ``compress``/``decompress`` resolve the full policy per leaf, so
+    a Compressor built from a multi-rule policy applies per-leaf codecs
+    transparently through the old entry points.
     """
 
     name: str
-    compress_leaf: Callable[..., LeafCompressed]
-    decompress_leaf: Callable[[LeafCompressed, int], jax.Array]
-    use_residual: bool = True
-    stochastic: bool = False
+    policy: CompressionPolicy
+
+    # ------------------------------------------------------------- builders
+
+    @classmethod
+    def from_codec(
+        cls, name: str, codec: Union[str, Codec], **kw: Any
+    ) -> "Compressor":
+        return cls(name=name, policy=CompressionPolicy.single(codec, name=name, **kw))
+
+    @classmethod
+    def from_policy(cls, name: str, policy: CompressionPolicy) -> "Compressor":
+        return cls(name=name, policy=policy)
+
+    # ---------------------------------------------------------- inspection
+
+    @property
+    def codec(self) -> Codec:
+        return self.policy.default
+
+    @property
+    def use_residual(self) -> bool:
+        return self.codec.use_residual
+
+    @property
+    def stochastic(self) -> bool:
+        return self.codec.stochastic
+
+    # ------------------------------------------------------------ leaf API
+
+    def compress_leaf(
+        self, flat: jax.Array, p: float, rng: Optional[jax.Array]
+    ) -> LeafCompressed:
+        return self.codec.compress_leaf(flat, p, rng)
+
+    def decompress_leaf(self, comp: LeafCompressed, n: int) -> jax.Array:
+        return decompress_leaf(comp, n)
 
     # ---------------------------------------------------------- pytree API
 
-    def init_state(self, params: PyTree, rng: Optional[jax.Array] = None) -> CompressorState:
-        residual = jax.tree.map(jnp.zeros_like, params) if self.use_residual else ()
-        if rng is None:
-            rng = jax.random.PRNGKey(0)
-        return CompressorState(residual=residual, rng=rng, step=jnp.zeros((), jnp.int32))
+    def resolve(self, tree: PyTree) -> ResolvedPolicy:
+        return self.policy.resolve(tree)
+
+    def init_state(
+        self, params: PyTree, rng: Optional[jax.Array] = None
+    ) -> CompressorState:
+        return self.policy.resolve(params).init_state(params, rng)
 
     def compress(
         self,
         delta: PyTree,
         state: CompressorState,
-        sparsity: float,
-    ) -> tuple[PyTree, PyTree, CompressorState]:
-        """Compress a full update pytree with error feedback.
+        sparsity: Union[float, Tuple[float, ...]],
+    ) -> tuple:
+        """Compress a full update pytree with error feedback (Eq. 2).
 
-        Returns (compressed_tree, dense_tree, new_state) where
-        ``compressed_tree`` has a LeafCompressed at every leaf, and
-        ``dense_tree`` is the locally-decompressed ΔW* (what the residual
-        subtracts; receivers reconstruct the same thing from the wire form).
+        ``sparsity``: the global rate (per-leaf rule overrides win), or an
+        explicit per-leaf rate tuple from ``ResolvedPolicy.rates``.
+
+        Per-round schedules cannot be evaluated here — ``state.step`` is a
+        traced array, and silently pinning every round to the round-0 rate
+        would ship the warm-up rate forever.  A schedule-bearing policy must
+        be driven with an explicit per-round rate tuple (``DSGDTrainer.fit``
+        does this each round); a bare float raises.
         """
-        leaves, treedef = jax.tree.flatten(delta)
-        rngs = jax.random.split(state.rng, len(leaves) + 1)
-        next_rng, leaf_rngs = rngs[0], rngs[1:]
-
-        res_leaves = (
-            jax.tree.leaves(state.residual) if self.use_residual else [None] * len(leaves)
-        )
-
-        comp_leaves, dense_leaves, new_res = [], [], []
-        for leaf, res, lr in zip(leaves, res_leaves, leaf_rngs):
-            flat = leaf.reshape(-1).astype(jnp.float32)
-            acc = flat + res.reshape(-1) if res is not None else flat  # Alg.1 l.10
-            comp = self.compress_leaf(acc, sparsity, lr)
-            dense = self.decompress_leaf(comp, flat.shape[0])
-            comp_leaves.append(comp)
-            dense_leaves.append(dense.reshape(leaf.shape).astype(leaf.dtype))
-            if res is not None:
-                new_res.append((acc - dense).reshape(leaf.shape).astype(res.dtype))
-
-        # no-error-feedback methods preserve the incoming residual pytree
-        # unchanged, so compressors can be mixed over one TrainState (e.g.
-        # the §III hybrid temporal/gradient schedules)
-        residual = (
-            jax.tree.unflatten(treedef, new_res) if self.use_residual
-            else state.residual
-        )
-        new_state = CompressorState(residual=residual, rng=next_rng, step=state.step + 1)
-        return (
-            jax.tree.unflatten(treedef, comp_leaves),
-            jax.tree.unflatten(treedef, dense_leaves),
-            new_state,
-        )
+        resolved = self.policy.resolve(delta)
+        if isinstance(sparsity, tuple):
+            rates = sparsity
+        else:
+            scheduled = [p.path for p in resolved.plans if p.schedule is not None]
+            if scheduled:
+                raise ValueError(
+                    "policy attaches per-round sparsity schedules to "
+                    f"{scheduled[:3]}…; pass resolve(delta).rates(p, round) "
+                    "instead of a bare float so the schedule advances"
+                )
+            rates = resolved.rates(float(sparsity))
+        return resolved.compress(delta, state, rates)
 
     def decompress(self, compressed: PyTree, like: PyTree) -> PyTree:
-        """Reconstruct a dense update pytree from the wire form."""
+        """Reconstruct a dense update pytree from the wire form.
 
-        def leaf_fn(comp: LeafCompressed, ref: jax.Array) -> jax.Array:
-            n = ref.size
-            return self.decompress_leaf(comp, n).reshape(ref.shape).astype(ref.dtype)
-
-        comp_leaves = jax.tree.leaves(compressed, is_leaf=lambda x: isinstance(x, LeafCompressed))
-        ref_leaves, treedef = jax.tree.flatten(like)
-        return jax.tree.unflatten(
-            treedef, [leaf_fn(c, r) for c, r in zip(comp_leaves, ref_leaves)]
-        )
+        Reconstructs through ``like``'s treedef, so a structure mismatch
+        between the two trees raises instead of silently mispairing leaves.
+        """
+        return self.policy.resolve(like).decompress(compressed, like)
 
     def total_bits(self, compressed: PyTree) -> jax.Array:
         """Sum of analytic wire bits across leaves (Eq. 1 inner term)."""
-        comp_leaves = jax.tree.leaves(compressed, is_leaf=lambda x: isinstance(x, LeafCompressed))
+        comp_leaves = jax.tree.leaves(
+            compressed, is_leaf=lambda x: isinstance(x, LeafCompressed)
+        )
         return sum(c.nbits for c in comp_leaves)
 
 
@@ -167,22 +176,5 @@ def get_compressor(name: str, **kwargs: Any) -> Compressor:
     return _REGISTRY[name](**kwargs)
 
 
-def available() -> list[str]:
+def available() -> list:
     return sorted(_REGISTRY)
-
-
-# ------------------------------------------------------ shared leaf helpers
-
-def empty_like_fields(n: int) -> dict:
-    """Zero-size placeholders for dead LeafCompressed fields."""
-    return dict(
-        idx=jnp.zeros((0,), jnp.int32),
-        vals=jnp.zeros((0,), jnp.float32),
-        mean=jnp.zeros((), jnp.float32),
-        dense=jnp.zeros((0,), jnp.float32),
-    )
-
-
-def k_for(n: int, p: float) -> int:
-    """Number of surviving entries at sparsity rate p (at least 1)."""
-    return max(1, min(n, int(round(p * n))))

@@ -1,234 +1,178 @@
-"""Baseline compressors the paper compares against (Table I / Table II).
+"""Baseline compressors the paper compares against (Table I / Table II),
+expressed as stage compositions (DESIGN.md §2):
 
-  none        dense 32-bit DSGD (the ×1 baseline)
-  topk        Gradient Dropping [Aji & Heafield '17]: top-k by magnitude,
-              32-bit values + 16-bit positions, error feedback
-  dgc         Deep Gradient Compression [Lin et al. '18]: same wire format as
-              topk; momentum correction is implicit in our delayed updates and
-              momentum MASKING is honored by the trainer via ``update_mask``
-  signsgd     signSGD [Bernstein et al. '18]: 1 bit/coordinate, NO residual
-              (server majority vote = mean of signs here)
-  onebit      1-bit SGD [Seide et al. '14]: two per-tensor means (like SBC
-              without sparsification) + error feedback
-  terngrad    TernGrad [Wen et al. '17]: stochastic ternary {−s,0,+s}
-  qsgd        QSGD [Alistarh et al. '17]: stochastic uniform quantization on
-              the L2 ball, ``levels`` quantization levels
-  randomk     sketched updates [Konečný et al. '16]: random-k mask with
-              32-bit values; positions derivable from a shared seed
+  none        dense|identity|none     32-bit DSGD (the ×1 baseline)
+  fedavg      dense|identity|none     dense, residual-free (delay does the
+                                      saving — temporal sparsity)
+  topk        topk|identity|raw16     Gradient Dropping [Aji & Heafield '17]
+  dgc         topk|identity|raw16     DGC [Lin et al. '18]: wire-identical to
+                                      topk; the DGC extras (per-leaf dense
+                                      biases/norms, warm-up schedule,
+                                      momentum masking) live in the policy
+                                      (:func:`dgc_policy`) and the trainer
+  signsgd     dense|sign|none         signSGD [Bernstein et al. '18], NO
+                                      residual (majority vote ≈ sign mean)
+  onebit      dense|two_means|none    1-bit SGD [Seide et al. '14]
+  terngrad    dense|ternary|none      TernGrad [Wen et al. '17]
+  qsgd        dense|stochastic|none   QSGD [Alistarh et al. '17]
+  randomk     randomk|identity|seed   sketched updates [Konečný et al. '16]
 
-All bit counts follow the accounting the paper uses in Table I.
+All analytic bit counts follow the accounting the paper uses in Table I;
+the exact byte serialization of every composition lives in
+:mod:`repro.core.wire`.
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
 from repro.core import api
+from repro.core.codec import Codec, register_codec
+from repro.core.policy import CompressionPolicy, PolicyRule
+from repro.core.sparsity import dgc_warmup
+from repro.core.stages import get_encoder, get_quantizer, get_selector
 
 NAIVE_POS_BITS = 16.0  # the paper's naive fixed-width position encoding
+
+
+def _codec(sel: str, quant: str, enc: str, *, use_residual: bool = True,
+           **kw) -> Codec:
+    return Codec(
+        selector=get_selector(sel, **kw),
+        quantizer=get_quantizer(quant, **kw),
+        encoder=get_encoder(enc, **kw),
+        use_residual=use_residual,
+    )
 
 
 # ------------------------------------------------------------------- dense
 
 
-def _dense_compress(flat, p, rng):
-    del p, rng
-    n = flat.shape[0]
-    return api.LeafCompressed(
-        idx=jnp.zeros((0,), jnp.int32),
-        vals=jnp.zeros((0,), jnp.float32),
-        mean=jnp.zeros((), jnp.float32),
-        dense=flat.astype(jnp.float32),
-        nbits=jnp.asarray(32.0 * n, jnp.float32),
-    )
-
-
-def _dense_decompress(comp, n):
-    return comp.dense
-
-
-@api.register("none")
-def make_none(**_):
+@register_codec("dense")
+def make_dense_codec(**_) -> Codec:
     # use_residual=True: a dense round transmits ΔW + any pending residual
     # in full and leaves R = 0 — identical to vanilla DSGD when used alone,
     # and the correct "flush" semantics in hybrid sparsity schedules.
-    return api.Compressor("none", _dense_compress, _dense_decompress, use_residual=True)
+    return _codec("dense", "identity", "none", use_residual=True)
+
+
+@api.register("none")
+def make_none(**_) -> api.Compressor:
+    return api.Compressor.from_codec("none", make_dense_codec())
 
 
 @api.register("fedavg")
-def make_fedavg(**_):
+def make_fedavg(**_) -> api.Compressor:
     # Federated Averaging == dense updates; the saving comes from the delay
     # schedule (temporal sparsity), handled by the trainer.
-    return api.Compressor("fedavg", _dense_compress, _dense_decompress, use_residual=False)
+    return api.Compressor.from_codec(
+        "fedavg", _codec("dense", "identity", "none", use_residual=False)
+    )
 
 
 # ---------------------------------------------------- top-k (Grad Dropping)
 
 
-def _topk_compress(flat, p, rng):
-    del rng
-    n = flat.shape[0]
-    k = api.k_for(n, p)
-    _, idx = jax.lax.top_k(jnp.abs(flat), k)
-    vals = flat[idx]
-    nbits = jnp.asarray(k * (32.0 + NAIVE_POS_BITS), jnp.float32)
-    return api.LeafCompressed(
-        idx=idx.astype(jnp.int32),
-        vals=vals.astype(jnp.float32),
-        mean=jnp.zeros((), jnp.float32),
-        dense=jnp.zeros((0,), jnp.float32),
-        nbits=nbits,
-    )
-
-
-def _topk_decompress(comp, n):
-    return jnp.zeros((n,), jnp.float32).at[comp.idx].set(comp.vals)
+@register_codec("topk")
+def make_topk_codec(**_) -> Codec:
+    return _codec("topk", "identity", "raw16")
 
 
 @api.register("topk")
-def make_topk(**_):
-    return api.Compressor("topk", _topk_compress, _topk_decompress, use_residual=True)
+def make_topk(**_) -> api.Compressor:
+    return api.Compressor.from_codec("topk", make_topk_codec())
 
 
 @api.register("dgc")
-def make_dgc(**_):
-    # Wire-identical to topk; the DGC extras (momentum masking, warm-up
-    # sparsity schedule) live in the trainer / sparsity schedule.
-    return api.Compressor("dgc", _topk_compress, _topk_decompress, use_residual=True)
+def make_dgc(**_) -> api.Compressor:
+    return api.Compressor.from_codec("dgc", make_topk_codec())
+
+
+def dgc_policy(
+    target_sparsity: float = 0.001,
+    warmup_rounds: int = 4,
+    dense_pattern: str = r"(^|/)(bias|b|scale|norm|ln[^/]*|gamma|beta)$",
+) -> CompressionPolicy:
+    """The full DGC recipe as a per-leaf policy (Lin et al. '18 §3):
+    biases/norm parameters ride dense, matrices get top-k with the
+    exponential sparsity warm-up."""
+    warm = dgc_warmup(target_sparsity=target_sparsity,
+                      warmup_rounds=warmup_rounds)
+    return CompressionPolicy(
+        default=make_topk_codec(),
+        rules=(
+            PolicyRule(dense_pattern, codec="dense32"),
+            PolicyRule(r".", schedule=lambda r: warm.sparsity(r)),
+        ),
+        name="dgc",
+    )
+
+
+@api.register("dgc_policy")
+def make_dgc_policy(**kw) -> api.Compressor:
+    return api.Compressor.from_policy("dgc_policy", dgc_policy(**kw))
 
 
 # ----------------------------------------------------------------- signSGD
 
 
-def _sign_compress(flat, p, rng):
-    # Scaled sign (SIGNUM-style): our compressors act on weight-DELTAS, so
-    # the bare sign must carry a magnitude — we use mean(|Δ|), transmitted as
-    # one 32-bit scalar per tensor (recorded in DESIGN.md §8).
-    del p, rng
-    n = flat.shape[0]
-    scale = jnp.mean(jnp.abs(flat))
-    return api.LeafCompressed(
-        idx=jnp.zeros((0,), jnp.int32),
-        vals=jnp.zeros((0,), jnp.float32),
-        mean=jnp.zeros((), jnp.float32),
-        dense=(scale * jnp.sign(flat)).astype(jnp.float32),
-        nbits=jnp.asarray(1.0 * n + 32.0, jnp.float32),
-    )
+@register_codec("signsgd")
+def make_signsgd_codec(**_) -> Codec:
+    return _codec("dense", "sign", "none", use_residual=False)
 
 
 @api.register("signsgd")
-def make_signsgd(**_):
-    return api.Compressor("signsgd", _sign_compress, _dense_decompress, use_residual=False)
+def make_signsgd(**_) -> api.Compressor:
+    return api.Compressor.from_codec("signsgd", make_signsgd_codec())
 
 
 # ----------------------------------------------------------------- 1-bit SGD
 
 
-def _onebit_compress(flat, p, rng):
-    del p, rng
-    n = flat.shape[0]
-    pos = flat >= 0
-    npos = jnp.maximum(jnp.sum(pos), 1)
-    nneg = jnp.maximum(n - jnp.sum(pos), 1)
-    mu_pos = jnp.sum(jnp.where(pos, flat, 0.0)) / npos
-    mu_neg = jnp.sum(jnp.where(pos, 0.0, flat)) / nneg  # negative number
-    dense = jnp.where(pos, mu_pos, mu_neg).astype(jnp.float32)
-    return api.LeafCompressed(
-        idx=jnp.zeros((0,), jnp.int32),
-        vals=jnp.zeros((0,), jnp.float32),
-        mean=jnp.zeros((), jnp.float32),
-        dense=dense,
-        nbits=jnp.asarray(1.0 * n + 64.0, jnp.float32),
-    )
+@register_codec("onebit")
+def make_onebit_codec(**_) -> Codec:
+    return _codec("dense", "two_means", "none", use_residual=True)
 
 
 @api.register("onebit")
-def make_onebit(**_):
-    return api.Compressor("onebit", _onebit_compress, _dense_decompress, use_residual=True)
+def make_onebit(**_) -> api.Compressor:
+    return api.Compressor.from_codec("onebit", make_onebit_codec())
 
 
 # ----------------------------------------------------------------- TernGrad
 
 
-def _terngrad_compress(flat, p, rng):
-    del p
-    n = flat.shape[0]
-    s = jnp.max(jnp.abs(flat)) + 1e-12
-    keep = jax.random.bernoulli(rng, jnp.abs(flat) / s)
-    dense = (s * jnp.sign(flat) * keep).astype(jnp.float32)
-    nbits = jnp.asarray(jnp.log2(3.0) * n + 32.0, jnp.float32)
-    return api.LeafCompressed(
-        idx=jnp.zeros((0,), jnp.int32),
-        vals=jnp.zeros((0,), jnp.float32),
-        mean=jnp.zeros((), jnp.float32),
-        dense=dense,
-        nbits=nbits,
-    )
+@register_codec("terngrad")
+def make_terngrad_codec(**_) -> Codec:
+    return _codec("dense", "ternary", "none", use_residual=False)
 
 
 @api.register("terngrad")
-def make_terngrad(**_):
-    return api.Compressor(
-        "terngrad", _terngrad_compress, _dense_decompress, use_residual=False, stochastic=True
-    )
+def make_terngrad(**_) -> api.Compressor:
+    return api.Compressor.from_codec("terngrad", make_terngrad_codec())
 
 
 # --------------------------------------------------------------------- QSGD
 
 
-def _qsgd_compress(flat, p, rng, levels: int = 15):
-    del p
-    n = flat.shape[0]
-    norm = jnp.linalg.norm(flat) + 1e-12
-    scaled = jnp.abs(flat) / norm * levels
-    floor = jnp.floor(scaled)
-    prob = scaled - floor
-    quant = floor + jax.random.bernoulli(rng, prob)
-    dense = (norm * jnp.sign(flat) * quant / levels).astype(jnp.float32)
-    bits_per = jnp.log2(2.0 * levels + 1.0)
-    return api.LeafCompressed(
-        idx=jnp.zeros((0,), jnp.int32),
-        vals=jnp.zeros((0,), jnp.float32),
-        mean=jnp.zeros((), jnp.float32),
-        dense=dense,
-        nbits=jnp.asarray(bits_per * n + 32.0, jnp.float32),
-    )
+@register_codec("qsgd")
+def make_qsgd_codec(levels: int = 15, **_) -> Codec:
+    return _codec("dense", "stochastic", "none", use_residual=False,
+                  levels=levels)
 
 
 @api.register("qsgd")
-def make_qsgd(levels: int = 15, **_):
-    return api.Compressor(
-        "qsgd",
-        partial(_qsgd_compress, levels=levels),
-        _dense_decompress,
-        use_residual=False,
-        stochastic=True,
-    )
+def make_qsgd(levels: int = 15, **_) -> api.Compressor:
+    return api.Compressor.from_codec("qsgd", make_qsgd_codec(levels=levels))
 
 
 # ------------------------------------------------------------------ randomk
 
 
-def _randomk_compress(flat, p, rng):
-    n = flat.shape[0]
-    k = api.k_for(n, p)
-    idx = jax.random.choice(rng, n, shape=(k,), replace=False)
-    vals = flat[idx]
-    # positions derivable from a shared 32-bit seed → only values go on wire
-    nbits = jnp.asarray(k * 32.0 + 32.0, jnp.float32)
-    return api.LeafCompressed(
-        idx=idx.astype(jnp.int32),
-        vals=vals.astype(jnp.float32),
-        mean=jnp.zeros((), jnp.float32),
-        dense=jnp.zeros((0,), jnp.float32),
-        nbits=nbits,
-    )
+@register_codec("randomk")
+def make_randomk_codec(**_) -> Codec:
+    # positions derivable from a shared 32-bit seed → only values are
+    # metered on the in-process wire (stages.py 'seed' encoder note)
+    return _codec("randomk", "identity", "seed")
 
 
 @api.register("randomk")
-def make_randomk(**_):
-    return api.Compressor(
-        "randomk", _randomk_compress, _topk_decompress, use_residual=True, stochastic=True
-    )
+def make_randomk(**_) -> api.Compressor:
+    return api.Compressor.from_codec("randomk", make_randomk_codec())

@@ -1,0 +1,262 @@
+"""Per-leaf compression policies (DESIGN.md §3).
+
+A :class:`CompressionPolicy` assigns every leaf of a parameter pytree its
+own codec, sparsity schedule, and skip/dense-fallback rule by matching the
+leaf's *path* ("decoder/layer0/attn/wq", "embed/bias", …) against ordered
+regex rules — the mechanism DGC-style recipes need ("biases and norms go
+dense, matrices get 0.1% top-k with warm-up").
+
+``CompressionPolicy.resolve(tree)`` binds the rules to a concrete pytree
+structure, producing a :class:`ResolvedPolicy` — the compression *engine*
+that threads error feedback (Eq. 2) per leaf and is what the trainer and
+the :class:`~repro.core.api.Compressor` shim drive.
+
+Sparsity rates are resolved OUTSIDE jit (schedules take a python round
+index and return python floats) and enter the traced computation as static
+per-leaf constants, so shapes stay fixed and per-round rate changes are
+ordinary retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import Codec, make_codec
+from repro.core.stages import LeafCompressed, decompress_leaf
+
+PyTree = Any
+
+
+class CompressorState(NamedTuple):
+    """Per-client compressor state threaded through training.
+
+    residual: pytree like params — error-feedback accumulator (Eq. 2);
+              ``()`` when no leaf's codec uses error feedback.
+    rng:      PRNG key for stochastic selectors/quantizers.
+    step:     round counter (traced; sparsity/warm-up schedules are
+              evaluated host-side per round via ``ResolvedPolicy.rates``,
+              not from this array).
+    """
+
+    residual: PyTree
+    rng: jax.Array
+    step: jax.Array
+
+
+def path_str(path: Sequence) -> str:
+    """Render a jax key-path as the "a/b/0/w" strings rules match against."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """First matching rule wins (``re.search`` against the leaf path).
+
+    codec:    named codec / "sel|quant|enc" spec / Codec; None keeps the
+              policy default codec ("skip" and "dense32" are the skip and
+              dense-fallback shortcuts).
+    sparsity: fixed per-leaf rate override (None → schedule / global rate).
+    schedule: round → rate callable (e.g. DGC warm-up); overrides the
+              global rate but loses to a fixed ``sparsity``.
+    """
+
+    pattern: str
+    codec: Union[str, Codec, None] = None
+    sparsity: Optional[float] = None
+    schedule: Optional[Callable[[int], float]] = None
+
+
+class LeafPlan(NamedTuple):
+    """One leaf's bound compression plan."""
+
+    path: str
+    codec: Codec
+    sparsity: Optional[float]
+    schedule: Optional[Callable[[int], float]]
+
+    def rate(self, global_rate: float, round_idx: int = 0) -> float:
+        if self.sparsity is not None:
+            return float(self.sparsity)
+        if self.schedule is not None:
+            return float(self.schedule(round_idx))
+        return float(global_rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPolicy:
+    """Ordered regex rules over a default codec."""
+
+    default: Codec
+    rules: Tuple[PolicyRule, ...] = ()
+    name: str = "policy"
+
+    def plan_for(self, path: str) -> LeafPlan:
+        for rule in self.rules:
+            if re.search(rule.pattern, path):
+                codec = (
+                    self.default if rule.codec is None else make_codec(rule.codec)
+                )
+                return LeafPlan(path, codec, rule.sparsity, rule.schedule)
+        return LeafPlan(path, self.default, None, None)
+
+    def resolve(self, tree: PyTree) -> "ResolvedPolicy":
+        """Bind rules to a concrete pytree structure (paths + treedef)."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        plans = tuple(self.plan_for(path_str(path)) for path, _ in flat)
+        return ResolvedPolicy(policy=self, treedef=treedef, plans=plans)
+
+    # convenience used by shims / single-codec call sites
+    @classmethod
+    def single(cls, codec: Union[str, Codec], name: str = "", **kw) -> "CompressionPolicy":
+        c = make_codec(codec, **kw)
+        return cls(default=c, rules=(), name=name or c.spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedPolicy:
+    """A policy bound to one pytree structure — the compression engine.
+
+    All methods are functional and jit/vmap-friendly; per-leaf rates enter
+    as static python floats (see module docstring).
+    """
+
+    policy: CompressionPolicy
+    treedef: Any
+    plans: Tuple[LeafPlan, ...]
+
+    @property
+    def any_residual(self) -> bool:
+        return any(p.codec.use_residual for p in self.plans)
+
+    @property
+    def any_stochastic(self) -> bool:
+        return any(p.codec.stochastic for p in self.plans)
+
+    def rates(
+        self, global_rate: float, round_idx: int = 0
+    ) -> Tuple[float, ...]:
+        """Per-leaf sparsity rates for this round (static, hashable)."""
+        return tuple(p.rate(global_rate, round_idx) for p in self.plans)
+
+    # ----------------------------------------------------------- lifecycle
+
+    def init_state(
+        self, params: PyTree, rng: Optional[jax.Array] = None
+    ) -> CompressorState:
+        residual = (
+            jax.tree.map(jnp.zeros_like, params) if self.any_residual else ()
+        )
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        return CompressorState(residual=residual, rng=rng, step=jnp.zeros((), jnp.int32))
+
+    def _leaves_of(self, tree: PyTree) -> list:
+        """Flatten ``tree`` through OUR treedef — raises on structure
+        mismatch instead of silently mispairing leaves."""
+        return self.treedef.flatten_up_to(tree)
+
+    def compress(
+        self,
+        delta: PyTree,
+        state: CompressorState,
+        rates: Union[float, Tuple[float, ...]],
+    ) -> tuple:
+        """Compress a full update pytree with per-leaf error feedback.
+
+        Returns (compressed_tree, dense_tree, new_state): ``compressed_tree``
+        has a LeafCompressed at every leaf; ``dense_tree`` is the locally
+        decompressed ΔW* (what the residual subtracts; receivers reconstruct
+        the identical thing from the wire form).
+        """
+        leaves = self._leaves_of(delta)
+        if not isinstance(rates, tuple):
+            rates = (float(rates),) * len(leaves)
+        if len(rates) != len(self.plans):
+            raise ValueError(
+                f"got {len(rates)} rates for {len(self.plans)} leaves"
+            )
+        rngs = jax.random.split(state.rng, len(leaves) + 1)
+        next_rng, leaf_rngs = rngs[0], rngs[1:]
+        res_leaves = (
+            self._leaves_of(state.residual)
+            if self.any_residual
+            else [None] * len(leaves)
+        )
+
+        comp_leaves, dense_leaves, new_res = [], [], []
+        for plan, leaf, res, p, lr in zip(
+            self.plans, leaves, res_leaves, rates, leaf_rngs
+        ):
+            flat = leaf.reshape(-1).astype(jnp.float32)
+            use_res = plan.codec.use_residual and res is not None
+            acc = flat + res.reshape(-1).astype(jnp.float32) if use_res else flat
+            comp = plan.codec.compress_leaf(acc, p, lr)
+            dense = decompress_leaf(comp, flat.shape[0])
+            comp_leaves.append(comp)
+            dense_leaves.append(dense.reshape(leaf.shape).astype(leaf.dtype))
+            if res is not None:
+                new_res.append(
+                    (acc - dense).reshape(leaf.shape).astype(res.dtype)
+                    if use_res
+                    else res  # residual-free codecs leave their slot intact
+                )
+
+        residual = (
+            jax.tree.unflatten(self.treedef, new_res)
+            if self.any_residual
+            else state.residual
+        )
+        new_state = CompressorState(
+            residual=residual, rng=next_rng, step=state.step + 1
+        )
+        return (
+            jax.tree.unflatten(self.treedef, comp_leaves),
+            jax.tree.unflatten(self.treedef, dense_leaves),
+            new_state,
+        )
+
+    def decompress(self, compressed: PyTree, like: PyTree) -> PyTree:
+        """Reconstruct a dense update pytree from the wire form.
+
+        Both trees are flattened through the resolved treedef, so a
+        mismatched structure raises instead of silently mispairing.
+        """
+        comp_leaves = self._leaves_of(compressed)
+        ref_leaves = self._leaves_of(like)
+        out = [
+            decompress_leaf(c, r.size).reshape(r.shape).astype(r.dtype)
+            for c, r in zip(comp_leaves, ref_leaves)
+        ]
+        return jax.tree.unflatten(self.treedef, out)
+
+    def total_bits(self, compressed: PyTree) -> jax.Array:
+        """Sum of analytic wire bits across leaves (Eq. 1 inner term)."""
+        return sum(c.nbits for c in self._leaves_of(compressed))
+
+    # ------------------------------------------------------------ summaries
+
+    def describe(self) -> str:
+        """Human-readable per-leaf codec table (launchers print this)."""
+        lines = [f"policy {self.policy.name!r}: {len(self.plans)} leaves"]
+        for p in self.plans:
+            extra = ""
+            if p.sparsity is not None:
+                extra = f"  p={p.sparsity}"
+            elif p.schedule is not None:
+                extra = "  p=schedule"
+            lines.append(f"  {p.path:<48s} {p.codec.spec}{extra}")
+        return "\n".join(lines)

@@ -1,4 +1,4 @@
-"""Sparse Binary Compression — paper Alg. 2.
+"""Sparse Binary Compression — paper Alg. 2 as a staged codec.
 
 Per flattened tensor ΔW with sparsity rate p:
 
@@ -9,67 +9,76 @@ Per flattened tensor ΔW with sparsity rate p:
   4. wire form: k positions (Golomb-coded, Eq. 5) + ONE 32-bit mean
      → 0 value bits per surviving entry.
 
-Implementation note (recorded in DESIGN.md): the paper states step 3 as a
-threshold mask ``ΔW ≥ min(val⁺)``; we keep the exact top-k *indices* instead,
-which selects exactly k entries and is identical up to ties. This also makes
+In the stage pipeline that is exactly the composition
+
+    topk_signed  →  binarize  →  golomb
+    (steps 1,3)     (step 2)      (step 4)
+
+so SBC is registered as that codec rather than a bespoke compressor; the
+variants the §III trade-off grid needs (e.g. SBC values without
+binarization, or bitmask positions at high p) are one stage swap away.
+
+Implementation note (DESIGN.md §6): the paper states step 3 as a threshold
+mask ``ΔW ≥ min(val⁺)``; we keep the exact top-k *indices* instead, which
+selects exactly k entries and is identical up to ties.  This also makes
 the wire form a fixed-shape (idx[k], mean) pair, which is what lets the
 exchange lower to a small all-gather in XLA.
 
-Error feedback (Eq. 2) is applied by :class:`repro.core.api.Compressor`.
+Error feedback (Eq. 2) is applied by the policy engine
+(:meth:`repro.core.policy.ResolvedPolicy.compress`).
 """
 from __future__ import annotations
 
-from functools import partial
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import api
-from repro.core.golomb import expected_position_bits
+from repro.core.codec import Codec, register_codec
+from repro.core.stages import (
+    LeafCompressed,
+    decompress_leaf,
+    get_encoder,
+    get_quantizer,
+    get_selector,
+)
 
 
-def sbc_compress_leaf(flat: jax.Array, p: float, rng: jax.Array) -> api.LeafCompressed:
-    del rng  # deterministic
-    n = flat.shape[0]
-    k = api.k_for(n, p)
-
-    val_pos, idx_pos = jax.lax.top_k(flat, k)
-    val_neg, idx_neg = jax.lax.top_k(-flat, k)
-    mu_pos = jnp.mean(val_pos)  # Alg. 2 l.4
-    mu_neg = jnp.mean(val_neg)
-
-    pos_wins = mu_pos > mu_neg  # Alg. 2 l.5
-    idx = jnp.where(pos_wins, idx_pos, idx_neg).astype(jnp.int32)
-    mean = jnp.where(pos_wins, mu_pos, -mu_neg).astype(jnp.float32)
-
-    nbits = jnp.asarray(k * expected_position_bits(p) + 32.0, jnp.float32)
-    return api.LeafCompressed(
-        idx=idx,
-        vals=jnp.zeros((0,), jnp.float32),
-        mean=mean,
-        dense=jnp.zeros((0,), jnp.float32),
-        nbits=nbits,
+@register_codec("sbc")
+def make_sbc_codec(**_: object) -> Codec:
+    return Codec(
+        selector=get_selector("topk_signed"),
+        quantizer=get_quantizer("binarize"),
+        encoder=get_encoder("golomb"),
+        use_residual=True,
     )
 
 
-def sbc_decompress_leaf(comp: api.LeafCompressed, n: int) -> jax.Array:
-    return jnp.zeros((n,), jnp.float32).at[comp.idx].set(comp.mean)
+SBC_CODEC = make_sbc_codec()
+
+
+# ------------------------------------------------------- seed-API functions
+# Kept as the canonical single-tensor entry points (tests + quickstart).
+
+
+def sbc_compress_leaf(
+    flat: jax.Array, p: float, rng: Optional[jax.Array]
+) -> LeafCompressed:
+    return SBC_CODEC.compress_leaf(flat, p, rng)
+
+
+def sbc_decompress_leaf(comp: LeafCompressed, n: int) -> jax.Array:
+    return decompress_leaf(comp, n)
 
 
 @api.register("sbc")
 def make_sbc(**_: object) -> api.Compressor:
-    return api.Compressor(
-        name="sbc",
-        compress_leaf=sbc_compress_leaf,
-        decompress_leaf=sbc_decompress_leaf,
-        use_residual=True,
-        stochastic=False,
-    )
+    return api.Compressor.from_codec("sbc", SBC_CODEC)
 
 
 # ------------------------------------------------------------------ presets
 # The paper's three evaluated configurations (§IV-B): (delay n, sparsity p).
-SBC_PRESETS: dict[str, tuple[int, float]] = {
+SBC_PRESETS: dict = {
     "sbc1": (1, 0.001),   # no delay, 0.1% gradient sparsity
     "sbc2": (10, 0.01),   # 10-step delay, 1% sparsity
     "sbc3": (100, 0.01),  # 100-step delay, 1% sparsity

@@ -1,0 +1,444 @@
+"""Packed wire format: LeafCompressed pytrees ⇄ actual bytes (DESIGN.md §5).
+
+``Wire.pack`` serializes a compressed update into one contiguous byte
+buffer — Golomb position bitstreams (Alg. 3), sign/ternary/level bitfields,
+and per-tensor scalars all become real ``uint8`` payloads — and
+``Wire.unpack`` decodes it back to the identical dense pytree a receiver
+needs.  This is what lets ``bits_per_client`` be *measured* off the buffer
+instead of only computed from Eq. 1; tests reconcile the two.
+
+Layout (all little-endian scalars, np.packbits big-endian bitfields):
+
+    header:  b"SBW1"  u32 n_leaves
+    leaf i:  u32 payload_bytes, then the payload:
+      skip                  → (empty)
+      sparse positions      → golomb: u32 bit_count + packed bitstream
+                              bitmask: ceil(n/8) mask bytes
+                              raw16/raw32/seed: k fixed-width indices
+      sparse values         → identity: k f32 | binarize: 1 f32 (μ)
+                              sign: f32 scale + k sign bits
+      dense payloads        → identity: n f32
+                              sign: f32 scale + n sign bits
+                              two_means: f32 μ⁺, f32 μ⁻ + n side bits
+                              ternary: f32 s + n 2-bit codes
+                              stochastic: f32 norm + n sign bits
+                                          + n ceil(log2(L+1))-bit levels
+
+Sparse values ride in ascending-position order (Golomb decode emits sorted
+positions), so pack sorts (idx, vals) jointly.  ``measured_bits`` counts
+exact payload bits before byte padding — the number Eq. 1 meters; the
+framing (magic + lengths) is transport overhead and excluded.
+
+Known analytic-vs-wire divergences (deliberate, also noted in stages.py):
+``seed`` ships explicit raw32 indices (analytic: one shared 32-bit seed);
+``ternary`` packs 2 bits/entry (analytic: log2 3 ≈ 1.58 — an arithmetic
+coder would close the gap); ``stochastic`` packs sign+⌈log2(L+1)⌉ bits
+(analytic: log2(2L+1)); ``raw16`` auto-widens to u32 for leaves over 2^16
+entries (the Table I accounting's own blind spot).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import struct
+from typing import Any, NamedTuple, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core import golomb
+from repro.core.codec import Codec, leaf_k
+from repro.core.policy import ResolvedPolicy
+from repro.core.stages import LeafCompressed, k_for
+
+PyTree = Any
+
+MAGIC = b"SBW1"
+
+
+class LeafSpec(NamedTuple):
+    """Static per-leaf decode contract: everything a receiver must already
+    know (from the shared policy + model config) to parse the payload."""
+
+    path: str
+    shape: Tuple[int, ...]
+    selector: str
+    quantizer: str
+    encoder: str
+    p: float
+    levels: int = 0  # stochastic-quantizer code range (0 = n/a)
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def k(self) -> int:
+        if self.selector == "skip":
+            return 0
+        if self.selector == "dense":
+            return self.n
+        return k_for(self.n, self.p)
+
+
+def spec_for(path: str, shape: Tuple[int, ...], codec: Codec, p: float) -> LeafSpec:
+    return LeafSpec(
+        path=path,
+        shape=tuple(shape),
+        selector=codec.selector.name,
+        quantizer=codec.quantizer.name,
+        encoder=codec.encoder.name,
+        p=float(p),
+        levels=int(codec.quantizer.levels),
+    )
+
+
+# ------------------------------------------------------------- bit plumbing
+
+
+def _pack_bits(bits: np.ndarray) -> bytes:
+    return np.packbits(bits.astype(np.uint8)).tobytes() if bits.size else b""
+
+
+def _unpack_bits(buf: bytes, count: int) -> np.ndarray:
+    if count == 0:
+        return np.zeros((0,), np.uint8)
+    return np.unpackbits(np.frombuffer(buf, np.uint8))[:count]
+
+
+def _pack_codes(codes: np.ndarray, width: int) -> bytes:
+    """Fixed-width big-endian bitfield of small unsigned ints."""
+    if codes.size == 0 or width == 0:
+        return b""
+    shifts = np.arange(width - 1, -1, -1)
+    bits = ((codes[:, None].astype(np.int64) >> shifts[None, :]) & 1).reshape(-1)
+    return _pack_bits(bits)
+
+
+def _unpack_codes(buf: bytes, count: int, width: int) -> np.ndarray:
+    if count == 0 or width == 0:
+        return np.zeros((count,), np.int64)
+    bits = _unpack_bits(buf, count * width).reshape(count, width).astype(np.int64)
+    weights = 1 << np.arange(width - 1, -1, -1)
+    return bits @ weights
+
+
+def _f32(x) -> bytes:
+    return struct.pack("<f", float(x))
+
+
+def _code_width(levels: int) -> int:
+    return max(1, math.ceil(math.log2(levels + 1)))
+
+
+def _nbytes(bits: int) -> int:
+    return (bits + 7) // 8
+
+
+# ------------------------------------------------------------ leaf pack side
+
+
+def pack_leaf(comp: LeafCompressed, spec: LeafSpec) -> Tuple[bytes, int]:
+    """Serialize one compressed leaf → (payload bytes, exact payload bits).
+
+    The exact bit count is pre-byte-padding: Golomb bitstream length,
+    1 bit per sign/side, ⌈log2⌉ bits per code, 32 per f32 scalar.
+    """
+    if spec.selector == "skip":
+        return b"", 0
+    if spec.selector == "dense":
+        return _pack_dense(comp, spec)
+    return _pack_sparse(comp, spec)
+
+
+def _pack_sparse(comp: LeafCompressed, spec: LeafSpec) -> Tuple[bytes, int]:
+    idx = np.asarray(comp.idx, np.int64)
+    order = np.argsort(idx, kind="stable")
+    idx = idx[order]
+    vals = np.asarray(comp.vals, np.float32)
+    if vals.size:
+        vals = vals[order]
+    k = idx.size
+
+    # ---- positions
+    if spec.encoder == "golomb":
+        bits = golomb.encode_positions(idx, spec.p)
+        pos = struct.pack("<I", bits.size) + _pack_bits(bits)
+        pos_bits = int(bits.size)
+    elif spec.encoder == "bitmask":
+        mask = np.zeros((spec.n,), np.uint8)
+        mask[idx] = 1
+        pos = _pack_bits(mask)
+        pos_bits = spec.n
+    elif spec.encoder == "raw16":
+        # the paper's naive 16-bit width only addresses 2^16 entries; wider
+        # leaves auto-widen to u32 on the wire (analytic stays 16k — the
+        # Table I accounting's own blind spot, see module docstring)
+        if spec.n <= (1 << 16):
+            pos = idx.astype("<u2").tobytes()
+            pos_bits = 16 * k
+        else:
+            pos = idx.astype("<u4").tobytes()
+            pos_bits = 32 * k
+    elif spec.encoder in ("raw32", "seed"):
+        pos = idx.astype("<u4").tobytes()
+        pos_bits = 32 * k
+    else:
+        raise NotImplementedError(f"no wire form for encoder {spec.encoder!r}")
+
+    # ---- values
+    if spec.quantizer == "identity":
+        val = vals.astype("<f4").tobytes()
+        val_bits = 32 * k
+    elif spec.quantizer == "binarize":
+        val = _f32(comp.mean)
+        val_bits = 32
+    elif spec.quantizer == "sign":
+        val = _f32(comp.mean) + _pack_bits(vals > 0)
+        val_bits = 32 + k
+    else:
+        raise NotImplementedError(
+            f"no sparse wire form for quantizer {spec.quantizer!r}"
+        )
+    return pos + val, pos_bits + val_bits
+
+
+def _pack_dense(comp: LeafCompressed, spec: LeafSpec) -> Tuple[bytes, int]:
+    dense = np.asarray(comp.dense, np.float32)
+    n = spec.n
+    if spec.quantizer == "identity":
+        return dense.astype("<f4").tobytes(), 32 * n
+    if spec.quantizer == "sign":
+        return _f32(comp.mean) + _pack_bits(dense > 0), 32 + n
+    if spec.quantizer == "two_means":
+        mu_p, mu_n = np.float32(dense.max()), np.float32(dense.min())
+        return _f32(mu_p) + _f32(mu_n) + _pack_bits(dense == mu_p), 64 + n
+    if spec.quantizer == "ternary":
+        codes = (np.sign(dense) + 1).astype(np.int64)  # {0,1,2}
+        return _f32(comp.mean) + _pack_codes(codes, 2), 32 + 2 * n
+    if spec.quantizer == "stochastic":
+        norm = np.float32(comp.mean)
+        w = _code_width(spec.levels)
+        q = np.rint(np.abs(dense) * spec.levels / norm).astype(np.int64)
+        payload = _f32(norm) + _pack_bits(dense > 0) + _pack_codes(q, w)
+        return payload, 32 + n + w * n
+    raise NotImplementedError(f"no dense wire form for quantizer {spec.quantizer!r}")
+
+
+# ---------------------------------------------------------- leaf unpack side
+
+
+def unpack_leaf(payload: bytes, spec: LeafSpec) -> LeafCompressed:
+    """Parse one leaf payload back to a numpy LeafCompressed (idx ascending).
+
+    ``nbits`` carries the exact measured payload bits, so a re-pack of the
+    result is byte-identical and the measured size is queryable downstream.
+    """
+    if spec.selector == "skip":
+        return LeafCompressed(
+            idx=np.zeros((0,), np.int32), vals=np.zeros((0,), np.float32),
+            mean=np.float32(0), dense=np.zeros((0,), np.float32),
+            nbits=np.float32(0),
+        )
+    if spec.selector == "dense":
+        return _unpack_dense(payload, spec)
+    return _unpack_sparse(payload, spec)
+
+
+def _unpack_sparse(payload: bytes, spec: LeafSpec) -> LeafCompressed:
+    k, off = spec.k, 0
+    if spec.encoder == "golomb":
+        (bit_count,) = struct.unpack_from("<I", payload, 0)
+        off = 4 + _nbytes(bit_count)
+        bits = _unpack_bits(payload[4:off], bit_count)
+        idx = golomb.decode_positions(bits, spec.p).astype(np.int32)
+        pos_bits = bit_count
+    elif spec.encoder == "bitmask":
+        off = _nbytes(spec.n)
+        mask = _unpack_bits(payload[:off], spec.n)
+        idx = np.nonzero(mask)[0].astype(np.int32)
+        pos_bits = spec.n
+    elif spec.encoder == "raw16":
+        if spec.n <= (1 << 16):
+            off = 2 * k
+            idx = np.frombuffer(payload, "<u2", count=k).astype(np.int32)
+            pos_bits = 16 * k
+        else:  # auto-widened on pack (see _pack_sparse)
+            off = 4 * k
+            idx = np.frombuffer(payload, "<u4", count=k).astype(np.int32)
+            pos_bits = 32 * k
+    elif spec.encoder in ("raw32", "seed"):
+        off = 4 * k
+        idx = np.frombuffer(payload, "<u4", count=k).astype(np.int32)
+        pos_bits = 32 * k
+    else:
+        raise NotImplementedError(f"no wire form for encoder {spec.encoder!r}")
+    k = idx.size  # authoritative once positions are decoded
+
+    mean = np.float32(0)
+    vals = np.zeros((0,), np.float32)
+    if spec.quantizer == "identity":
+        vals = np.frombuffer(payload, "<f4", count=k, offset=off).copy()
+        val_bits = 32 * k
+    elif spec.quantizer == "binarize":
+        (m,) = struct.unpack_from("<f", payload, off)
+        mean = np.float32(m)
+        val_bits = 32
+    elif spec.quantizer == "sign":
+        (m,) = struct.unpack_from("<f", payload, off)
+        mean = np.float32(m)
+        signs = _unpack_bits(payload[off + 4:], k).astype(np.float32)
+        vals = np.where(signs > 0, mean, -mean).astype(np.float32)
+        val_bits = 32 + k
+    else:
+        raise NotImplementedError(
+            f"no sparse wire form for quantizer {spec.quantizer!r}"
+        )
+    return LeafCompressed(
+        idx=idx, vals=vals, mean=mean, dense=np.zeros((0,), np.float32),
+        nbits=np.float32(pos_bits + val_bits),
+    )
+
+
+def _unpack_dense(payload: bytes, spec: LeafSpec) -> LeafCompressed:
+    n = spec.n
+    empty_i = np.zeros((0,), np.int32)
+    empty_f = np.zeros((0,), np.float32)
+    if spec.quantizer == "identity":
+        dense = np.frombuffer(payload, "<f4", count=n).copy()
+        return LeafCompressed(empty_i, empty_f, np.float32(0), dense,
+                              np.float32(32 * n))
+    if spec.quantizer == "sign":
+        (scale,) = struct.unpack_from("<f", payload, 0)
+        scale = np.float32(scale)
+        signs = _unpack_bits(payload[4:], n).astype(np.float32)
+        dense = np.where(signs > 0, scale, -scale).astype(np.float32)
+        return LeafCompressed(empty_i, empty_f, scale, dense,
+                              np.float32(32 + n))
+    if spec.quantizer == "two_means":
+        mu_p, mu_n = struct.unpack_from("<ff", payload, 0)
+        side = _unpack_bits(payload[8:], n)
+        dense = np.where(side > 0, np.float32(mu_p), np.float32(mu_n)).astype(
+            np.float32
+        )
+        return LeafCompressed(empty_i, empty_f, np.float32(mu_p), dense,
+                              np.float32(64 + n))
+    if spec.quantizer == "ternary":
+        (scale,) = struct.unpack_from("<f", payload, 0)
+        scale = np.float32(scale)
+        codes = _unpack_codes(payload[4:], n, 2) - 1  # {-1,0,1}
+        dense = (scale * codes.astype(np.float32)).astype(np.float32)
+        return LeafCompressed(empty_i, empty_f, scale, dense,
+                              np.float32(32 + 2 * n))
+    if spec.quantizer == "stochastic":
+        (norm,) = struct.unpack_from("<f", payload, 0)
+        norm = np.float32(norm)
+        w = _code_width(spec.levels)
+        sign_bytes = _nbytes(n)
+        signs = _unpack_bits(payload[4:4 + sign_bytes], n).astype(np.float32)
+        q = _unpack_codes(payload[4 + sign_bytes:], n, w).astype(np.float32)
+        sgn = np.where(signs > 0, np.float32(1), np.float32(-1))
+        # same op order as the quantizer: ((norm · sign) · q) / levels, all f32
+        dense = ((norm * sgn) * q / np.float32(spec.levels)).astype(np.float32)
+        return LeafCompressed(empty_i, empty_f, norm, dense,
+                              np.float32(32 + n + w * n))
+    raise NotImplementedError(f"no dense wire form for quantizer {spec.quantizer!r}")
+
+
+def leaf_dense(comp: LeafCompressed, spec: LeafSpec) -> np.ndarray:
+    """Dense reconstruction of one unpacked leaf, reshaped to spec.shape."""
+    if comp.dense.size:
+        out = np.asarray(comp.dense, np.float32)
+    else:
+        out = np.zeros((spec.n,), np.float32)
+        if comp.vals.size:
+            out[np.asarray(comp.idx)] = comp.vals
+        elif comp.idx.size:
+            out[np.asarray(comp.idx)] = comp.mean
+    return out.reshape(spec.shape)
+
+
+# ------------------------------------------------------------- message level
+
+
+@dataclasses.dataclass(frozen=True)
+class Wire:
+    """A pack/unpack contract bound to one pytree structure + policy.
+
+    Both ends build the same Wire from the shared (model config, policy,
+    round rates); only payload bytes cross the network.
+    """
+
+    specs: Tuple[LeafSpec, ...]
+    treedef: Any
+
+    def _leaves(self, tree: PyTree) -> list:
+        return self.treedef.flatten_up_to(tree)
+
+    def pack(self, compressed: PyTree) -> bytes:
+        """Compressed pytree → one framed byte buffer."""
+        leaves = self._leaves(compressed)
+        out = [MAGIC, struct.pack("<I", len(leaves))]
+        for comp, spec in zip(leaves, self.specs):
+            payload, _ = pack_leaf(_to_numpy(comp), spec)
+            out.append(struct.pack("<I", len(payload)))
+            out.append(payload)
+        return b"".join(out)
+
+    def unpack(self, data: bytes) -> PyTree:
+        """Byte buffer → dense update pytree (numpy float32 leaves)."""
+        comps = self.unpack_compressed(data)
+        dense = [
+            leaf_dense(c, s) for c, s in zip(self._leaves(comps), self.specs)
+        ]
+        return jax.tree.unflatten(self.treedef, dense)
+
+    def unpack_compressed(self, data: bytes) -> PyTree:
+        """Byte buffer → pytree of numpy LeafCompressed (for re-pack tests
+        and servers that aggregate in compressed form)."""
+        if data[:4] != MAGIC:
+            raise ValueError("bad wire magic; not an SBW1 buffer")
+        (n_leaves,) = struct.unpack_from("<I", data, 4)
+        if n_leaves != len(self.specs):
+            raise ValueError(
+                f"buffer has {n_leaves} leaves, spec expects {len(self.specs)}"
+            )
+        off, comps = 8, []
+        for spec in self.specs:
+            (ln,) = struct.unpack_from("<I", data, off)
+            off += 4
+            comps.append(unpack_leaf(data[off:off + ln], spec))
+            off += ln
+        return jax.tree.unflatten(self.treedef, comps)
+
+    def measured_bits(self, compressed: PyTree) -> int:
+        """Exact payload bits (pre byte-padding, no framing) — the measured
+        counterpart of Eq. 1's analytic ``nbits`` sum."""
+        total = 0
+        for comp, spec in zip(self._leaves(compressed), self.specs):
+            _, bits = pack_leaf(_to_numpy(comp), spec)
+            total += bits
+        return total
+
+    def packed_bytes(self, compressed: PyTree) -> int:
+        return len(self.pack(compressed))
+
+
+def _to_numpy(comp: LeafCompressed) -> LeafCompressed:
+    return LeafCompressed(*(np.asarray(x) for x in comp))
+
+
+def wire_for(
+    resolved: ResolvedPolicy,
+    like: PyTree,
+    global_rate: float = 1.0,
+    round_idx: int = 0,
+) -> Wire:
+    """Build the Wire for a resolved policy over a concrete pytree."""
+    leaves = resolved._leaves_of(like)
+    rates = resolved.rates(global_rate, round_idx)
+    specs = tuple(
+        spec_for(plan.path, tuple(getattr(leaf, "shape", np.shape(leaf))), plan.codec, p)
+        for plan, leaf, p in zip(resolved.plans, leaves, rates)
+    )
+    return Wire(specs=specs, treedef=resolved.treedef)

@@ -24,8 +24,15 @@ Design (DESIGN.md §4):
   the client axis of the full ΔW — lowers to the dense all-reduce that the
   paper's Eq. 1 baseline counts.
 
-Bit accounting is static (shapes and sparsity are compile-time): per leaf,
-``L·S_shards·(k_loc·b̄_pos(p) + 32)`` wire bits per client per round.
+* **Per-leaf policies** (DESIGN.md §3): an optional
+  :class:`~repro.core.policy.CompressionPolicy` resolves every param leaf
+  to one of this backend's exchange kernels (sparse SBC / dense all-reduce
+  / skip) with its own sparsity rate, so DGC-style "dense biases + 0.1%
+  matrices" recipes lower to a mixed collective schedule.
+
+Bit accounting is static (shapes and per-leaf rates are compile-time): per
+sparse leaf, ``L·S_shards·(k_loc·b̄_pos(p_leaf) + 32)`` wire bits per client
+per round; dense leaves count 32 bits/entry; skipped leaves count 0.
 """
 from __future__ import annotations
 
@@ -52,7 +59,9 @@ except ImportError:  # pragma: no cover
                           check_rep=False)
 
 from repro.configs.base import ModelConfig
+from repro.core.codec import Codec, make_codec
 from repro.core.golomb import expected_position_bits
+from repro.core.policy import CompressionPolicy, path_str
 from repro.models import hints
 from repro.models.model import Model, build_model
 from repro.optim.optimizers import get_optimizer
@@ -191,12 +200,32 @@ class DistTrainFns(NamedTuple):
     bits_dense: float
 
 
+def _dist_leaf_mode(codec: Codec) -> str:
+    """Map a codec onto the shard_map exchange kernels this backend has.
+
+    'sparse' → per-shard SBC + (idx, μ) all-gather; 'dense' → pmean
+    all-reduce; 'skip' → no traffic.  Other codec compositions have no
+    TPU-native exchange kernel yet and fail loudly.
+    """
+    if codec.skip:
+        return "skip"
+    if codec.selector.dense and codec.quantizer.name == "identity":
+        return "dense"
+    if codec.spec == "topk_signed|binarize|golomb":
+        return "sparse"
+    raise NotImplementedError(
+        f"dist backend has no exchange kernel for codec {codec.spec!r}; "
+        "supported: sbc (topk_signed|binarize|golomb), dense32, skip"
+    )
+
+
 def make_dist_train(
     cfg: ModelConfig,
     mesh: Mesh,
     *,
     compressor: str = "sbc",
     sparsity: float = 0.001,
+    policy: Optional[CompressionPolicy] = None,
     model: Optional[Model] = None,
     opts: frozenset = frozenset(),
 ) -> DistTrainFns:
@@ -204,6 +233,12 @@ def make_dist_train(
 
     State = {'params', 'opt', 'residual'}; batch has a leading client axis
     of size ``client_topology(cfg, mesh)[0]``.
+
+    ``policy`` — optional per-leaf :class:`CompressionPolicy` (path-regex
+    rules; DESIGN.md §3).  Each leaf resolves to one of this backend's
+    exchange kernels (see :func:`_dist_leaf_mode`) with its own sparsity
+    rate.  Without a policy, ``compressor`` picks one codec for every leaf
+    ("sbc" or any dense codec name), matching the seed behavior.
 
     ``opts`` — §Perf beyond-baseline toggles (baseline = empty set):
       'expert_parallel'  experts shard over 'data', dispatch follows
@@ -216,7 +251,9 @@ def make_dist_train(
     mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     opt_kw = {} if cfg.local_opt == "sgd" else {"state_dtype": cfg.residual_dtype}
     opt = get_optimizer(cfg.local_opt, **opt_kw)
-    sparse = compressor == "sbc"
+    if policy is None:
+        default = "sbc" if compressor == "sbc" else "dense"
+        policy = CompressionPolicy.single(make_codec(default), name=compressor)
     # the cfg's dispatch mode decides the MoE weight sharding rules
     # ('flat_ep'/'grouped' → EP rules; 'flat_fsdp' → baseline fsdp rules)
     ep_rules = cfg.moe_dispatch in ("flat_ep", "grouped")
@@ -233,6 +270,22 @@ def make_dist_train(
     flat_specs = jax.tree.leaves(p_specs, is_leaf=lambda s: isinstance(s, P))
     lead = _lead_spec(client_axes)
     flat_r_specs = [P(lead, *s) for s in flat_specs]
+
+    # ---- per-leaf policy resolution (codec + sparsity rate by path regex).
+    # Rates are compile-time constants here: a per-round schedule would be
+    # silently frozen at its round-0 value, so reject it loudly (re-build
+    # the train fns per rate change, or use the vmap trainer instead).
+    plans = [policy.plan_for(path_str(path)) for path, _ in flat_p]
+    scheduled = [pl.path for pl in plans if pl.schedule is not None]
+    if scheduled:
+        raise NotImplementedError(
+            "make_dist_train compiles per-leaf sparsity rates statically; "
+            f"policy rules attach per-round schedules to {scheduled[:3]}… — "
+            "rebuild the train fns when the rate changes, or pin a fixed "
+            "per-leaf `sparsity` in the rule"
+        )
+    modes = [_dist_leaf_mode(pl.codec) for pl in plans]
+    leaf_rates = [pl.rate(sparsity, 0) for pl in plans]
 
     def stack_c(tree):
         return jax.tree.map(
@@ -257,14 +310,21 @@ def make_dist_train(
     ns = lambda spec: NamedSharding(mesh, spec)
     state_shardings = jax.tree.map(ns, state_specs, is_leaf=lambda s: isinstance(s, P))
 
-    # ---- static Eq. 1 bit accounting per round per client
-    bits_sparse = bits_dense = 0.0
-    for (path, leaf), spec, is_scan in zip(flat_p, flat_specs, scanned):
+    # ---- static Eq. 1 bit accounting per round per client (per-leaf codec)
+    bits_policy = bits_dense = 0.0
+    for (path, leaf), spec, is_scan, mode, p_leaf in zip(
+        flat_p, flat_specs, scanned, modes, leaf_rates
+    ):
         L = leaf.shape[0] if is_scan and leaf.ndim > 1 else 1
         shards = _shards_of(spec, mesh_sizes)
         n_loc = max(1, leaf.size // (L * shards))
-        k_loc = max(1, min(n_loc, int(round(sparsity * n_loc))))
-        bits_sparse += L * shards * (k_loc * expected_position_bits(sparsity) + 32.0)
+        if mode == "sparse":
+            k_loc = max(1, min(n_loc, int(round(p_leaf * n_loc))))
+            bits_policy += L * shards * (
+                k_loc * expected_position_bits(p_leaf) + 32.0
+            )
+        elif mode == "dense":
+            bits_policy += 32.0 * leaf.size
         bits_dense += 32.0 * leaf.size
 
     # ---- batch shardings
@@ -307,20 +367,25 @@ def make_dist_train(
         need_mask = cfg.local_opt != "sgd"  # momentum masking needs ΔW*_i
 
         def exchange(*leaves):
-            """Per-leaf: compress own shard, exchange, and emit
-            (mean ΔW, NEW residual = acc − own) — own itself never leaves
-            the shard_map unless momentum masking needs it (§Perf B9)."""
+            """Per-leaf: compress own shard with the LEAF'S codec, exchange,
+            and emit (mean ΔW, NEW residual = acc − own) — own itself never
+            leaves the shard_map unless momentum masking needs it (§Perf B9)."""
             means, residuals, owns = [], [], []
-            for leaf, is_scan in zip(leaves, scanned):
+            for leaf, is_scan, mode, p_leaf in zip(
+                leaves, scanned, modes, leaf_rates
+            ):
                 body = leaf[0]  # client dim is locally 1 (sharded over clients)
                 L = body.shape[0] if is_scan and body.ndim > 1 else 1
                 flat = body.reshape(L, -1)
-                if sparse:
-                    dense, own = _sbc_local(flat, sparsity, client_axes, n_clients,
+                if mode == "sparse":
+                    dense, own = _sbc_local(flat, p_leaf, client_axes, n_clients,
                                             out_dtype=leaf.dtype)
-                else:
+                elif mode == "dense":
                     dense, own = _dense_local(flat.astype(jnp.float32),
                                               client_axes, n_clients)
+                else:  # skip: no traffic; the residual keeps the full update
+                    dense = jnp.zeros_like(flat, dtype=leaf.dtype)
+                    own = dense
                 new_res = (flat.astype(jnp.float32) - own.astype(jnp.float32)).astype(
                     cfg.residual_dtype
                 )
@@ -377,7 +442,7 @@ def make_dist_train(
     )
     return DistTrainFns(
         jitted, init_state, state_shardings, batch_shardings, a_state,
-        bits_per_client=bits_sparse if sparse else bits_dense,
+        bits_per_client=bits_policy,
         bits_dense=bits_dense,
     )
 

@@ -9,11 +9,21 @@ sized by ``--preset``:
   lm-100m        ~100M-param decoder LM for a few hundred rounds
   <arch id>      a reduced config of any assigned architecture
 
+Per-leaf policies (DESIGN.md §3): ``--dense-pattern`` / ``--skip-pattern``
+wrap the chosen compressor in a :class:`CompressionPolicy` so matched
+leaves (by path regex) ride dense / are skipped, and ``--measure-wire``
+packs client 0's update to real bytes every round next to the analytic
+Eq. 1 accounting.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --preset lm-100m \
       --compressor sbc --delay 10 --sparsity 0.01 --rounds 200
   PYTHONPATH=src python -m repro.launch.train --preset paper-lenet \
       --compressor topk --sparsity 0.001 --rounds 100
+  PYTHONPATH=src python -m repro.launch.train --preset paper-lstm \
+      --compressor sbc --sparsity 0.001 \
+      --dense-pattern '(^|/)(bias|scale|norm[^/]*)(/|$)' --measure-wire
+  PYTHONPATH=src python -m repro.launch.train --compressor dgc_policy ...
 """
 from __future__ import annotations
 
@@ -28,7 +38,8 @@ import jax.numpy as jnp
 
 from repro.checkpoint import save_pytree
 from repro.configs.base import ASSIGNED_ARCHS, ModelConfig, get_config, reduced
-from repro.core.api import get_compressor
+from repro.core.api import CompressionPolicy, PolicyRule, get_compressor
+from repro.core.baselines import dgc_policy
 from repro.data import client_batches, make_classification_task, make_lm_task
 from repro.models.model import build_model
 from repro.optim import get_optimizer
@@ -109,18 +120,44 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
     ap.add_argument("--history", default=None, help="metrics JSON path")
+    ap.add_argument("--dense-pattern", default=None,
+                    help="path regex: matched leaves ride dense (DGC-style)")
+    ap.add_argument("--skip-pattern", default=None,
+                    help="path regex: matched leaves are never transmitted")
+    ap.add_argument("--measure-wire", action="store_true",
+                    help="pack client 0's update to real bytes every round")
+    ap.add_argument("--print-policy", action="store_true",
+                    help="print the per-leaf codec resolution and exit")
     args = ap.parse_args(argv)
 
     cfg, task = build_preset(args.preset, batch=args.batch, seq_len=args.seq_len)
     model = build_model(cfg)
     lr = args.lr if args.lr is not None else cfg.base_lr
+    compressor = get_compressor(args.compressor)
+    if args.dense_pattern or args.skip_pattern:
+        rules = ()
+        if args.skip_pattern:
+            rules += (PolicyRule(args.skip_pattern, codec="skip"),)
+        if args.dense_pattern:
+            rules += (PolicyRule(args.dense_pattern, codec="dense32"),)
+        # CLI rules take precedence but keep any rules the compressor's own
+        # policy already carries (e.g. dgc_policy's warm-up + dense biases)
+        compressor = CompressionPolicy(
+            default=compressor.codec,
+            rules=rules + compressor.policy.rules,
+            name=args.compressor + "+rules",
+        )
     trainer = DSGDTrainer(
         model=model,
-        compressor=get_compressor(args.compressor),
+        compressor=compressor,
         optimizer=get_optimizer(cfg.local_opt),
         n_clients=args.clients,
         lr=lr_schedule(lr),
     )
+    if args.print_policy:
+        a_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        print(trainer.resolved(a_params).describe())
+        return {}
     batch_fn = client_batches(task, args.clients, args.delay)
 
     n_params = sum(
@@ -135,6 +172,7 @@ def main(argv=None):
     state, hist = trainer.fit(
         jax.random.PRNGKey(0), batch_fn, n_rounds=args.rounds,
         n_delay=args.delay, sparsity=args.sparsity, log_every=args.log_every,
+        measure_wire=args.measure_wire,
     )
     dt = time.time() - t0
     print(
@@ -142,6 +180,11 @@ def main(argv=None):
         f"upload {hist['total_upload_bits']/8e6:.2f} MB/client  "
         f"compression ×{hist['compression_rate']:.0f}"
     )
+    if args.measure_wire:
+        print(
+            f"measured wire: {hist['measured_total_bits']/8e6:.2f} MB/client "
+            f"(analytic {hist['total_upload_bits']/8e6:.2f} MB)"
+        )
     if args.save:
         save_pytree(args.save, state.params)
         print(f"saved params to {args.save}")

@@ -6,10 +6,18 @@ One *communication round* (the jit unit):
   2. runs ``n_delay`` local optimizer steps on its own microbatches (l.10,
      ``SGD_n``; n_delay > 1 = Federated-Averaging-style communication delay)
   3. ΔW_i = R_i + (W_i' − W);  ΔW*_i = compress(ΔW_i);  R_i ← ΔW_i − ΔW*_i
-     (l.10-12 — residual add + error feedback live in Compressor.compress)
+     (l.10-12 — residual add + error feedback live in the policy engine,
+     :meth:`repro.core.policy.ResolvedPolicy.compress`)
   4. exchange: ΔW ← mean_i ΔW*_i;  W ← W + ΔW                      (l.17-19)
   5. momentum masking (supplement A): client momentum zeroed at transmitted
      coordinates.
+
+Compression is a :class:`~repro.core.api.Compressor` (single codec) or a
+:class:`~repro.core.policy.CompressionPolicy` (per-leaf codecs + schedules
+by path regex — dense biases, warm-up matrices, skipped leaves).  Per-leaf
+sparsity rates are resolved OUTSIDE jit each round and enter ``round_step``
+as a static tuple, so shapes stay fixed; passing a plain float keeps the
+seed behavior (one global rate, rule overrides win).
 
 Clients are a leading vmap axis, so per-client weight-updates exist as real
 tensors *before* any reduction — the thing that makes per-client compression
@@ -20,18 +28,22 @@ CPU-scale paper reproduction and, wrapped in shardings by
 Bit accounting: ``metrics['bits_per_client']`` is the analytic wire size
 (Eq. 1 with Golomb position bits for SBC) of one client's upload this round;
 ``bits_dense`` is the 32-bit dense equivalent, so compression rate =
-``delay · bits_dense / bits_per_client`` cumulated over rounds.
+``delay · bits_dense / bits_per_client`` cumulated over rounds.  With
+``fit(..., measure_wire=True)`` client 0's update is additionally packed to
+real bytes every round (:mod:`repro.core.wire`) and the *measured* sizes are
+recorded next to the analytic ones.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.api import Compressor, CompressorState
+from repro.core.policy import CompressionPolicy, ResolvedPolicy
 from repro.models.model import Model
 from repro.optim.optimizers import Optimizer
 
@@ -48,11 +60,24 @@ class TrainState(NamedTuple):
 @dataclasses.dataclass(eq=False)  # id-hash → usable as a jit static arg
 class DSGDTrainer:
     model: Model
-    compressor: Compressor
+    compressor: Union[Compressor, CompressionPolicy]
     optimizer: Optimizer
     n_clients: int
     lr: Callable[[jax.Array], jax.Array]  # lr(iteration) schedule
     residual_dtype: Any = jnp.float32
+
+    def __post_init__(self) -> None:
+        if isinstance(self.compressor, CompressionPolicy):
+            self.compressor = Compressor.from_policy(
+                self.compressor.name, self.compressor
+            )
+        self._resolved: Optional[ResolvedPolicy] = None
+
+    def resolved(self, params: PyTree) -> ResolvedPolicy:
+        """The compressor's policy bound to this model's param structure."""
+        if self._resolved is None:
+            self._resolved = self.compressor.resolve(params)
+        return self._resolved
 
     # ------------------------------------------------------------------ init
 
@@ -78,15 +103,19 @@ class DSGDTrainer:
 
     # ------------------------------------------------------------- one round
 
-    @partial(jax.jit, static_argnames=("self", "n_delay", "sparsity"))
+    @partial(
+        jax.jit,
+        static_argnames=("self", "n_delay", "sparsity", "return_compressed"),
+    )
     def round_step(
         self,
         state: TrainState,
         batch: PyTree,  # (clients, n_delay, per_client_batch, ...)
         *,
         n_delay: int,
-        sparsity: float,
-    ) -> tuple[TrainState, dict]:
+        sparsity: Union[float, Tuple[float, ...]],  # global rate | per-leaf rates
+        return_compressed: bool = False,
+    ) -> tuple:
         params = state.params
         iteration = state.round * n_delay  # forward-backward passes so far
 
@@ -119,9 +148,11 @@ class DSGDTrainer:
                 delta, comp_state, sparsity
             )
             bits = self.compressor.total_bits(ctree)
-            return dense, new_state, bits
+            return ctree, dense, new_state, bits
 
-        dense, comp_state, bits = jax.vmap(compress_one)(deltas, state.comp_state)
+        ctrees, dense, comp_state, bits = jax.vmap(compress_one)(
+            deltas, state.comp_state
+        )
 
         # ---- exchange + server update (Alg. 1 l.17-19)
         mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), dense)
@@ -143,6 +174,10 @@ class DSGDTrainer:
             "update_norm": _tree_norm(mean_delta),
         }
         new_state = TrainState(new_params, opt_states, comp_state, state.round + 1)
+        if return_compressed:
+            # client 0's compressed tree, for host-side wire measurement
+            comp0 = jax.tree.map(lambda x: x[0], ctrees)
+            return new_state, metrics, comp0
         return new_state, metrics
 
     # --------------------------------------------------------------- fitting
@@ -158,15 +193,31 @@ class DSGDTrainer:
         eval_fn: Optional[Callable[[PyTree], dict]] = None,
         eval_every: int = 0,
         log_every: int = 0,
-    ) -> tuple[TrainState, dict]:
+        measure_wire: bool = False,
+    ) -> tuple:
         """Run ``n_rounds`` communication rounds; returns (state, history)."""
         state = self.init(rng)
-        hist: dict[str, list] = {"round": [], "loss": [], "bits_per_client": [], "eval": []}
+        resolved = self.resolved(state.params)
+        hist: dict = {"round": [], "loss": [], "bits_per_client": [], "eval": []}
+        if measure_wire:
+            from repro.core.wire import wire_for
+
+            hist["measured_bits_per_client"] = []
         total_bits = 0.0
         for r in range(n_rounds):
-            state, m = self.round_step(
-                state, batch_fn(r), n_delay=n_delay, sparsity=sparsity
+            rates = resolved.rates(sparsity, r)
+            step_out = self.round_step(
+                state, batch_fn(r), n_delay=n_delay, sparsity=rates,
+                return_compressed=measure_wire,
             )
+            if measure_wire:
+                state, m, comp0 = step_out
+                w = wire_for(resolved, state.params, sparsity, r)
+                hist["measured_bits_per_client"].append(
+                    float(w.measured_bits(comp0))
+                )
+            else:
+                state, m = step_out
             total_bits += float(m["bits_per_client"])
             hist["round"].append(r)
             hist["loss"].append(float(m["loss"]))
@@ -182,6 +233,8 @@ class DSGDTrainer:
         n_params = sum(x.size for x in jax.tree.leaves(state.params))
         hist["dense_total_bits"] = 32.0 * n_params * n_rounds * n_delay
         hist["compression_rate"] = hist["dense_total_bits"] / max(total_bits, 1.0)
+        if measure_wire and hist["measured_bits_per_client"]:
+            hist["measured_total_bits"] = sum(hist["measured_bits_per_client"])
         return state, hist
 
 

@@ -1,0 +1,88 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+``hypothesis`` is an *optional* dev dependency (see requirements-dev.txt):
+when present, property tests explore the full strategy space; when absent,
+this shim runs each ``@given`` test over a small fixed grid of example
+values drawn from the same strategies, so tier-1 stays green and the
+properties still get exercised on representative inputs.
+
+Only the strategy surface this repo's tests use is implemented:
+``st.integers``, ``st.sampled_from``, ``st.lists``.
+
+Usage (at the top of a test module):
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:  # optional dev dep — fall back to a fixed grid
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+
+import itertools
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+    @staticmethod
+    def integers(min_value, max_value) -> _Strategy:
+        lo, hi = int(min_value), int(max_value)
+        mid = (lo + hi) // 2
+        # dedupe while preserving order (tiny ranges collapse)
+        return _Strategy(dict.fromkeys([lo, mid, hi]))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        return _Strategy(elements)
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10, unique=False) -> _Strategy:
+        base = elements.examples
+        pool = list(dict.fromkeys(base)) if unique else list(base)
+        # three shapes: smallest, a mid-sized mix, and the largest we can
+        # build from the element examples (capped at max_size)
+        sizes = sorted({max(min_size, 1), min(max_size, max(min_size, 3)),
+                        min(max_size, len(pool))})
+        out = []
+        for s in sizes:
+            if s == 0:
+                out.append([])
+                continue
+            if unique:
+                if len(pool) < s:
+                    continue
+                out.append(pool[:s])
+            else:
+                out.append([base[i % len(base)] for i in range(s)])
+        return _Strategy(out or [[]])
+
+
+def given(**strategies):
+    names = sorted(strategies)
+    grids = [strategies[n].examples for n in names]
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            # cap the cartesian product so fallback runs stay fast
+            for combo in itertools.islice(itertools.product(*grids), 24):
+                fn(*args, **dict(zip(names, combo)), **kwargs)
+
+        # NOT functools.wraps: pytest must see the wrapper's bare (*args)
+        # signature, or it would treat the strategy params as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco

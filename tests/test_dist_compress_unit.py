@@ -10,8 +10,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dev dep — fixed-grid fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.golomb import expected_position_bits
 from repro.kernels import ops

@@ -5,8 +5,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dev dep — fixed-grid fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import golomb
 

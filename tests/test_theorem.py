@@ -9,8 +9,11 @@ AND for the top-k union-of-subspaces used in practice.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dev dep — fixed-grid fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import residual
 
