@@ -8,8 +8,10 @@
   fig5_convergence    Fig. 5-8  loss vs iterations and vs transferred bits
   roofline_table      §Roofline aggregation of dry-run records (if present)
   wire_throughput     §Wire    pack/unpack microbench (DESIGN.md §5)
+  fed_round           §Fed     vmapped cohort runner vs legacy loop (§9)
 
-``--smoke`` runs only the fast, training-free benchmarks (what CI runs).
+``--smoke`` runs only the fast, training-free benchmarks (what CI runs;
+CI additionally smoke-runs ``fed_round --smoke`` and the fed launcher).
 """
 from __future__ import annotations
 
@@ -29,9 +31,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (fig3_sparsity_grid, fig4_stagewise, fig5_convergence,
-                            roofline_table, table1_rates, table2_accuracy,
-                            wire_throughput)
+    from benchmarks import (fed_round, fig3_sparsity_grid, fig4_stagewise,
+                            fig5_convergence, roofline_table, table1_rates,
+                            table2_accuracy, wire_throughput)
 
     suite = {
         "table1_rates": table1_rates.run,
@@ -41,6 +43,7 @@ def main(argv=None):
         "fig5_convergence": fig5_convergence.run,
         "roofline_table": roofline_table.run,
         "wire_throughput": wire_throughput.run,
+        "fed_round": fed_round.run,
     }
     names = [args.only] if args.only else list(SMOKE) if args.smoke else list(suite)
     failures = []

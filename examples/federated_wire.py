@@ -1,99 +1,74 @@
-"""Federated-learning wire simulation — the paper's privacy-preserving
-setting (§I): clients exchange ONLY packed byte buffers (real bitstreams,
-not in-process arrays) with a parameter server.
+"""Federated-learning wire demo — the paper's privacy-preserving setting
+(§I): clients exchange ONLY packed SBW1 byte buffers with a parameter
+server, in BOTH directions.
 
-Built on the staged codec pipeline (DESIGN.md):
+This is now a thin wrapper over the federated orchestration subsystem
+(:mod:`repro.fed`, DESIGN.md §9):
 
-  * a per-leaf :class:`CompressionPolicy` sends biases/norm parameters
-    dense (they are tiny and sparsification hurts them most — the DGC
-    recipe) and SBC-compresses every matrix at 1%,
-  * each client's update is serialized by :class:`repro.core.wire.Wire`
-    into ONE framed buffer — Golomb position bitstreams (Alg. 3), one
-    float32 mean per sparse tensor, raw float32 for the dense leaves,
-  * the server holds the same Wire contract (model config + policy are
-    shared), unpacks every client's buffer (Alg. 4), averages, and
-    broadcasts new weights.
+  * :class:`ParameterServer` unpacks every client's framed buffer (Alg. 4),
+    aggregates, keeps a server-side error-feedback residual, and compresses
+    the downstream broadcast through the same per-leaf policy machinery,
+  * :class:`ClientPool` runs each sampled cohort as ONE vmapped/lax.scan
+    step (no per-client Python loop) with per-client residuals + RNG,
+  * :class:`RoundScheduler` drives the rounds and meters every byte both
+    ways against the analytic Eq. 1/Eq. 5 prediction.
+
+Richer knobs (async staleness, non-IID shards, heterogeneous client
+profiles, weighted aggregation) live in the CLI:
+
+  PYTHONPATH=src python -m repro.launch.fed --help
 
 Run:  PYTHONPATH=src python examples/federated_wire.py
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.api import CompressionPolicy, PolicyRule
 from repro.core.codec import make_codec
-from repro.core.wire import wire_for
+from repro.core.policy import DENSE_SMALL_PATTERN
 from repro.data import make_lm_task
+from repro.fed import ClientPool, ClientProfile, ParameterServer, RoundScheduler
 from repro.models.model import build_model
 from repro.optim import get_optimizer
 
-N_CLIENTS, DELAY, SPARSITY, ROUNDS = 4, 5, 0.01, 10
+N_CLIENTS, COHORT, DELAY, SPARSITY, DOWN_SPARSITY, ROUNDS = 4, 4, 5, 0.01, 0.05, 10
 
 cfg = ModelConfig(name="fed-tiny", family="decoder", n_layers=2, d_model=128,
                   n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=256,
                   dtype=jnp.float32)
 model = build_model(cfg)
 task = make_lm_task(vocab=256, batch=8, seq_len=64, temperature=0.5)
-opt = get_optimizer("momentum")
 
 policy = CompressionPolicy(
     default=make_codec("sbc"),
-    rules=(PolicyRule(r"(^|/)(bias|scale|norm[^/]*)(/|$)", codec="dense32"),),
+    rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),),
     name="sbc+dense-small",
 )
 
-rng = jax.random.PRNGKey(0)
-server_w = model.init(rng)
-resolved = policy.resolve(server_w)
-wire = wire_for(resolved, server_w, SPARSITY)  # both ends share this contract
-client_state = [resolved.init_state(server_w) for _ in range(N_CLIENTS)]
-client_opt = [opt.init(server_w) for _ in range(N_CLIENTS)]
-rates = resolved.rates(SPARSITY)
+server = ParameterServer(
+    params=model.init(jax.random.PRNGKey(0)),
+    up_policy=policy,            # shared wire contract with the clients
+    down_sparsity=DOWN_SPARSITY,  # the broadcast is compressed too
+)
+pool = ClientPool(
+    model=model, optimizer=get_optimizer("momentum"), policy=policy,
+    task=task, n_clients=N_CLIENTS, lr=lambda it: 0.05,
+    profiles=(ClientProfile(delay=DELAY, sparsity=SPARSITY),),
+)
+sched = RoundScheduler(server=server, pool=pool, cohort_size=COHORT)
 
-print(resolved.describe())
-step_fn = jax.jit(jax.value_and_grad(model.loss_fn))
+print(pool.resolved(server.params).describe())
+hist = sched.run(ROUNDS, log_every=1)
+sched.ledger.reconcile(rel=0.1)
 
-n_params = sum(x.size for x in jax.tree.leaves(server_w))
-total_wire_bytes = 0
-for r in range(ROUNDS):
-    uploads, losses = [], []
-    for c in range(N_CLIENTS):
-        # --- client: delay-n local training from the server weights
-        w, ostate = server_w, client_opt[c]
-        for d in range(DELAY):
-            loss, g = step_fn(w, task.sample(r * DELAY + d, c))
-            w, ostate = opt.apply(ostate, g, w, 0.05, jnp.asarray(r * DELAY + d))
-        client_opt[c] = ostate
-        losses.append(float(loss))
-        delta = jax.tree.map(lambda a, b: a - b, w, server_w)
-
-        # --- compress (per-leaf policy + error feedback) + pack to bytes
-        ctree, dense, client_state[c] = resolved.compress(
-            delta, client_state[c], rates
-        )
-        blob = wire.pack(ctree)
-        uploads.append(blob)
-        total_wire_bytes += len(blob)
-
-    # --- server: decode every client's byte buffer, average, apply
-    mean_update = None
-    for blob in uploads:
-        update = wire.unpack(blob)  # dense numpy pytree
-        if mean_update is None:
-            mean_update = update
-        else:
-            mean_update = jax.tree.map(np.add, mean_update, update)
-    server_w = jax.tree.map(
-        lambda p, u: p + jnp.asarray(u / N_CLIENTS, p.dtype),
-        server_w, mean_update,
-    )
-
-    dense_bytes = 4 * n_params * N_CLIENTS * (r + 1) * DELAY
-    print(f"round {r+1:2d}: mean client loss {np.mean(losses):.4f}  "
-          f"wire so far {total_wire_bytes/1e3:.1f} kB "
-          f"(dense DSGD would be {dense_bytes/1e6:.1f} MB → "
-          f"×{dense_bytes/max(total_wire_bytes,1):.0f})")
-
-print("\nfederated run complete — every byte that crossed the 'network' was a "
-      "real packed SBW1 buffer")
+n_params = sum(x.size for x in jax.tree.leaves(server.params))
+t = sched.ledger.totals()
+dense_up = 4 * n_params * N_CLIENTS * ROUNDS * DELAY  # dense DSGD, per step
+print(
+    f"\nwire totals: up {t['up_bytes']/1e3:.1f} kB, down {t['down_bytes']/1e3:.1f} kB "
+    f"(dense DSGD upload would be {dense_up/1e6:.1f} MB → "
+    f"×{dense_up/max(t['up_bytes'],1):.0f})"
+)
+print("every byte that crossed the 'network' was a real packed SBW1 buffer, "
+      "both directions, and the ledger reconciles with Eq. 1/Eq. 5")

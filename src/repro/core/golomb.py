@@ -18,6 +18,7 @@ a terminating 0, then b* binary bits of r = (d-1) % 2^b*.
 """
 from __future__ import annotations
 
+import bisect
 import math
 
 import numpy as np
@@ -128,24 +129,41 @@ def decode_positions(msg: np.ndarray, p: float) -> np.ndarray:
 
     Per-codeword parse: a codeword starts with a unary run of ones, so the
     first 0 at/after the cursor is its terminator (zeros inside remainder
-    fields are skipped, never scanned).  One searchsorted per codeword.
+    fields are skipped, never scanned).  The remainder value after EVERY
+    zero is precomputed with one vectorized matmul, so the sequential scan
+    touches only Python ints + ``bisect`` — this is the parameter-server
+    hot path (one decode per sparse leaf per client upload).
     """
     bstar = golomb_bstar(p)
     msg = np.asarray(msg, dtype=np.uint8)
     n = msg.shape[0]
     zeros = np.nonzero(msg == 0)[0]
-    weights = 1 << np.arange(bstar - 1, -1, -1) if bstar else None
+    if zeros.size == 0:
+        return np.zeros((0,), dtype=np.int64)
+    if bstar:
+        # remainder bits following each candidate terminator, vectorized
+        idx = zeros[:, None] + 1 + np.arange(bstar)[None, :]
+        bits = np.where(idx < n, msg[np.minimum(idx, n - 1)], 0)
+        rems = (bits @ (1 << np.arange(bstar - 1, -1, -1))).tolist()
+    else:
+        rems = [0] * zeros.size
+    zlist = zeros.tolist()
+    nz = len(zlist)
 
     out: list[int] = []
     c, j, zi = 0, -1, 0
     while c < n:
-        zi = np.searchsorted(zeros, c)
-        if zi >= zeros.shape[0]:
+        zi = bisect.bisect_left(zlist, c, zi)
+        if zi >= nz:
             break  # trailing ones without terminator: not a codeword
-        z = int(zeros[zi])
-        q = z - c
-        r = int(msg[z + 1 : z + 1 + bstar] @ weights) if bstar else 0
-        j = j + q * (1 << bstar) + r + 1
+        z = zlist[zi]
+        if z + bstar >= n and bstar:
+            # remainder field runs past the stream: truncated/corrupt buffer
+            raise ValueError(
+                f"truncated Golomb stream: codeword at bit {c} needs "
+                f"{bstar} remainder bits past position {z}"
+            )
+        j = j + ((z - c) << bstar) + rems[zi] + 1
         out.append(j)
         c = z + 1 + bstar
     return np.asarray(out, dtype=np.int64)

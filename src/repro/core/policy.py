@@ -30,6 +30,10 @@ from repro.core.stages import LeafCompressed, decompress_leaf
 
 PyTree = Any
 
+# The DGC recipe's "small leaves ride dense" path pattern (biases, norm
+# scales) — the one policy rule every launcher/example/benchmark shares.
+DENSE_SMALL_PATTERN = r"(^|/)(bias|scale|norm[^/]*)(/|$)"
+
 
 class CompressorState(NamedTuple):
     """Per-client compressor state threaded through training.

@@ -377,17 +377,28 @@ class Wire:
 
     def pack(self, compressed: PyTree) -> bytes:
         """Compressed pytree → one framed byte buffer."""
+        return self.pack_with_bits(compressed)[0]
+
+    def pack_with_bits(self, compressed: PyTree) -> Tuple[bytes, int]:
+        """Pack and return (buffer, exact payload bits) in one pass — the
+        bits are what ``measured_bits`` reports, without re-serializing."""
         leaves = self._leaves(compressed)
         out = [MAGIC, struct.pack("<I", len(leaves))]
+        total_bits = 0
         for comp, spec in zip(leaves, self.specs):
-            payload, _ = pack_leaf(_to_numpy(comp), spec)
+            payload, bits = pack_leaf(_to_numpy(comp), spec)
+            total_bits += bits
             out.append(struct.pack("<I", len(payload)))
             out.append(payload)
-        return b"".join(out)
+        return b"".join(out), total_bits
 
     def unpack(self, data: bytes) -> PyTree:
         """Byte buffer → dense update pytree (numpy float32 leaves)."""
-        comps = self.unpack_compressed(data)
+        return self.dense_of(self.unpack_compressed(data))
+
+    def dense_of(self, comps: PyTree) -> PyTree:
+        """Dense reconstruction of an already-unpacked compressed pytree
+        (lets a server decode once and reuse the parse for bit accounting)."""
         dense = [
             leaf_dense(c, s) for c, s in zip(self._leaves(comps), self.specs)
         ]

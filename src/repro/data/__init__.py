@@ -2,11 +2,13 @@ from repro.data.synthetic import (
     client_batches,
     make_classification_task,
     make_lm_task,
+    make_non_iid_lm_task,
     split_among_clients,
 )
 
 __all__ = [
     "make_lm_task",
+    "make_non_iid_lm_task",
     "make_classification_task",
     "split_among_clients",
     "client_batches",

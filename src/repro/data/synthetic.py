@@ -31,13 +31,21 @@ PyTree = dict
 
 @dataclasses.dataclass(frozen=True)
 class Task:
-    """A data source: ``sample(step, client) -> dict`` plus metadata."""
+    """A data source: ``sample(step, client) -> dict`` plus metadata.
+
+    ``sample_many(steps, clients)``, when present, generates the batches of
+    many (step, client) pairs in ONE jitted dispatch with a leading pair
+    axis — byte-identical streams to per-pair ``sample`` calls (same
+    fold-in key construction), but without O(pairs) Python dispatch
+    overhead.  The federated cohort runner and ``client_batches`` prefer it.
+    """
 
     name: str
     sample: Callable[[int, int], PyTree]  # (step, client) -> batch dict
     vocab_size: int = 0
     n_classes: int = 0
     entropy_floor: float = 0.0  # achievable loss (nats/token) for LM tasks
+    sample_many: Optional[Callable] = None  # (steps[N], clients[N]) -> dict
 
 
 # ------------------------------------------------------------------ LM tasks
@@ -96,15 +104,106 @@ def make_lm_task(
 
     gen_tokens = jax.jit(gen_tokens)
 
+    def _key(step, client):
+        return jax.random.fold_in(jax.random.fold_in(base, 1000 + client), step)
+
     def sample(step: int, client: int) -> PyTree:
-        rng = jax.random.fold_in(jax.random.fold_in(base, 1000 + client), step)
+        rng = _key(step, client)
         toks = gen_tokens(rng)  # (B, S+1)
         out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
         if extra_fields is not None:
             out.update(extra_fields(rng))
         return out
 
-    return Task(name=f"lm_{kind}", sample=sample, vocab_size=vocab, entropy_floor=floor)
+    @jax.jit
+    def _many(steps: jax.Array, clients: jax.Array) -> PyTree:
+        rngs = jax.vmap(_key)(steps, clients)
+        toks = jax.vmap(gen_tokens)(rngs)  # (N, B, S+1)
+        out = {"tokens": toks[:, :, :-1], "labels": toks[:, :, 1:]}
+        if extra_fields is not None:
+            out.update(jax.vmap(extra_fields)(rngs))
+        return out
+
+    def sample_many(steps, clients) -> PyTree:
+        return _many(jnp.asarray(steps, jnp.int32), jnp.asarray(clients, jnp.int32))
+
+    return Task(name=f"lm_{kind}", sample=sample, vocab_size=vocab,
+                entropy_floor=floor, sample_many=sample_many)
+
+
+# ----------------------------------------------------------- non-IID shards
+
+
+def make_non_iid_lm_task(
+    *,
+    vocab: int,
+    batch: int,
+    seq_len: int,
+    n_clients: int,
+    skew: float = 2.0,
+    temperature: float = 1.0,
+    seed: int = 0,
+) -> Task:
+    """Non-IID client shards for federated runs (DESIGN.md §9).
+
+    Client ``c`` samples from its OWN first-order Markov chain, an
+    interpolation between one shared global chain and a client-private
+    chain:  ``logits_c = (1−λ)·global + λ·private_c`` with
+    ``λ = skew / (1 + skew)``.  ``skew=0`` degenerates to the IID split of
+    :func:`make_lm_task`; larger skew pushes clients toward disjoint
+    transition structure, the pathological-FL setting where naive averaging
+    and sparse updates interact worst.
+
+    The stacked transition table is ``(n_clients, V, V)`` f32 — intended
+    for the small-vocab federated presets, not 32k-vocab LMs.
+    """
+    base = jax.random.PRNGKey(seed)
+    lam = float(skew) / (1.0 + float(skew))
+    g = jax.random.normal(jax.random.fold_in(base, 17), (vocab, vocab))
+    priv = jax.random.normal(
+        jax.random.fold_in(base, 29), (n_clients, vocab, vocab)
+    )
+    logits = ((1.0 - lam) * g[None] + lam * priv) / max(temperature, 1e-3)
+    probs = jax.nn.softmax(logits, axis=-1)
+    row_ent = -jnp.sum(probs * jnp.log(probs + 1e-12), axis=-1)
+    floor = float(jnp.mean(row_ent))
+    log_probs = jnp.log(probs)  # (C, V, V)
+
+    @jax.jit
+    def gen_tokens(rng: jax.Array, client: jax.Array) -> jax.Array:
+        table = log_probs[client]
+
+        def step(tok, r):
+            nxt = jax.random.categorical(r, table[tok])
+            return nxt, nxt
+
+        r0, rs = jax.random.split(rng)
+        start = jax.random.randint(r0, (batch,), 0, vocab)
+        keys = jax.random.split(rs, seq_len)
+        _, toks = jax.lax.scan(step, start, keys)  # (S, B)
+        return jnp.concatenate([start[None], toks], axis=0).T  # (B, S+1)
+
+    def _key(step, client):
+        return jax.random.fold_in(jax.random.fold_in(base, 3000 + client), step)
+
+    def sample(step: int, client: int) -> PyTree:
+        toks = gen_tokens(_key(step, client),
+                          jnp.asarray(client % n_clients, jnp.int32))
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    @jax.jit
+    def _many(steps: jax.Array, clients: jax.Array) -> PyTree:
+        rngs = jax.vmap(_key)(steps, clients)
+        toks = jax.vmap(gen_tokens)(rngs, clients % n_clients)
+        return {"tokens": toks[:, :, :-1], "labels": toks[:, :, 1:]}
+
+    def sample_many(steps, clients) -> PyTree:
+        return _many(jnp.asarray(steps, jnp.int32), jnp.asarray(clients, jnp.int32))
+
+    return Task(
+        name=f"lm_markov_noniid{n_clients}", sample=sample, vocab_size=vocab,
+        entropy_floor=floor, sample_many=sample_many,
+    )
 
 
 # --------------------------------------------------------- classification
@@ -136,12 +235,23 @@ def make_classification_task(
         )
         return imgs, labels
 
+    def _key(step, client):
+        return jax.random.fold_in(jax.random.fold_in(base, 2000 + client), step)
+
     def sample(step: int, client: int) -> PyTree:
-        rng = jax.random.fold_in(jax.random.fold_in(base, 2000 + client), step)
-        imgs, labels = gen(rng)
+        imgs, labels = gen(_key(step, client))
         return {"images": imgs, "labels": labels}
 
-    return Task(name="blobs", sample=sample, n_classes=n_classes)
+    @jax.jit
+    def _many(steps: jax.Array, clients: jax.Array) -> PyTree:
+        imgs, labels = jax.vmap(lambda s, c: gen(_key(s, c)))(steps, clients)
+        return {"images": imgs, "labels": labels}
+
+    def sample_many(steps, clients) -> PyTree:
+        return _many(jnp.asarray(steps, jnp.int32), jnp.asarray(clients, jnp.int32))
+
+    return Task(name="blobs", sample=sample, n_classes=n_classes,
+                sample_many=sample_many)
 
 
 # ------------------------------------------------------- client-sharded view
@@ -163,9 +273,20 @@ def split_among_clients(task: Task, n_clients: int) -> Callable[[int], PyTree]:
 
 def client_batches(task: Task, n_clients: int, n_delay: int) -> Callable[[int], PyTree]:
     """Like :func:`split_among_clients` but with a local-step (delay) axis:
-    returns (clients, n_delay, batch, ...) — one microbatch per local step."""
+    returns (clients, n_delay, batch, ...) — one microbatch per local step.
+
+    When the task exposes ``sample_many`` the whole (clients × delay) grid
+    is generated in one jitted dispatch (identical streams, see Task)."""
+    import numpy as np
 
     def batch_fn(round_idx: int) -> PyTree:
+        if task.sample_many is not None:
+            clients = np.repeat(np.arange(n_clients), n_delay)
+            micro = np.tile(round_idx * n_delay + np.arange(n_delay), n_clients)
+            flat = task.sample_many(micro, clients)  # (C·D, B, ...)
+            return jax.tree.map(
+                lambda x: x.reshape((n_clients, n_delay) + x.shape[1:]), flat
+            )
         steps = []
         for d in range(n_delay):
             per = [task.sample(round_idx * n_delay + d, c) for c in range(n_clients)]

@@ -1,0 +1,42 @@
+"""Federated orchestration subsystem (DESIGN.md §9).
+
+Layers the paper's §I parameter-server deployment on top of the staged
+codec/wire stack:
+
+  :mod:`repro.fed.server`     ParameterServer — decode SBW1 uploads,
+                              pluggable aggregation, server-side residual,
+                              compressed downstream broadcast
+  :mod:`repro.fed.clients`    ClientPool — partial participation over
+                              heterogeneous client profiles, each cohort
+                              one vmapped/``lax.scan`` step
+  :mod:`repro.fed.scheduler`  RoundScheduler — sync and async/stale rounds
+  :mod:`repro.fed.ledger`     BandwidthLedger — bidirectional measured vs
+                              analytic (Eq. 1/Eq. 5) byte accounting
+
+Entry points: ``python -m repro.launch.fed`` (CLI) and
+``examples/federated_wire.py`` (minimal script).
+"""
+from repro.fed.clients import ClientPool, ClientProfile, CohortResult
+from repro.fed.ledger import BandwidthLedger, RoundRecord
+from repro.fed.scheduler import RoundScheduler
+from repro.fed.server import (
+    AGGREGATORS,
+    Broadcast,
+    ClientUpdate,
+    ParameterServer,
+    staleness_weights,
+)
+
+__all__ = [
+    "AGGREGATORS",
+    "BandwidthLedger",
+    "Broadcast",
+    "ClientPool",
+    "ClientProfile",
+    "ClientUpdate",
+    "CohortResult",
+    "ParameterServer",
+    "RoundRecord",
+    "RoundScheduler",
+    "staleness_weights",
+]

@@ -1,0 +1,300 @@
+"""Client cohorts: partial participation over a heterogeneous client pool
+(DESIGN.md §9).
+
+A :class:`ClientPool` holds the per-client state of M federated clients —
+local optimizer state, compressor state (error-feedback residual, RNG) —
+stacked along a leading client axis, exactly the layout
+:class:`repro.train.trainer.DSGDTrainer` uses.  Each round the scheduler
+samples a *cohort* (partial participation) and the pool executes every
+sampled client's local training + compression as ONE jitted
+``vmap``-over-members / ``lax.scan``-over-local-steps call instead of a
+per-client Python loop — the O(clients) interpreter overhead of the old
+``examples/federated_wire.py`` collapses into a single dispatch.
+
+Heterogeneity is expressed with :class:`ClientProfile`\\ s: client ``c`` is
+bound to ``profiles[c % len(profiles)]``, which pins its communication
+delay (temporal sparsity) and upstream gradient sparsity — the two axes of
+the paper's §III trade-off.  Members of a cohort are grouped by profile and
+each group runs as one vmapped step (delay and per-leaf rates are static
+under jit, so they cannot vary *inside* a vmap).
+
+Cohort sampling is deterministic: round ``r`` of a pool seeded ``s`` draws
+its cohort (and nothing else) from ``np.random.default_rng([s, r])``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import CompressionPolicy, CompressorState, ResolvedPolicy
+from repro.data.synthetic import Task
+from repro.models.model import Model
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+class ClientProfile(NamedTuple):
+    """Static per-client hyper-parameters (hashable → usable under jit).
+
+    delay:    local optimizer steps per round (communication delay n).
+    sparsity: upstream gradient sparsity rate p for this client's uploads.
+    weight:   relative dataset size, for sample-weighted aggregation.
+    """
+
+    delay: int = 1
+    sparsity: float = 0.01
+    weight: float = 1.0
+
+
+class CohortResult(NamedTuple):
+    """One sampled cohort's outputs, per member (aligned lists/arrays)."""
+
+    client_ids: Tuple[int, ...]
+    ctrees: List[PyTree]  # compressed update pytrees (LeafCompressed leaves)
+    losses: np.ndarray  # (K,) mean loss over each member's delay window
+    bits_analytic: np.ndarray  # (K,) Eq. 1 upstream bits per member
+    rates: Tuple[float, ...]  # per-member upstream sparsity rate
+    weights: Tuple[float, ...]  # per-member aggregation sample weight
+
+
+def stack_clients(tree: PyTree, k: int) -> PyTree:
+    """Broadcast a single pytree to a leading k-member axis."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (k,) + x.shape).copy(), tree
+    )
+
+
+@dataclasses.dataclass(eq=False)  # id-hash → usable as a jit static arg
+class ClientPool:
+    model: Model
+    optimizer: Optimizer
+    policy: CompressionPolicy
+    task: Task
+    n_clients: int
+    lr: Callable[[jax.Array], jax.Array]
+    profiles: Tuple[ClientProfile, ...] = (ClientProfile(),)
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.n_clients < 1:
+            raise ValueError("need at least one client")
+        for prof in self.profiles:
+            if prof.delay < 1:
+                raise ValueError(
+                    f"profile delay must be >= 1, got {prof.delay} "
+                    "(delay=0 would upload an untrained zero delta)"
+                )
+        self._resolved: Optional[ResolvedPolicy] = None
+        self._opt_states: PyTree = None
+        self._comp_state: Optional[CompressorState] = None
+        self._ref_leaf_shape: Optional[Tuple[int, ...]] = None
+
+    # ------------------------------------------------------------ lifecycle
+
+    def resolved(self, params: PyTree) -> ResolvedPolicy:
+        if self._resolved is None:
+            self._resolved = self.policy.resolve(params)
+        return self._resolved
+
+    def init(self, params: PyTree, rng: Optional[jax.Array] = None) -> None:
+        """Allocate per-client optimizer/compressor state (leading N axis)."""
+        if rng is None:
+            rng = jax.random.PRNGKey(self.seed)
+        resolved = self.resolved(params)
+        self._opt_states = stack_clients(self.optimizer.init(params), self.n_clients)
+        comp = resolved.init_state(params)
+        self._comp_state = CompressorState(
+            residual=stack_clients(comp.residual, self.n_clients),
+            rng=jax.random.split(rng, self.n_clients),
+            step=jnp.zeros((self.n_clients,), jnp.int32),
+        )
+
+    def profile_of(self, client_id: int) -> ClientProfile:
+        return self.profiles[client_id % len(self.profiles)]
+
+    # ------------------------------------------------------------- sampling
+
+    def sample_cohort(self, round_idx: int, cohort_size: int) -> np.ndarray:
+        """Deterministic partial participation: ``cohort_size`` distinct
+        clients drawn from ``default_rng([seed, round])``, ascending ids."""
+        k = min(cohort_size, self.n_clients)
+        rng = np.random.default_rng([self.seed, round_idx])
+        return np.sort(rng.choice(self.n_clients, size=k, replace=False))
+
+    # ----------------------------------------------------------- cohort step
+
+    def run_cohort(
+        self,
+        round_idx: int,
+        cohort_ids: Sequence[int],
+        start_params: PyTree,
+    ) -> CohortResult:
+        """Execute one sampled cohort.
+
+        ``start_params`` is either one shared pytree (sync rounds: every
+        member trains from the current broadcast estimate) or a pytree with
+        a leading member axis aligned with ``cohort_ids`` (async rounds:
+        stale members start from older estimates).
+
+        Members are grouped by profile; each group is one jitted
+        vmap/scan step.  Per-client optimizer and compressor state is
+        gathered for the cohort and scattered back afterwards.
+        """
+        if self._comp_state is None:
+            raise RuntimeError("ClientPool.init(params) must run first")
+        ids = np.asarray(cohort_ids, np.int32)
+        k_total = ids.size
+        stacked_start = self._has_member_axis(start_params, k_total)
+        resolved = self._resolved
+
+        ctrees: List[PyTree] = [None] * k_total
+        losses = np.zeros((k_total,), np.float64)
+        bits = np.zeros((k_total,), np.float64)
+
+        for prof_i, prof in enumerate(self.profiles):
+            member_pos = np.nonzero(ids % len(self.profiles) == prof_i)[0]
+            if member_pos.size == 0:
+                continue
+            group_ids = ids[member_pos]
+            gidx = jnp.asarray(group_ids)
+            if stacked_start:
+                group_start = jax.tree.map(
+                    lambda x: x[jnp.asarray(member_pos)], start_params
+                )
+            else:
+                group_start = start_params  # broadcast inside the vmapped step
+            opt_g, comp_g = self._gather_states(
+                self._opt_states, self._comp_state, gidx
+            )
+            batch = self._group_batch(round_idx, group_ids, prof.delay)
+            rates = resolved.rates(prof.sparsity, round_idx)
+            ctree_g, opt_g, comp_g, loss_g, bits_g = self._group_step(
+                group_start, opt_g, comp_g, batch,
+                jnp.asarray(round_idx * prof.delay, jnp.int32),
+                n_delay=prof.delay, rates=rates, shared_start=not stacked_start,
+            )
+            self._opt_states, self._comp_state = self._scatter_states(
+                self._opt_states, self._comp_state, gidx, opt_g, comp_g
+            )
+            # one device→host transfer for the whole group, then cheap
+            # numpy slicing per member (pack works on numpy anyway)
+            ctree_np, loss_np, bits_np = jax.device_get((ctree_g, loss_g, bits_g))
+            for j, pos in enumerate(member_pos):
+                ctrees[int(pos)] = jax.tree.map(lambda x: x[j], ctree_np)
+                losses[int(pos)] = loss_np[j]
+                bits[int(pos)] = bits_np[j]
+
+        profs = [self.profile_of(int(c)) for c in ids]
+        return CohortResult(
+            client_ids=tuple(int(c) for c in ids),
+            ctrees=ctrees,
+            losses=losses,
+            bits_analytic=bits,
+            rates=tuple(p.sparsity for p in profs),
+            weights=tuple(p.weight * p.delay for p in profs),
+        )
+
+    @partial(jax.jit, static_argnames=("self", "n_delay", "rates", "shared_start"))
+    def _group_step(
+        self,
+        start_params: PyTree,  # (K, ...) per-member starts, or shared (sync)
+        opt_states: PyTree,  # (K, ...)
+        comp_states: CompressorState,  # (K, ...)
+        batch: PyTree,  # (K, n_delay, B, ...)
+        iteration: jax.Array,
+        *,
+        n_delay: int,
+        rates: Tuple[float, ...],
+        shared_start: bool = False,
+    ) -> tuple:
+        """One profile group's round: vmapped local training (scan over the
+        delay window) + per-member compression with error feedback, the same
+        Alg. 1 l.10-14 structure as ``DSGDTrainer.round_step``."""
+        resolved = self._resolved
+
+        def local(params0, opt_state, comp_state, client_batch):
+            def one(carry, micro):
+                p, os, it = carry
+                loss, g = jax.value_and_grad(self.model.loss_fn)(p, micro)
+                p2, os2 = self.optimizer.apply(os, g, p, self.lr(it), it)
+                return (p2, os2, it + 1), loss
+
+            (p_new, os_new, _), step_losses = jax.lax.scan(
+                one, (params0, opt_state, iteration), client_batch
+            )
+            delta = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                p_new, params0,
+            )
+            ctree, dense, comp_state = resolved.compress(delta, comp_state, rates)
+            # momentum masking at transmitted coordinates (supplement A)
+            transmitted = jax.tree.map(lambda d: (d != 0).astype(jnp.float32), dense)
+            os_new = self.optimizer.mask(os_new, transmitted)
+            # mean over the whole delay window, not the last local step
+            return ctree, os_new, comp_state, jnp.mean(step_losses), resolved.total_bits(ctree)
+
+        in_axes = (None if shared_start else 0, 0, 0, 0)
+        return jax.vmap(local, in_axes=in_axes)(
+            start_params, opt_states, comp_states, batch
+        )
+
+    # ------------------------------------------------------------- plumbing
+
+    @partial(jax.jit, static_argnames=("self",))
+    def _gather_states(self, opt_full, comp_full, gidx):
+        """Pull one cohort group's rows out of the pooled state (one fused
+        dispatch — per-leaf eager gathers dominate round time otherwise)."""
+        opt_g = jax.tree.map(lambda x: x[gidx], opt_full)
+        comp_g = CompressorState(
+            residual=jax.tree.map(lambda x: x[gidx], comp_full.residual),
+            rng=comp_full.rng[gidx],
+            step=comp_full.step[gidx],
+        )
+        return opt_g, comp_g
+
+    @partial(jax.jit, static_argnames=("self",))
+    def _scatter_states(self, opt_full, comp_full, gidx, opt_upd, comp_upd):
+        """Write a group's updated rows back (one fused dispatch)."""
+        opt_full = jax.tree.map(
+            lambda full, upd: full.at[gidx].set(upd), opt_full, opt_upd
+        )
+        comp_full = CompressorState(
+            residual=jax.tree.map(
+                lambda full, upd: full.at[gidx].set(upd),
+                comp_full.residual, comp_upd.residual,
+            ),
+            rng=comp_full.rng.at[gidx].set(comp_upd.rng),
+            step=comp_full.step.at[gidx].set(comp_upd.step),
+        )
+        return opt_full, comp_full
+
+    def _group_batch(self, round_idx: int, ids: np.ndarray, delay: int) -> PyTree:
+        """(K, delay, B, ...) microbatches for one profile group — the same
+        (client, local-step) layout as :func:`repro.data.client_batches`,
+        generated in ONE dispatch when the task supports ``sample_many``."""
+        if self.task.sample_many is not None:
+            clients = np.repeat(ids, delay)
+            micro = np.tile(round_idx * delay + np.arange(delay), ids.size)
+            flat = self.task.sample_many(micro, clients)  # (K·D, B, ...)
+            return jax.tree.map(
+                lambda x: x.reshape((ids.size, delay) + x.shape[1:]), flat
+            )
+        steps = []
+        for d in range(delay):
+            per = [self.task.sample(round_idx * delay + d, int(c)) for c in ids]
+            steps.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *steps)
+
+    def _has_member_axis(self, start_params: PyTree, k: int) -> bool:
+        """True when ``start_params`` already carries a leading cohort axis."""
+        if self._ref_leaf_shape is None:
+            shapes = jax.eval_shape(self.model.init, jax.random.PRNGKey(0))
+            self._ref_leaf_shape = tuple(jax.tree.leaves(shapes)[0].shape)
+        got = tuple(jax.tree.leaves(start_params)[0].shape)
+        return got == (k,) + self._ref_leaf_shape

@@ -1,0 +1,145 @@
+"""Round scheduling: sync and async/stale federated rounds (DESIGN.md §9).
+
+A :class:`RoundScheduler` wires a :class:`~repro.fed.server.ParameterServer`
+to a :class:`~repro.fed.clients.ClientPool` and drives communication
+rounds:
+
+  sync    every cohort member trains from the CURRENT broadcast replica Ŵ
+          (it "downloads" the newest model when sampled); the server
+          aggregates with ``mean``/``weighted``.
+  async   sampled members start from stale replicas Ŵ_{r−s} (s drawn
+          uniformly from [0, max_staleness], deterministic per round) —
+          simulating clients whose round trip spans several server rounds.
+          Pair with the server's ``staleness`` aggregator so stale
+          gradients are discounted by the closed form
+          :func:`repro.fed.server.staleness_weights`.
+
+Every round is metered both directions in a
+:class:`~repro.fed.ledger.BandwidthLedger`: framed bytes, measured payload
+bits, and the analytic Eq. 1/Eq. 5 prediction, upstream (summed over the
+cohort) and downstream (per recipient × cohort size).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.clients import ClientPool
+from repro.fed.ledger import BandwidthLedger, RoundRecord
+from repro.fed.server import ClientUpdate, ParameterServer
+
+PyTree = Any
+
+
+@dataclasses.dataclass(eq=False)
+class RoundScheduler:
+    server: ParameterServer
+    pool: ClientPool
+    cohort_size: int
+    mode: str = "sync"  # "sync" | "async"
+    max_staleness: int = 0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("sync", "async"):
+            raise ValueError(f"mode must be 'sync' or 'async', got {self.mode!r}")
+        if self.mode == "sync":
+            self.max_staleness = 0
+        self.ledger = BandwidthLedger()
+        # ring of past replicas Ŵ_{r−s}; entries are immutable pytree refs
+        self._snapshots: deque = deque(maxlen=self.max_staleness + 1)
+        self.pool.init(self.server.estimate)
+
+    # ------------------------------------------------------------ one round
+
+    def step(self, round_idx: int) -> dict:
+        """Sample a cohort, run it, aggregate, broadcast, meter the wire."""
+        self._snapshots.appendleft(self.server.estimate)
+        cohort = self.pool.sample_cohort(round_idx, self.cohort_size)
+        staleness = self._draw_staleness(round_idx, cohort.size)
+
+        if self.mode == "sync":
+            start = self.server.estimate  # shared: everyone pulls Ŵ_r
+        else:
+            start = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves),
+                *[self._snapshots[s] for s in staleness],
+            )
+
+        result = self.pool.run_cohort(round_idx, cohort, start)
+
+        uploads, up_bytes = [], 0
+        for i, cid in enumerate(result.client_ids):
+            wire = self.server.up_wire(result.rates[i], round_idx)
+            blob = wire.pack(result.ctrees[i])
+            up_bytes += len(blob)
+            uploads.append(
+                ClientUpdate(
+                    client_id=cid, blob=blob, rate=result.rates[i],
+                    weight=result.weights[i], staleness=int(staleness[i]),
+                )
+            )
+        info = self.server.receive(uploads, round_idx)
+        bc = self.server.broadcast(round_idx)
+
+        recipients = len(cohort)
+        self.ledger.record(
+            RoundRecord(
+                round=round_idx,
+                cohort=tuple(int(c) for c in cohort),
+                up_bytes=up_bytes,
+                up_bits_measured=info["up_bits_measured"],
+                up_bits_analytic=float(np.sum(result.bits_analytic)),
+                down_bytes=len(bc.blob) * recipients,
+                down_bits_measured=bc.bits_measured * recipients,
+                down_bits_analytic=bc.bits_analytic * recipients,
+                down_recipients=recipients,
+            )
+        )
+        return {
+            "round": round_idx,
+            "loss": float(np.mean(result.losses)),
+            "update_norm": info["update_norm"],
+            "staleness": [int(s) for s in staleness],
+            "weights": [float(w) for w in info["weights"]],
+            "up_bytes": up_bytes,
+            "down_bytes": len(bc.blob) * recipients,
+        }
+
+    # ------------------------------------------------------------- full run
+
+    def run(self, n_rounds: int, log_every: int = 0) -> dict:
+        """Drive ``n_rounds`` rounds; returns a column-major history merged
+        with the ledger's byte accounting."""
+        hist: dict = {"round": [], "loss": [], "update_norm": [],
+                      "mean_staleness": []}
+        for r in range(n_rounds):
+            m = self.step(r)
+            hist["round"].append(r)
+            hist["loss"].append(m["loss"])
+            hist["update_norm"].append(m["update_norm"])
+            hist["mean_staleness"].append(float(np.mean(m["staleness"])))
+            if log_every and (r + 1) % log_every == 0:
+                t = self.ledger.totals()
+                print(
+                    f"round {r+1:4d}  loss {m['loss']:.4f}  "
+                    f"up {t['up_bytes']/1e3:.1f} kB  "
+                    f"down {t['down_bytes']/1e3:.1f} kB"
+                )
+        hist.update({f"wire_{k}": v for k, v in self.ledger.history().items()})
+        hist.update(self.ledger.totals())
+        return hist
+
+    # ------------------------------------------------------------- plumbing
+
+    def _draw_staleness(self, round_idx: int, k: int) -> np.ndarray:
+        if self.mode == "sync" or self.max_staleness == 0:
+            return np.zeros((k,), np.int64)
+        cap = min(self.max_staleness, len(self._snapshots) - 1)
+        rng = np.random.default_rng([self.seed, round_idx, 7])
+        return rng.integers(0, cap + 1, size=k)

@@ -1,0 +1,234 @@
+"""Parameter server: decode real SBW1 uploads, aggregate, re-compress the
+broadcast (DESIGN.md §9).
+
+The server side of the paper's §I deployment.  It consumes *bytes* — every
+client upload is a packed :mod:`repro.core.wire` buffer, decoded through
+the shared (model config, policy, rate) contract — aggregates the decoded
+updates with a pluggable strategy, applies them to the master weights W,
+and then sends the downstream direction through the SAME codec machinery:
+
+    ΔW_down = W − Ŵ + (server residual)     Ŵ = the clients' replica
+    ΔW*_down = compress(ΔW_down);  residual ← ΔW_down − ΔW*_down
+    Ŵ ← Ŵ + ΔW*_down;   broadcast pack(ΔW*_down)
+
+so downstream bytes are metered (measured AND analytic Eq. 1/Eq. 5) exactly
+like upstream ones, and clients can reconstruct Ŵ from the wire alone.
+The residual makes downstream compression lossless *in the limit*: what a
+sparse broadcast drops this round is re-queued for the next (Eq. 2 applied
+server-side).
+
+Aggregation strategies (``AGGREGATORS``):
+
+  mean        ΔW = (1/K) Σ_i ΔW*_i                        (Alg. 1 l.17)
+  weighted    ΔW = Σ_i (n_i / Σ_j n_j) ΔW*_i              (FedAvg-style)
+  staleness   ΔW = Σ_i w_i ΔW*_i,  w_i ∝ n_i (1+s_i)^−β   (async, stale
+              gradients discounted polynomially — ``staleness_weights``)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import (
+    CompressionPolicy,
+    CompressorState,
+    ResolvedPolicy,
+)
+from repro.core.stages import LeafCompressed
+from repro.core.wire import Wire, wire_for
+
+PyTree = Any
+
+
+class ClientUpdate(NamedTuple):
+    """One client's round contribution as it arrives at the server."""
+
+    client_id: int
+    blob: bytes  # packed SBW1 buffer — the only payload that crosses
+    rate: float  # upstream sparsity rate (part of the shared contract)
+    weight: float = 1.0  # sample count for weighted aggregation
+    staleness: int = 0  # rounds since the weights this update was computed on
+
+
+class Broadcast(NamedTuple):
+    """One round's downstream message plus its byte accounting."""
+
+    blob: bytes
+    dense: PyTree  # decoded ΔW*_down (identical to what unpack(blob) yields)
+    bits_analytic: float
+    bits_measured: float
+
+
+def staleness_weights(
+    staleness: Sequence[int], beta: float, base: Optional[Sequence[float]] = None
+) -> np.ndarray:
+    """Closed-form async aggregation weights: w_i ∝ base_i · (1+s_i)^−β,
+    normalized to sum to 1."""
+    s = np.asarray(staleness, np.float64)
+    w = (1.0 + s) ** (-float(beta))
+    if base is not None:
+        w = w * np.asarray(base, np.float64)
+    return w / w.sum()
+
+
+def _mean_weights(ups: Sequence[ClientUpdate], beta: float) -> np.ndarray:
+    return np.full((len(ups),), 1.0 / len(ups))
+
+
+def _sample_weights(ups: Sequence[ClientUpdate], beta: float) -> np.ndarray:
+    w = np.asarray([u.weight for u in ups], np.float64)
+    return w / w.sum()
+
+
+def _staleness_weights(ups: Sequence[ClientUpdate], beta: float) -> np.ndarray:
+    return staleness_weights(
+        [u.staleness for u in ups], beta, [u.weight for u in ups]
+    )
+
+
+AGGREGATORS = {
+    "mean": _mean_weights,
+    "weighted": _sample_weights,
+    "staleness": _staleness_weights,
+}
+
+
+@dataclasses.dataclass(eq=False)
+class ParameterServer:
+    """Master weights + bidirectional codec endpoints.
+
+    ``up_policy`` must be the same :class:`CompressionPolicy` the clients
+    compress with (the shared wire contract); ``down_policy`` defaults to
+    it, and ``down_sparsity`` trades broadcast bytes against replica lag
+    (1.0 → dense broadcast, the classic FL assumption).
+    """
+
+    params: PyTree
+    up_policy: CompressionPolicy
+    down_policy: Optional[CompressionPolicy] = None
+    down_sparsity: float = 1.0
+    aggregator: str = "mean"
+    staleness_beta: float = 0.5
+
+    def __post_init__(self) -> None:
+        if self.aggregator not in AGGREGATORS:
+            raise KeyError(
+                f"unknown aggregator {self.aggregator!r}; have {sorted(AGGREGATORS)}"
+            )
+        if self.down_policy is None:
+            # dense broadcast (the classic FL assumption) cannot ride a
+            # sparse-position codec: at p=1 there are no gaps to Golomb-code
+            if self.down_sparsity >= 1.0:
+                self.down_policy = CompressionPolicy.single(
+                    "dense32", name="dense-down"
+                )
+            else:
+                self.down_policy = self.up_policy
+        self._up_resolved: ResolvedPolicy = self.up_policy.resolve(self.params)
+        self._down_resolved: ResolvedPolicy = self.down_policy.resolve(self.params)
+        f32 = jax.tree.map(lambda x: x.astype(jnp.float32), self.params)
+        self._down_state: CompressorState = self._down_resolved.init_state(f32)
+        # the clients' replica Ŵ — advanced ONLY by broadcast wire content
+        self.estimate: PyTree = f32
+        self._wires: Dict[Tuple[Tuple[float, ...], bool], Wire] = {}
+
+    # ------------------------------------------------------------- wiring
+
+    def _wire(self, resolved: ResolvedPolicy, rate: float, round_idx: int) -> Wire:
+        rates = resolved.rates(rate, round_idx)
+        key = (rates, resolved is self._down_resolved)
+        if key not in self._wires:
+            self._wires[key] = wire_for(resolved, self.params, rate, round_idx)
+        return self._wires[key]
+
+    def up_wire(self, rate: float, round_idx: int = 0) -> Wire:
+        """The upstream decode contract for one client rate this round."""
+        return self._wire(self._up_resolved, rate, round_idx)
+
+    def down_wire(self, round_idx: int = 0) -> Wire:
+        return self._wire(self._down_resolved, self.down_sparsity, round_idx)
+
+    # ------------------------------------------------------------ receiving
+
+    def receive(self, uploads: Sequence[ClientUpdate], round_idx: int) -> dict:
+        """Decode every upload from bytes, aggregate, apply to W.
+
+        Returns the round's upstream accounting:
+        ``{"up_bits_measured", "weights", "update_norm"}``.
+        """
+        if not uploads:
+            raise ValueError("receive() needs at least one client upload")
+        weights = AGGREGATORS[self.aggregator](uploads, self.staleness_beta)
+        measured = 0.0
+        agg: Optional[PyTree] = None
+        for u, w in zip(uploads, weights):
+            wire = self.up_wire(u.rate, round_idx)
+            comps = wire.unpack_compressed(u.blob)
+            measured += sum(
+                float(l.nbits)
+                for l in jax.tree.leaves(
+                    comps, is_leaf=lambda x: isinstance(x, LeafCompressed)
+                )
+            )
+            update = wire.dense_of(comps)
+            scaled = jax.tree.map(lambda x: float(w) * np.asarray(x, np.float64), update)
+            agg = scaled if agg is None else jax.tree.map(np.add, agg, scaled)
+        self.params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + jnp.asarray(u, jnp.float32)).astype(p.dtype),
+            self.params, agg,
+        )
+        norm = float(
+            np.sqrt(sum(float(np.sum(np.square(x))) for x in jax.tree.leaves(agg)))
+        )
+        return {
+            "up_bits_measured": measured,
+            "weights": weights,
+            "update_norm": norm,
+        }
+
+    # ---------------------------------------------------------- broadcasting
+
+    def broadcast(self, round_idx: int) -> Broadcast:
+        """Compress W − Ŵ through the downstream policy and emit bytes.
+
+        The server-side residual (inside ``_down_state``) carries whatever a
+        sparse broadcast dropped into the next round; the replica Ŵ advances
+        by exactly the decoded wire content, so server and clients stay
+        byte-consistent.
+        """
+        gap = jax.tree.map(
+            lambda w, e: w.astype(jnp.float32) - e, self.params, self.estimate
+        )
+        # the gap W − Ŵ already contains every previously-unsent coordinate
+        # (Ŵ only ever advanced by transmitted content), and compress() adds
+        # its stored residual back in — so feed it the residual-free part,
+        # keeping acc == gap and the invariant  W − Ŵ == residual  exact
+        if self._down_resolved.any_residual:
+            delta = jax.tree.map(
+                lambda g, r: g - r.astype(jnp.float32),
+                gap, self._down_state.residual,
+            )
+        else:
+            delta = gap
+        rates = self._down_resolved.rates(self.down_sparsity, round_idx)
+        ctree, dense, self._down_state = self._down_resolved.compress(
+            delta, self._down_state, rates
+        )
+        wire = self.down_wire(round_idx)
+        blob, bits = wire.pack_with_bits(ctree)
+        self.estimate = jax.tree.map(jnp.add, self.estimate, dense)
+        return Broadcast(
+            blob=blob,
+            dense=dense,
+            bits_analytic=float(self._down_resolved.total_bits(ctree)),
+            bits_measured=float(bits),
+        )
+
+    @property
+    def down_residual(self) -> PyTree:
+        """Server-side error-feedback accumulator (Eq. 2, downstream)."""
+        return self._down_state.residual

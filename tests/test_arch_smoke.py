@@ -9,12 +9,12 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs.base import ASSIGNED_ARCHS, PAPER_ARCHS, get_config, reduced
+from repro.configs.base import ASSIGNED_ARCHS, PAPER_ARCHS
 from repro.core.api import get_compressor
-from repro.data import client_batches, make_classification_task, make_lm_task
-from repro.models.model import build_model
 from repro.optim import get_optimizer
 from repro.train import DSGDTrainer
+
+from conftest import arch_setup
 
 SEQ = 32
 BATCH = 2
@@ -49,9 +49,7 @@ def _no_nan(tree) -> bool:
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS + PAPER_ARCHS)
 class TestArchSmoke:
     def test_forward_and_train_step(self, arch, rng):
-        cfg = reduced(get_config(arch))
-        model = build_model(cfg)
-        params = model.init(rng)
+        cfg, model, params = arch_setup(arch)
         batch = _batch_for(cfg, rng)
 
         loss = model.loss_fn(params, batch)
@@ -64,8 +62,7 @@ class TestArchSmoke:
 
     def test_one_dsgd_round(self, arch, rng):
         """One SBC communication round updates weights and stays finite."""
-        cfg = reduced(get_config(arch))
-        model = build_model(cfg)
+        cfg, model, _ = arch_setup(arch)
         trainer = DSGDTrainer(
             model=model, compressor=get_compressor("sbc"),
             optimizer=get_optimizer("sgd"), n_clients=2, lr=lambda it: 0.05,
@@ -95,9 +92,7 @@ DECODE_ARCHS = [a for a in ASSIGNED_ARCHS]
 def test_decode_matches_prefill(arch, rng):
     """Prefill-then-decode logits ≈ one-shot forward logits at the next
     position (exercises KV-cache / SSM-state correctness per arch)."""
-    cfg = reduced(get_config(arch))
-    model = build_model(cfg)
-    params = model.init(rng)
+    cfg, model, params = arch_setup(arch)
     batch = _batch_for(cfg, rng)
 
     hidden, caches = model.prefill(params, batch)

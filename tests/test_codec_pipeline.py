@@ -274,17 +274,13 @@ class TestPolicyTraining:
     def test_per_leaf_policy_trains_through_dsgd(self):
         """Dense biases + 0.1% top-k matrices trains end-to-end, and the
         get_compressor('sbc') shim still drives the same trainer."""
-        from repro.data import client_batches, make_lm_task
-        from repro.models.model import build_model
+        from repro.data import client_batches
         from repro.optim import get_optimizer
         from repro.train import DSGDTrainer
 
-        from conftest import tiny_decoder
+        from conftest import tiny_lm_setup
 
-        cfg = tiny_decoder()
-        model = build_model(cfg)
-        task = make_lm_task(vocab=cfg.vocab_size, batch=8, seq_len=32,
-                            temperature=0.3)
+        cfg, model, task = tiny_lm_setup()
         policy = CompressionPolicy(
             default=make_codec("topk"),
             rules=(PolicyRule(r"(^|/)(bias|scale|norm[^/]*)(/|$)",

