@@ -1,0 +1,139 @@
+"""Whole-pytree compress+pack throughput: flat fast path vs per-leaf path.
+
+Measures one communication round's codec work — residual-accumulate, SBC
+selection, ΔW*/residual update, SBW1 pack — over a full model parameter
+set, three ways:
+
+  per-leaf eager   ``ResolvedPolicy.compress`` exactly as the parameter
+                   server's per-round ``broadcast()`` re-compression runs
+                   it today: one Python dispatch per jnp op per leaf.
+                   This is the baseline the flat fast path replaces.
+  per-leaf jit     the same per-leaf loop traced into one XLA call (the
+                   trainer's in-graph surface) — reported for context.
+  flat fast        ``fast=True`` policy → ``FlatParamSpace.compress``
+                   (core/flat.py §10): flatten once, one cached jitted
+                   call, single fused scatter + flat residual update.
+
+All three must produce byte-identical SBW1 buffers (asserted here; the
+bit-level equivalence matrix lives in tests/test_flat_fast_path.py).
+
+  PYTHONPATH=src python -m benchmarks.compress_e2e            # quick
+  PYTHONPATH=src python -m benchmarks.run --only compress_e2e
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+
+from benchmarks.common import save_json
+from repro.configs.base import get_config
+from repro.core.api import get_compressor
+from repro.core.policy import (
+    DENSE_SMALL_PATTERN,
+    CompressionPolicy,
+    PolicyRule,
+)
+from repro.core.wire import wire_for
+from repro.models.model import build_model
+
+SPARSITY = 0.01
+
+
+def _policy(fast: bool) -> CompressionPolicy:
+    comp = get_compressor("sbc")
+    return CompressionPolicy(
+        default=comp.codec,
+        rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),),
+        name="sbc+dense-small",
+        fast=fast,
+    )
+
+
+def _time_interleaved(fns: dict, repeats: int) -> dict:
+    """Median seconds per call, trials interleaved across the candidate
+    paths so ambient load (this is often a busy CI box) hits all of them
+    alike instead of biasing whichever ran last."""
+    samples = {name: [] for name in fns}
+    for name, fn in fns.items():
+        fn()  # warm-up (compile + caches)
+    for _ in range(repeats):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            samples[name].append(time.perf_counter() - t0)
+    return {name: statistics.median(v) for name, v in samples.items()}
+
+
+def bench_arch(arch: str, repeats: int) -> dict:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    delta = jax.tree.map(
+        lambda x: 0.01 * jax.random.normal(jax.random.PRNGKey(1), x.shape), params
+    )
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+
+    res_slow = _policy(fast=False).resolve(params)
+    res_fast = _policy(fast=True).resolve(params)
+    rates = res_slow.rates(SPARSITY, 0)
+    wire = wire_for(res_slow, params, SPARSITY)
+
+    state_slow = res_slow.init_state(params)
+    state_fast = res_fast.init_state(params)
+    jit_compress = jax.jit(lambda d, s: res_slow.compress(d, s, rates))
+
+    def run_eager():
+        ctree, _, _ = res_slow.compress(delta, state_slow, rates)
+        return wire.pack(jax.device_get(ctree))
+
+    def run_jit():
+        ctree, _, _ = jit_compress(delta, state_slow)
+        return wire.pack(jax.device_get(ctree))
+
+    def run_fast():
+        ctree, _, _ = res_fast.compress(delta, state_fast, rates)
+        return wire.pack(jax.device_get(ctree))
+
+    # correctness anchor: all three paths emit the SAME bytes
+    blob_eager, blob_jit, blob_fast = run_eager(), run_jit(), run_fast()
+    assert blob_eager == blob_jit == blob_fast, "paths disagree on SBW1 bytes"
+
+    t = _time_interleaved(
+        {"eager": run_eager, "jit": run_jit, "fast": run_fast}, repeats
+    )
+    t_eager, t_jit, t_fast = t["eager"], t["jit"], t["fast"]
+    dense_mb = 4.0 * n_params / 1e6
+    return {
+        "arch": arch,
+        "n_params": n_params,
+        "n_leaves": len(jax.tree.leaves(params)),
+        "sparsity": SPARSITY,
+        "packed_bytes": len(blob_fast),
+        "per_leaf_eager_ms": 1e3 * t_eager,
+        "per_leaf_jit_ms": 1e3 * t_jit,
+        "flat_fast_ms": 1e3 * t_fast,
+        "flat_fast_dense_mb_s": dense_mb / t_fast,
+        "speedup_vs_per_leaf": t_eager / t_fast,
+        "speedup_vs_per_leaf_jit": t_jit / t_fast,
+    }
+
+
+def run(quick: bool = True) -> None:
+    archs = ["resnet32", "charlstm"]
+    repeats = 8 if quick else 25
+    rows = [bench_arch(a, repeats) for a in archs]
+    print(f"{'arch':12s} {'params':>9s} {'per-leaf ms':>12s} {'jit ms':>8s} "
+          f"{'flat ms':>8s} {'x vs leaf':>10s} {'x vs jit':>9s}")
+    for r in rows:
+        print(f"{r['arch']:12s} {r['n_params']:>9d} "
+              f"{r['per_leaf_eager_ms']:>11.1f} {r['per_leaf_jit_ms']:>7.1f} "
+              f"{r['flat_fast_ms']:>7.1f} {r['speedup_vs_per_leaf']:>9.1f}× "
+              f"{r['speedup_vs_per_leaf_jit']:>8.2f}×")
+    path = save_json("compress_e2e", rows)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -8,6 +8,8 @@
   fig5_convergence    Fig. 5-8  loss vs iterations and vs transferred bits
   roofline_table      §Roofline aggregation of dry-run records (if present)
   wire_throughput     §Wire    pack/unpack microbench (DESIGN.md §5)
+  compress_e2e        §Flat    whole-pytree compress+pack: fast path vs
+                               per-leaf baseline (DESIGN.md §10)
   fed_round           §Fed     vmapped cohort runner vs legacy loop (§9)
 
 ``--smoke`` runs only the fast, training-free benchmarks (what CI runs;
@@ -19,21 +21,25 @@ import argparse
 import sys
 import time
 
-SMOKE = ("table1_rates", "wire_throughput")
+SMOKE = ("table1_rates", "wire_throughput", "compress_e2e")
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale runs (slow)")
     ap.add_argument("--only", default=None, help="run a single benchmark")
     ap.add_argument("--smoke", action="store_true",
                     help="fast training-free subset (CI)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (fed_round, fig3_sparsity_grid, fig4_stagewise,
-                            fig5_convergence, roofline_table, table1_rates,
-                            table2_accuracy, wire_throughput)
+    from benchmarks import (compress_e2e, fed_round, fig3_sparsity_grid,
+                            fig4_stagewise, fig5_convergence, roofline_table,
+                            table1_rates, table2_accuracy, wire_throughput)
 
     suite = {
         "table1_rates": table1_rates.run,
@@ -43,6 +49,7 @@ def main(argv=None):
         "fig5_convergence": fig5_convergence.run,
         "roofline_table": roofline_table.run,
         "wire_throughput": wire_throughput.run,
+        "compress_e2e": compress_e2e.run,
         "fed_round": fed_round.run,
     }
     names = [args.only] if args.only else list(SMOKE) if args.smoke else list(suite)

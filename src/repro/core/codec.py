@@ -59,6 +59,22 @@ class Codec:
     def skip(self) -> bool:
         return self.selector.skip
 
+    @property
+    def flat_kind(self):
+        """Segment kind in the flat-buffer fast path (core/flat.py §10):
+        "sbc" | "dense" | "skip", or None when any stage has no flat form
+        (a ``fast=True`` policy then falls back to the per-leaf path)."""
+        if not (self.selector.flat_fast and self.quantizer.flat_fast
+                and self.encoder.flat_fast):
+            return None
+        if self.selector.skip:
+            return "skip"
+        if self.selector.dense and self.quantizer.name == "identity":
+            return "dense"
+        if self.spec == "topk_signed|binarize|golomb":
+            return "sbc"
+        return None
+
     # ------------------------------------------------------------- per leaf
 
     def compress_leaf(

@@ -1,0 +1,438 @@
+"""Device-resident flat-buffer compression fast path (DESIGN.md §10).
+
+:class:`FlatParamSpace` flattens a parameter pytree ONCE into a single
+contiguous block-padded f32 buffer with static per-leaf segment metadata
+(offset, size, sparsity rate, survivor count) and then runs the whole
+per-round compression as ONE cached jitted call, instead of the per-leaf
+Python loop of jnp dispatches in :meth:`ResolvedPolicy.compress`.
+
+Two engines share the layout:
+
+``compress``   the *exact* engine — per-segment two-sided top-k selection
+               (``lax.top_k`` on static segment slices), one fused scatter
+               building ΔW* for every leaf at once, and a single flat
+               residual update.  Output is **bit-identical** to the legacy
+               per-leaf path: same LeafCompressed trees (same indices, same
+               μ down to the sign of −0.0), same SBW1 bytes after
+               ``Wire.pack``, same residuals.  This is what ``fast=True``
+               policies dispatch to.
+
+``compress_hist``  the *device* engine — the segment-aware Pallas kernels
+               (:mod:`repro.kernels.flat`): two-pass histogram threshold
+               selection, masked moments, fused binarize+residual, each
+               launched ONCE over the flat buffer.  Approximate survivor
+               counts (like :func:`repro.kernels.ops.sbc_compress_hist`,
+               whose per-leaf semantics it reproduces); runs interpret-mode
+               on CPU, ``interpret=False`` on TPU.
+
+Layout contract (stable; documented in DESIGN.md §10):
+
+  * leaf i's flat segment lives at ``[offset_i, offset_i + size_i)`` where
+    ``offset_i`` is block-aligned (blocks of ``bm·lanes`` elements) and the
+    tail up to the next block boundary is zero;
+  * the error-feedback residual is stored IN THIS LAYOUT as one f32 array —
+    compressor state never round-trips through the per-leaf pytree between
+    rounds;
+  * pytrees cross the boundary only at ``flatten``/``unflatten``.
+
+The speedup is structural, not numeric: the eager per-leaf path (how
+``fed.server.ParameterServer.broadcast`` turns around a round) pays one
+dispatch per jnp op per leaf; the flat path pays one cached jitted call
+for the whole parameter set.  ``benchmarks/compress_e2e.py`` measures both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stages import LeafCompressed, k_for
+from repro.kernels.flat import seg_binarize_apply, seg_hist2side, seg_moments
+from repro.kernels.hist2side import SPAN_OCTAVES, bucket_lower_edges
+from repro.kernels.ops import _side_threshold, on_tpu
+
+PyTree = Any
+
+def supports(resolved) -> bool:
+    """True when every leaf of the resolved policy has a flat-fast codec
+    (``Codec.flat_kind`` is not None for every plan)."""
+    return all(p.codec.flat_kind is not None for p in resolved.plans)
+
+
+class Segment(NamedTuple):
+    """Static per-leaf slot in the flat buffer."""
+
+    path: str
+    shape: Tuple[int, ...]
+    dtype: Any
+    size: int
+    offset: int  # block-aligned start in the padded flat buffer
+    kind: str  # "sbc" | "dense" | "skip"
+    use_residual: bool
+
+
+@dataclasses.dataclass(eq=False)
+class FlatParamSpace:
+    """One policy bound to one pytree layout, flattened to a single buffer.
+
+    Built lazily by :meth:`ResolvedPolicy.flat_space` the first time a
+    ``fast=True`` policy compresses; construction needs only leaf shapes,
+    so it works under tracing.  ``bm``/``lanes`` fix the block size of the
+    padded layout (and the Pallas tile of the ``compress_hist`` engine) —
+    they must match between the two engines because the residual buffer is
+    shared.
+    """
+
+    resolved: Any  # ResolvedPolicy (duck-typed; no import cycle)
+    segments: Tuple[Segment, ...]
+    bm: int = 8
+    lanes: int = 128
+
+    def __post_init__(self) -> None:
+        per_block = self.bm * self.lanes
+        self.n_blocks = sum(
+            max(1, -(-s.size // per_block)) for s in self.segments
+        )
+        self.n_pad = self.n_blocks * per_block
+        self.n_total = sum(s.size for s in self.segments)
+        # static per-block segment ids (one leaf per block, by construction)
+        seg_of_block = np.zeros((self.n_blocks,), np.int32)
+        res_mask = np.zeros((self.n_pad,), bool)
+        dense_mask = np.zeros((self.n_pad,), bool)
+        for i, s in enumerate(self.segments):
+            blk0 = s.offset // per_block
+            nblk = max(1, -(-s.size // per_block))
+            seg_of_block[blk0:blk0 + nblk] = i
+            if s.use_residual:
+                res_mask[s.offset:s.offset + s.size] = True
+            if s.kind == "dense":
+                dense_mask[s.offset:s.offset + s.size] = True
+        self.seg_of_block = seg_of_block
+        self._res_mask = res_mask
+        self._dense_mask = dense_mask
+        # padded-position → raw-concat position map + validity mask: turns
+        # flatten into ONE gather + ONE select instead of a pad+concat per
+        # leaf (pad slots gather position 0 and are masked to zero)
+        pad_to_raw = np.zeros((self.n_pad,), np.int32)
+        pad_valid = np.zeros((self.n_pad,), bool)
+        raw = 0
+        for s in self.segments:
+            pad_to_raw[s.offset:s.offset + s.size] = np.arange(
+                raw, raw + s.size, dtype=np.int32
+            )
+            pad_valid[s.offset:s.offset + s.size] = True
+            raw += s.size
+        self._pad_to_raw = pad_to_raw
+        self._pad_valid = pad_valid
+        # pad slots self-maintain zeros under acc/dense/residual updates, so
+        # the mask-free fast branch only needs every LEAF to use residuals
+        self._all_residual = all(s.use_residual for s in self.segments)
+        self._jitted: Dict[tuple, Any] = {}
+
+    # ------------------------------------------------------------- building
+
+    @classmethod
+    def for_resolved(
+        cls, resolved, like: PyTree, *, bm: int = 8, lanes: int = 128
+    ) -> "FlatParamSpace":
+        """Bind ``resolved`` to the concrete leaf shapes of ``like``."""
+        leaves = resolved._leaves_of(like)
+        per_block = bm * lanes
+        segs: List[Segment] = []
+        off = 0
+        for plan, leaf in zip(resolved.plans, leaves):
+            kind = plan.codec.flat_kind
+            if kind is None:
+                raise ValueError(
+                    f"leaf {plan.path!r} codec {plan.codec.spec!r} has no "
+                    "flat fast path; guard with repro.core.flat.supports()"
+                )
+            shape = tuple(getattr(leaf, "shape", np.shape(leaf)))
+            size = int(np.prod(shape)) if shape else 1
+            segs.append(Segment(
+                path=plan.path, shape=shape, dtype=leaf.dtype, size=size,
+                offset=off, kind=kind, use_residual=plan.codec.use_residual,
+            ))
+            off += max(1, -(-size // per_block)) * per_block
+        return cls(resolved=resolved, segments=tuple(segs), bm=bm, lanes=lanes)
+
+    # --------------------------------------------------------- flat plumbing
+
+    def flatten(self, tree: PyTree) -> jax.Array:
+        """Pytree → one block-padded f32 buffer (the §10 layout)."""
+        return self._flatten_leaves(self.resolved._leaves_of(tree))
+
+    def _flatten_leaves(self, leaves) -> jax.Array:
+        raw = [
+            jnp.asarray(leaf).reshape(-1).astype(jnp.float32)
+            for leaf in leaves
+        ]
+        raw_flat = jnp.concatenate(raw) if len(raw) > 1 else raw[0]
+        if self.n_pad == self.n_total:
+            return raw_flat  # contiguous layout, no pad slots
+        gathered = jnp.take(raw_flat, jnp.asarray(self._pad_to_raw), mode="clip")
+        return jnp.where(jnp.asarray(self._pad_valid), gathered, 0.0)
+
+    def unflatten(self, flat: jax.Array, cast: bool = True) -> PyTree:
+        """Flat buffer → pytree (inverse of :meth:`flatten`)."""
+        out = []
+        for seg in self.segments:
+            piece = flat[seg.offset:seg.offset + seg.size].reshape(seg.shape)
+            out.append(piece.astype(seg.dtype) if cast else piece)
+        return jax.tree.unflatten(self.resolved.treedef, out)
+
+    def zeros_residual(self) -> jax.Array:
+        return jnp.zeros((self.n_pad,), jnp.float32)
+
+    def _check_rates(self, rates) -> Tuple[float, ...]:
+        if not isinstance(rates, tuple):
+            rates = (float(rates),) * len(self.segments)
+        if len(rates) != len(self.segments):
+            raise ValueError(
+                f"got {len(rates)} rates for {len(self.segments)} leaves"
+            )
+        return tuple(float(r) for r in rates)
+
+    def _ks(self, rates: Tuple[float, ...]) -> Tuple[int, ...]:
+        return tuple(
+            0 if s.kind == "skip"
+            else s.size if s.kind == "dense"
+            else k_for(s.size, p)
+            for s, p in zip(self.segments, rates)
+        )
+
+    # ------------------------------------------------------------ exact path
+
+    def compress(self, delta: PyTree, state, rates) -> tuple:
+        """Drop-in, bit-identical replacement for the per-leaf
+        ``ResolvedPolicy.compress`` — same (ctree, dense_tree, new_state)
+        contract, with ``new_state.residual`` kept in the flat layout."""
+        rates = self._check_rates(rates)
+        fn = self._jitted.get(("exact", rates))
+        if fn is None:
+            fn = jax.jit(lambda leaves, res, rng:
+                         self._compress_exact(leaves, res, rng, rates))
+            self._jitted[("exact", rates)] = fn
+        leaves = self.resolved._leaves_of(delta)
+        residual = state.residual if self.resolved.any_residual else None
+        ctree_leaves, dense_leaves, new_res, next_rng = fn(
+            leaves, residual, state.rng
+        )
+        new_state = state._replace(
+            residual=new_res if new_res is not None else state.residual,
+            rng=next_rng,
+            step=state.step + 1,
+        )
+        return (
+            jax.tree.unflatten(self.resolved.treedef, ctree_leaves),
+            jax.tree.unflatten(self.resolved.treedef, dense_leaves),
+            new_state,
+        )
+
+    def _compress_exact(self, leaves, residual, rng, rates):
+        segs, ks = self.segments, self._ks(rates)
+        # residual-accumulate in ONE flat op (Eq. 2 gather phase)
+        delta_flat = self._flatten_leaves(leaves)
+        if residual is None:
+            acc_flat = delta_flat
+        elif self._all_residual:
+            acc_flat = delta_flat + residual
+        else:
+            acc_flat = delta_flat + jnp.where(
+                jnp.asarray(self._res_mask), residual, 0.0
+            )
+
+        # per-segment exact two-sided top-k (paper Alg. 2 l.1-5).  The
+        # selection math is identical to the topk_signed selector, so idx,
+        # μ, and the pos/neg side decision match the legacy path bit for bit.
+        comp_leaves: List[Optional[LeafCompressed]] = [None] * len(segs)
+        gidx, gmu = [], []
+        for i, (seg, k, p) in enumerate(zip(segs, ks, rates)):
+            acc = acc_flat[seg.offset:seg.offset + seg.size]
+            if seg.kind == "skip":
+                comp_leaves[i] = LeafCompressed(
+                    idx=jnp.zeros((0,), jnp.int32),
+                    vals=jnp.zeros((0,), jnp.float32),
+                    mean=jnp.zeros((), jnp.float32),
+                    dense=jnp.zeros((0,), jnp.float32),
+                    nbits=jnp.zeros((), jnp.float32),
+                )
+                continue
+            if seg.kind == "dense":
+                codec = self.resolved.plans[i].codec
+                comp_leaves[i] = LeafCompressed(
+                    idx=jnp.zeros((0,), jnp.int32),
+                    vals=jnp.zeros((0,), jnp.float32),
+                    mean=jnp.zeros((), jnp.float32),
+                    dense=acc,
+                    nbits=jnp.asarray(codec.quantizer.value_bits(k), jnp.float32),
+                )
+                continue
+            val_pos, idx_pos = jax.lax.top_k(acc, k)
+            val_neg, idx_neg = jax.lax.top_k(-acc, k)
+            pos_wins = jnp.mean(val_pos) > jnp.mean(val_neg)
+            idx = jnp.where(pos_wins, idx_pos, idx_neg).astype(jnp.int32)
+            # μ re-gathers the winning side's ORIGINAL values, exactly like
+            # the topk_signed selector + binarize quantizer composition —
+            # down to the sign of −0.0 on an all-zero leaf
+            mu = jnp.mean(acc[idx])
+            codec = self.resolved.plans[i].codec
+            nbits = (codec.encoder.position_bits(seg.size, k, p)
+                     + codec.quantizer.value_bits(k))
+            comp_leaves[i] = LeafCompressed(
+                idx=idx,
+                vals=jnp.zeros((0,), jnp.float32),
+                mean=mu.astype(jnp.float32),
+                dense=jnp.zeros((0,), jnp.float32),
+                nbits=jnp.asarray(nbits, jnp.float32),
+            )
+            gidx.append(idx + seg.offset)
+            gmu.append(jnp.broadcast_to(mu, (k,)))
+
+        # ΔW* for EVERY sparse leaf in one fused scatter; dense segments
+        # pass their acc through via ONE static-mask select (not a chain of
+        # per-leaf update-slices); skip segments stay zero.
+        dense_flat = jnp.zeros((self.n_pad,), jnp.float32)
+        if gidx:
+            dense_flat = dense_flat.at[jnp.concatenate(gidx)].set(
+                jnp.concatenate(gmu)
+            )
+        if self._dense_mask.any():
+            dense_flat = jnp.where(
+                jnp.asarray(self._dense_mask), acc_flat, dense_flat
+            )
+
+        # single flat residual update (Eq. 2 scatter phase)
+        new_res = None
+        if residual is not None:
+            if self._all_residual:
+                new_res = acc_flat - dense_flat
+            else:
+                new_res = jnp.where(
+                    jnp.asarray(self._res_mask), acc_flat - dense_flat, residual
+                )
+
+        dense_leaves = [
+            dense_flat[s.offset:s.offset + s.size].reshape(s.shape).astype(s.dtype)
+            for s in segs
+        ]
+        # advance the RNG exactly like the per-leaf path (one split per
+        # leaf + carry), so fast/legacy state trajectories stay identical
+        next_rng = jax.random.split(rng, len(segs) + 1)[0]
+        return comp_leaves, dense_leaves, new_res, next_rng
+
+    # ----------------------------------------------------------- hist engine
+
+    def compress_hist(
+        self,
+        delta: PyTree,
+        state,
+        rates,
+        *,
+        nbins: int = 128,
+        interpret: Optional[bool] = None,
+    ) -> tuple:
+        """Histogram-threshold SBC over the flat buffer — the Pallas engine.
+
+        Per-segment semantics match :func:`repro.kernels.ops.sbc_compress_hist`
+        (approximate survivor counts; exact residual identity acc = ΔW* + R),
+        but the three passes launch ONCE each over the whole parameter set.
+        Requires an all-"sbc" policy.  Returns ``(dense_tree, new_state,
+        stats)`` with per-segment ``stats = {mu, count, nbits}``.
+        """
+        if any(s.kind != "sbc" for s in self.segments):
+            raise ValueError(
+                "compress_hist needs an all-SBC policy; dense/skip leaves "
+                "belong to the exact engine"
+            )
+        rates = self._check_rates(rates)
+        if interpret is None:
+            interpret = not on_tpu()
+        key = ("hist", rates, nbins, bool(interpret))
+        fn = self._jitted.get(key)
+        if fn is None:
+            fn = jax.jit(lambda leaves, res: self._compress_hist(
+                leaves, res, rates, nbins, interpret))
+            self._jitted[key] = fn
+        leaves = self.resolved._leaves_of(delta)
+        residual = state.residual if self.resolved.any_residual else None
+        dense_flat, new_res, stats = fn(leaves, residual)
+        new_state = state._replace(
+            residual=new_res if new_res is not None else state.residual,
+            rng=jax.random.split(state.rng, len(self.segments) + 1)[0],
+            step=state.step + 1,
+        )
+        return self.unflatten(dense_flat), new_state, stats
+
+    def _compress_hist(self, leaves, residual, rates, nbins, interpret):
+        from repro.core.golomb import expected_position_bits
+
+        segs = self.segments
+        ks = self._ks(rates)
+        delta_flat = self._flatten_leaves(leaves)
+        acc_flat = delta_flat if residual is None else delta_flat + residual
+        xpad = acc_flat.reshape(self.n_blocks * self.bm, self.lanes)
+        sob = jnp.asarray(self.seg_of_block, jnp.float32)[:, None]
+        nseg = len(segs)
+
+        # per-segment |x| range for the coarse pass (same rule as
+        # ops.sbc_compress_hist; max is order-independent → exact)
+        absmax = jnp.stack([
+            jnp.max(jnp.abs(acc_flat[s.offset:s.offset + s.size]))
+            for s in segs
+        ]) + 1e-30
+        lo0 = absmax * 2.0 ** -SPAN_OCTAVES
+        hi0 = absmax * 1.0001
+
+        def block_params(*cols, seg: bool = True):
+            rows = [c[self.seg_of_block][:, None] for c in cols]
+            if seg:
+                rows = [sob] + rows
+            return jnp.concatenate(rows, axis=1)
+
+        kf = jnp.asarray(ks, jnp.float32)
+        vthresh = jax.vmap(_side_threshold)
+        vedges = jax.vmap(lambda lo, hi: bucket_lower_edges(lo, hi, nbins))
+
+        h1 = seg_hist2side(
+            xpad, block_params(lo0, hi0, lo0, hi0), nseg=nseg, nbins=nbins,
+            bm=self.bm, lanes=self.lanes, interpret=interpret,
+        )
+        edges0 = vedges(lo0, hi0)
+        lo_p, hi_p, above_p = vthresh(h1[:, 0], edges0, kf)
+        lo_n, hi_n, above_n = vthresh(h1[:, 1], edges0, kf)
+
+        h2 = seg_hist2side(
+            xpad, block_params(lo_p, hi_p, lo_n, hi_n), nseg=nseg, nbins=nbins,
+            bm=self.bm, lanes=self.lanes, interpret=interpret,
+        )
+        t_pos, _, _ = vthresh(h2[:, 0], vedges(lo_p, hi_p), kf - above_p)
+        t_neg, _, _ = vthresh(h2[:, 1], vedges(lo_n, hi_n), kf - above_n)
+
+        mom = seg_moments(
+            xpad, block_params(t_pos, t_neg), nseg=nseg,
+            bm=self.bm, lanes=self.lanes, interpret=interpret,
+        )
+        mu_pos = mom[:, 0, 0] / jnp.maximum(mom[:, 0, 1], 1.0)
+        mu_neg = -mom[:, 1, 0] / jnp.maximum(mom[:, 1, 1], 1.0)
+        pos_wins = mu_pos > mu_neg
+        mu = jnp.where(pos_wins, mu_pos, -mu_neg)
+        count = jnp.where(pos_wins, mom[:, 0, 1], mom[:, 1, 1])
+
+        out_pad, res_pad = seg_binarize_apply(
+            xpad,
+            block_params(t_pos, t_neg, mu, pos_wins.astype(jnp.float32),
+                         seg=False),
+            bm=self.bm, lanes=self.lanes, interpret=interpret,
+        )
+        dense_flat = out_pad.reshape(-1)
+        new_res = res_pad.reshape(-1) if residual is not None else None
+
+        ebits = jnp.asarray(
+            [expected_position_bits(min(p, 1.0)) for p in rates], jnp.float32
+        )
+        stats = {"mu": mu, "count": count, "nbits": count * ebits + 32.0}
+        return dense_flat, new_res, stats

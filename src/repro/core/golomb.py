@@ -47,34 +47,6 @@ def expected_position_bits(p: float) -> float:
     return b + 1.0 / (1.0 - (1.0 - p) ** (2.0**b))
 
 
-# ------------------------------------------------------------ bit writer/reader
-
-
-class _BitWriter:
-    def __init__(self) -> None:
-        self._bits: list[np.ndarray] = []
-
-    def write(self, bits: np.ndarray) -> None:
-        self._bits.append(np.asarray(bits, dtype=np.uint8))
-
-    def getvalue(self) -> np.ndarray:
-        if not self._bits:
-            return np.zeros((0,), np.uint8)
-        return np.concatenate(self._bits)
-
-
-def _uint_to_bits(x: int, width: int) -> np.ndarray:
-    """Big-endian fixed-width binary expansion."""
-    return np.array([(x >> (width - 1 - i)) & 1 for i in range(width)], np.uint8)
-
-
-def _bits_to_uint(bits: np.ndarray) -> int:
-    out = 0
-    for b in bits:
-        out = (out << 1) | int(b)
-    return out
-
-
 # ------------------------------------------------------------------ encode
 
 
@@ -122,6 +94,20 @@ def _ragged_arange(counts: np.ndarray) -> np.ndarray:
     out = np.arange(total)
     out -= np.repeat(ends - counts, counts)
     return out
+
+
+def encode_positions_packed(indices: np.ndarray, p: float) -> tuple[bytes, int]:
+    """Alg. 3 straight to transport form: (packed bytes, exact bit count).
+
+    One whole-array encode + one ``np.packbits`` — no per-position Python
+    round-trip, so ``Wire.pack`` can consume device output (a numpy view of
+    the compressed indices) directly.  The bit count is pre-byte-padding,
+    i.e. the number Eq. 1 meters.
+    """
+    bits = encode_positions(indices, p)
+    if bits.size == 0:
+        return b"", 0
+    return np.packbits(bits).tobytes(), int(bits.size)
 
 
 def decode_positions(msg: np.ndarray, p: float) -> np.ndarray:

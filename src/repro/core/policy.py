@@ -24,6 +24,7 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.codec import Codec, make_codec
 from repro.core.stages import LeafCompressed, decompress_leaf
@@ -102,11 +103,20 @@ class LeafPlan(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class CompressionPolicy:
-    """Ordered regex rules over a default codec."""
+    """Ordered regex rules over a default codec.
+
+    ``fast=True`` opts the resolved policy into the device-resident
+    flat-buffer fast path (:mod:`repro.core.flat`, DESIGN.md §10): the
+    whole per-round compression runs as one cached jitted call over a
+    single flat buffer, with the error-feedback residual stored flat.
+    Output is bit-identical to the per-leaf path; policies containing a
+    codec with no flat form fall back to the per-leaf path silently.
+    """
 
     default: Codec
     rules: Tuple[PolicyRule, ...] = ()
     name: str = "policy"
+    fast: bool = False
 
     def plan_for(self, path: str) -> LeafPlan:
         for rule in self.rules:
@@ -150,6 +160,49 @@ class ResolvedPolicy:
     def any_stochastic(self) -> bool:
         return any(p.codec.stochastic for p in self.plans)
 
+    @property
+    def fast_compatible(self) -> bool:
+        """True when every leaf's codec has a flat-buffer form, i.e. a
+        ``fast=True`` policy will actually take the fast path."""
+        from repro.core import flat
+
+        return flat.supports(self)
+
+    def flat_space(self, like: PyTree):
+        """The :class:`~repro.core.flat.FlatParamSpace` binding this policy
+        to ``like``'s leaf layout (cached per layout; None if unsupported).
+
+        Non-float32 leaves fall back to the per-leaf path: the flat
+        residual buffer is f32, while the legacy path re-quantizes the
+        residual to the leaf dtype every round (e.g. the bf16-residual
+        configs of DESIGN.md §8) — taking the fast path there would
+        silently change the error-feedback trajectory.
+        """
+        from repro.core import flat
+
+        if not flat.supports(self):
+            return None
+        leaves = self._leaves_of(like)
+        dtypes = [
+            x.dtype if hasattr(x, "dtype") else jnp.asarray(x).dtype
+            for x in leaves
+        ]
+        if any(d != jnp.float32 for d in dtypes):
+            return None
+        key = tuple(
+            (tuple(getattr(x, "shape", np.shape(x))), d)
+            for x, d in zip(leaves, dtypes)
+        )
+        cache = getattr(self, "_flat_cache", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_flat_cache", cache)
+        space = cache.get(key)
+        if space is None:
+            space = flat.FlatParamSpace.for_resolved(self, like)
+            cache[key] = space
+        return space
+
     def rates(
         self, global_rate: float, round_idx: int = 0
     ) -> Tuple[float, ...]:
@@ -161,9 +214,16 @@ class ResolvedPolicy:
     def init_state(
         self, params: PyTree, rng: Optional[jax.Array] = None
     ) -> CompressorState:
-        residual = (
-            jax.tree.map(jnp.zeros_like, params) if self.any_residual else ()
-        )
+        if self.any_residual:
+            space = self.flat_space(params) if self.policy.fast else None
+            if space is not None:
+                # fast path: the residual lives in the flat §10 layout and
+                # never round-trips through the per-leaf pytree
+                residual = space.zeros_residual()
+            else:
+                residual = jax.tree.map(jnp.zeros_like, params)
+        else:
+            residual = ()
         if rng is None:
             rng = jax.random.PRNGKey(0)
         return CompressorState(residual=residual, rng=rng, step=jnp.zeros((), jnp.int32))
@@ -193,6 +253,12 @@ class ResolvedPolicy:
             raise ValueError(
                 f"got {len(rates)} rates for {len(self.plans)} leaves"
             )
+        if self.policy.fast:
+            space = self.flat_space(delta)
+            if space is not None:
+                # device-resident flat-buffer fast path (§10): one cached
+                # jitted call for the whole pytree, bit-identical output
+                return space.compress(delta, state, rates)
         rngs = jax.random.split(state.rng, len(leaves) + 1)
         next_rng, leaf_rngs = rngs[0], rngs[1:]
         res_leaves = (

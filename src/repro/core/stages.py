@@ -89,6 +89,9 @@ class Selector:
     dense: bool = False
     skip: bool = False
     stochastic: bool = False
+    # stage is expressible in the flat-buffer fast path (core/flat.py §10);
+    # a codec takes the fast path only when all three of its stages are
+    flat_fast: bool = False
 
     def __call__(self, flat: jax.Array, p: float, rng) -> Selection:
         return self.fn(flat, p, rng)
@@ -117,7 +120,7 @@ def make_dense_selector(**_) -> Selector:
         del p, rng
         return Selection(idx=jnp.zeros((0,), jnp.int32), vals=flat)
 
-    return Selector("dense", fn, dense=True)
+    return Selector("dense", fn, dense=True, flat_fast=True)
 
 
 @register_selector("skip")
@@ -128,7 +131,7 @@ def make_skip_selector(**_) -> Selector:
             idx=jnp.zeros((0,), jnp.int32), vals=jnp.zeros((0,), jnp.float32)
         )
 
-    return Selector("skip", fn, skip=True)
+    return Selector("skip", fn, skip=True, flat_fast=True)
 
 
 @register_selector("topk")
@@ -159,7 +162,7 @@ def make_topk_signed_selector(**_) -> Selector:
         idx = jnp.where(pos_wins, idx_pos, idx_neg).astype(jnp.int32)
         return Selection(idx=idx, vals=flat[idx])
 
-    return Selector("topk_signed", fn)
+    return Selector("topk_signed", fn, flat_fast=True)
 
 
 @register_selector("threshold")
@@ -214,6 +217,7 @@ class Quantizer:
     value_bits: Callable[[int], float]
     stochastic: bool = False
     levels: int = 0  # quantization-level count (wire code width); 0 = n/a
+    flat_fast: bool = False  # expressible in the flat fast path (§10)
 
     def __call__(self, sel: Selection, rng) -> tuple:
         return self.fn(sel, rng)
@@ -244,7 +248,7 @@ def make_identity_quantizer(**_) -> Quantizer:
         del rng
         return sel.vals.astype(jnp.float32), jnp.zeros((), jnp.float32)
 
-    return Quantizer("identity", fn, value_bits=lambda k: 32.0 * k)
+    return Quantizer("identity", fn, value_bits=lambda k: 32.0 * k, flat_fast=True)
 
 
 @register_quantizer("binarize")
@@ -257,7 +261,7 @@ def make_binarize_quantizer(**_) -> Quantizer:
         mu = jnp.mean(sel.vals).astype(jnp.float32)
         return jnp.zeros((0,), jnp.float32), mu
 
-    return Quantizer("binarize", fn, value_bits=lambda k: 32.0)
+    return Quantizer("binarize", fn, value_bits=lambda k: 32.0, flat_fast=True)
 
 
 @register_quantizer("sign")
@@ -345,6 +349,7 @@ class Encoder:
 
     name: str
     position_bits: Callable[[int, int, float], float]
+    flat_fast: bool = False  # expressible in the flat fast path (§10)
 
 
 _ENCODERS: Dict[str, Callable[..., Encoder]] = {}
@@ -367,14 +372,15 @@ def get_encoder(name: str, **kw) -> Encoder:
 @register_encoder("none")
 def make_none_encoder(**_) -> Encoder:
     """Dense / skip codecs: positions are predetermined, 0 bits."""
-    return Encoder("none", lambda n, k, p: 0.0)
+    return Encoder("none", lambda n, k, p: 0.0, flat_fast=True)
 
 
 @register_encoder("golomb")
 def make_golomb_encoder(**_) -> Encoder:
     """Optimal Golomb position coding (paper Alg. 3, Eq. 5)."""
     return Encoder(
-        "golomb", lambda n, k, p: k * expected_position_bits(min(p, 1.0))
+        "golomb", lambda n, k, p: k * expected_position_bits(min(p, 1.0)),
+        flat_fast=True,
     )
 
 

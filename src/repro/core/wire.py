@@ -100,6 +100,16 @@ def _pack_bits(bits: np.ndarray) -> bytes:
     return np.packbits(bits.astype(np.uint8)).tobytes() if bits.size else b""
 
 
+def _need(payload: bytes, nbytes: int, what: str) -> None:
+    """Clean ValueError instead of a struct.error / short-read crash when a
+    truncated or corrupted buffer asks for more payload than exists."""
+    if len(payload) < nbytes:
+        raise ValueError(
+            f"truncated SBW1 leaf payload: {what} needs {nbytes} bytes, "
+            f"have {len(payload)}"
+        )
+
+
 def _unpack_bits(buf: bytes, count: int) -> np.ndarray:
     if count == 0:
         return np.zeros((0,), np.uint8)
@@ -162,9 +172,8 @@ def _pack_sparse(comp: LeafCompressed, spec: LeafSpec) -> Tuple[bytes, int]:
 
     # ---- positions
     if spec.encoder == "golomb":
-        bits = golomb.encode_positions(idx, spec.p)
-        pos = struct.pack("<I", bits.size) + _pack_bits(bits)
-        pos_bits = int(bits.size)
+        packed, pos_bits = golomb.encode_positions_packed(idx, spec.p)
+        pos = struct.pack("<I", pos_bits) + packed
     elif spec.encoder == "bitmask":
         mask = np.zeros((spec.n,), np.uint8)
         mask[idx] = 1
@@ -248,43 +257,58 @@ def unpack_leaf(payload: bytes, spec: LeafSpec) -> LeafCompressed:
 def _unpack_sparse(payload: bytes, spec: LeafSpec) -> LeafCompressed:
     k, off = spec.k, 0
     if spec.encoder == "golomb":
+        _need(payload, 4, "golomb bit count")
         (bit_count,) = struct.unpack_from("<I", payload, 0)
         off = 4 + _nbytes(bit_count)
+        _need(payload, off, f"golomb bitstream of {bit_count} bits")
         bits = _unpack_bits(payload[4:off], bit_count)
         idx = golomb.decode_positions(bits, spec.p).astype(np.int32)
         pos_bits = bit_count
     elif spec.encoder == "bitmask":
         off = _nbytes(spec.n)
+        _need(payload, off, f"{spec.n}-bit mask")
         mask = _unpack_bits(payload[:off], spec.n)
         idx = np.nonzero(mask)[0].astype(np.int32)
         pos_bits = spec.n
     elif spec.encoder == "raw16":
         if spec.n <= (1 << 16):
             off = 2 * k
+            _need(payload, off, f"{k} u16 positions")
             idx = np.frombuffer(payload, "<u2", count=k).astype(np.int32)
             pos_bits = 16 * k
         else:  # auto-widened on pack (see _pack_sparse)
             off = 4 * k
+            _need(payload, off, f"{k} u32 positions")
             idx = np.frombuffer(payload, "<u4", count=k).astype(np.int32)
             pos_bits = 32 * k
     elif spec.encoder in ("raw32", "seed"):
         off = 4 * k
+        _need(payload, off, f"{k} u32 positions")
         idx = np.frombuffer(payload, "<u4", count=k).astype(np.int32)
         pos_bits = 32 * k
     else:
         raise NotImplementedError(f"no wire form for encoder {spec.encoder!r}")
+    if idx.size and (int(idx.min()) < 0 or int(idx.max()) >= spec.n):
+        # corrupted position stream: decoded indices outside the tensor
+        raise ValueError(
+            f"corrupt SBW1 positions for {spec.path!r}: index range "
+            f"[{int(idx.min())}, {int(idx.max())}] outside [0, {spec.n})"
+        )
     k = idx.size  # authoritative once positions are decoded
 
     mean = np.float32(0)
     vals = np.zeros((0,), np.float32)
     if spec.quantizer == "identity":
+        _need(payload, off + 4 * k, f"{k} f32 values")
         vals = np.frombuffer(payload, "<f4", count=k, offset=off).copy()
         val_bits = 32 * k
     elif spec.quantizer == "binarize":
+        _need(payload, off + 4, "binarize mean")
         (m,) = struct.unpack_from("<f", payload, off)
         mean = np.float32(m)
         val_bits = 32
     elif spec.quantizer == "sign":
+        _need(payload, off + 4 + _nbytes(k), f"sign scale + {k} sign bits")
         (m,) = struct.unpack_from("<f", payload, off)
         mean = np.float32(m)
         signs = _unpack_bits(payload[off + 4:], k).astype(np.float32)
@@ -305,10 +329,12 @@ def _unpack_dense(payload: bytes, spec: LeafSpec) -> LeafCompressed:
     empty_i = np.zeros((0,), np.int32)
     empty_f = np.zeros((0,), np.float32)
     if spec.quantizer == "identity":
+        _need(payload, 4 * n, f"{n} f32 values")
         dense = np.frombuffer(payload, "<f4", count=n).copy()
         return LeafCompressed(empty_i, empty_f, np.float32(0), dense,
                               np.float32(32 * n))
     if spec.quantizer == "sign":
+        _need(payload, 4 + _nbytes(n), f"sign scale + {n} sign bits")
         (scale,) = struct.unpack_from("<f", payload, 0)
         scale = np.float32(scale)
         signs = _unpack_bits(payload[4:], n).astype(np.float32)
@@ -316,6 +342,7 @@ def _unpack_dense(payload: bytes, spec: LeafSpec) -> LeafCompressed:
         return LeafCompressed(empty_i, empty_f, scale, dense,
                               np.float32(32 + n))
     if spec.quantizer == "two_means":
+        _need(payload, 8 + _nbytes(n), f"two means + {n} side bits")
         mu_p, mu_n = struct.unpack_from("<ff", payload, 0)
         side = _unpack_bits(payload[8:], n)
         dense = np.where(side > 0, np.float32(mu_p), np.float32(mu_n)).astype(
@@ -324,6 +351,7 @@ def _unpack_dense(payload: bytes, spec: LeafSpec) -> LeafCompressed:
         return LeafCompressed(empty_i, empty_f, np.float32(mu_p), dense,
                               np.float32(64 + n))
     if spec.quantizer == "ternary":
+        _need(payload, 4 + _nbytes(2 * n), f"ternary scale + {n} 2-bit codes")
         (scale,) = struct.unpack_from("<f", payload, 0)
         scale = np.float32(scale)
         codes = _unpack_codes(payload[4:], n, 2) - 1  # {-1,0,1}
@@ -331,9 +359,11 @@ def _unpack_dense(payload: bytes, spec: LeafSpec) -> LeafCompressed:
         return LeafCompressed(empty_i, empty_f, scale, dense,
                               np.float32(32 + 2 * n))
     if spec.quantizer == "stochastic":
+        w = _code_width(spec.levels)
+        _need(payload, 4 + _nbytes(n) + _nbytes(w * n),
+              f"qsgd norm + {n} sign bits + {n} {w}-bit codes")
         (norm,) = struct.unpack_from("<f", payload, 0)
         norm = np.float32(norm)
-        w = _code_width(spec.levels)
         sign_bytes = _nbytes(n)
         signs = _unpack_bits(payload[4:4 + sign_bytes], n).astype(np.float32)
         q = _unpack_codes(payload[4 + sign_bytes:], n, w).astype(np.float32)
@@ -407,6 +437,10 @@ class Wire:
     def unpack_compressed(self, data: bytes) -> PyTree:
         """Byte buffer → pytree of numpy LeafCompressed (for re-pack tests
         and servers that aggregate in compressed form)."""
+        if len(data) < 8:
+            raise ValueError(
+                f"truncated SBW1 buffer: {len(data)} bytes, header needs 8"
+            )
         if data[:4] != MAGIC:
             raise ValueError("bad wire magic; not an SBW1 buffer")
         (n_leaves,) = struct.unpack_from("<I", data, 4)
@@ -415,10 +449,29 @@ class Wire:
                 f"buffer has {n_leaves} leaves, spec expects {len(self.specs)}"
             )
         off, comps = 8, []
-        for spec in self.specs:
+        for i, spec in enumerate(self.specs):
+            if off + 4 > len(data):
+                raise ValueError(
+                    f"truncated SBW1 buffer: leaf {i} length field at byte "
+                    f"{off} past end ({len(data)} bytes)"
+                )
             (ln,) = struct.unpack_from("<I", data, off)
             off += 4
-            comps.append(unpack_leaf(data[off:off + ln], spec))
+            if off + ln > len(data):
+                raise ValueError(
+                    f"truncated SBW1 buffer: leaf {i} payload of {ln} bytes "
+                    f"at byte {off} past end ({len(data)} bytes)"
+                )
+            try:
+                comps.append(unpack_leaf(data[off:off + ln], spec))
+            except (ValueError, NotImplementedError):
+                raise
+            except Exception as e:
+                # any residual parse crash on adversarial bytes surfaces as
+                # a clean decode error, never an uncaught IndexError etc.
+                raise ValueError(
+                    f"corrupt SBW1 leaf payload for {spec.path!r}: {e!r}"
+                ) from e
             off += ln
         return jax.tree.unflatten(self.treedef, comps)
 

@@ -80,10 +80,18 @@ class ClientPool:
     lr: Callable[[jax.Array], jax.Array]
     profiles: Tuple[ClientProfile, ...] = (ClientProfile(),)
     seed: int = 0
+    # None → keep the policy's own flag; True/False → force the flat-buffer
+    # fast path (core/flat.py §10) for every member's compression.  The
+    # pooled residual then has shape (n_clients, n_pad) instead of a
+    # stacked per-leaf pytree — gather/scatter and the vmapped group step
+    # are layout-agnostic, so nothing else changes.
+    fast: Optional[bool] = None
 
     def __post_init__(self) -> None:
         if self.n_clients < 1:
             raise ValueError("need at least one client")
+        if self.fast is not None and self.fast != self.policy.fast:
+            self.policy = dataclasses.replace(self.policy, fast=self.fast)
         for prof in self.profiles:
             if prof.delay < 1:
                 raise ValueError(

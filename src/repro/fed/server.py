@@ -208,9 +208,17 @@ class ParameterServer:
         # its stored residual back in — so feed it the residual-free part,
         # keeping acc == gap and the invariant  W − Ŵ == residual  exact
         if self._down_resolved.any_residual:
+            residual = self._down_state.residual
+            space = (
+                self._down_resolved.flat_space(self.params)
+                if self._down_resolved.policy.fast else None
+            )
+            if space is not None:
+                # fast-path state keeps the residual in the flat §10
+                # layout; view it as a pytree for the gap subtraction
+                residual = space.unflatten(residual, cast=False)
             delta = jax.tree.map(
-                lambda g, r: g - r.astype(jnp.float32),
-                gap, self._down_state.residual,
+                lambda g, r: g - r.astype(jnp.float32), gap, residual
             )
         else:
             delta = gap
@@ -230,5 +238,13 @@ class ParameterServer:
 
     @property
     def down_residual(self) -> PyTree:
-        """Server-side error-feedback accumulator (Eq. 2, downstream)."""
-        return self._down_state.residual
+        """Server-side error-feedback accumulator (Eq. 2, downstream),
+        always viewed as a pytree (fast-path state stores it flat)."""
+        residual = self._down_state.residual
+        space = (
+            self._down_resolved.flat_space(self.params)
+            if self._down_resolved.policy.fast else None
+        )
+        if space is not None:
+            return space.unflatten(residual, cast=False)
+        return residual

@@ -1,0 +1,198 @@
+"""Segment-aware Pallas kernels: the SBC pipeline over ONE flat buffer.
+
+The per-leaf kernels in :mod:`hist2side` / :mod:`moments` /
+:mod:`binarize_apply` each launch once per tensor — L pallas_calls per
+communication round for an L-leaf model.  These variants launch each pass
+ONCE over the whole parameter set, laid out as a single block-padded flat
+buffer by :class:`repro.core.flat.FlatParamSpace` (DESIGN.md §10):
+
+    leaf i occupies whole (bm, lanes) blocks [blk_off[i], blk_off[i+1]);
+    the tail of its last block is zero-padded, so every grid step touches
+    exactly one leaf.
+
+Per-block parameters ride in a ``(nblocks, P)`` side array whose row ``i``
+is the owning segment's scalars (threshold, μ, side, …), delivered with a
+``(1, P)`` BlockSpec — the flat analogue of the per-leaf kernels' ``(1, 1)``
+scalar operands.  Reductions (histogram, moments) accumulate into an
+``(nseg, …)`` output block through a one-hot segment mask; because each
+segment's blocks are visited in the same order as a per-leaf launch over
+that segment, the per-segment float accumulation order — and therefore the
+result, bit for bit — matches the per-leaf kernels.
+
+HBM traffic per pass is unchanged from the per-leaf kernels (each is
+memory-bound at ~4 B/element read); what the flat launch removes is the
+L× kernel-dispatch and the per-leaf pad/reshape round-trips.  On CPU every
+kernel runs with ``interpret=True`` (set ``interpret=False`` on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _seg_hist_kernel(x_ref, params_ref, hist_ref, *, nbins: int, nseg: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    x = x_ref[...]  # (bm, lanes) f32, one segment's data (zero-padded tail)
+    seg = params_ref[0, 0].astype(jnp.int32)
+    absx = jnp.abs(x)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (nbins, 1, 1), 0)
+
+    rows = []
+    # side 0 bins positive entries, side 1 bins |negative| entries — the
+    # same two-sided rule as hist2side._hist_kernel, with this block's
+    # per-side [lo, hi) ranges read from its params row.
+    for side, sel in ((0, x > 0.0), (1, x < 0.0)):
+        lo = params_ref[0, 1 + 2 * side]
+        hi = params_ref[0, 2 + 2 * side]
+        in_range = sel & (absx >= lo) & (absx < hi)
+        log_lo = jnp.log2(jnp.maximum(lo, 1e-38))
+        log_hi = jnp.log2(jnp.maximum(hi, 2e-38))
+        f = (jnp.log2(jnp.maximum(absx, 1e-38)) - log_lo) / (log_hi - log_lo)
+        bucket = jnp.clip((f * nbins).astype(jnp.int32), 0, nbins - 1)
+        match = bucket[None, :, :] == bins  # (nbins, bm, lanes)
+        rows.append(jnp.sum(jnp.where(match & in_range[None], 1.0, 0.0), axis=(1, 2)))
+
+    block = jnp.stack(rows, axis=0)  # (2, nbins)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (nseg, 1, 1), 0) == seg
+    ).astype(jnp.float32)
+    hist_ref[...] += onehot * block[None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nseg", "nbins", "bm", "lanes", "interpret")
+)
+def seg_hist2side(
+    xpad: jax.Array,
+    params: jax.Array,
+    *,
+    nseg: int,
+    nbins: int = 128,
+    bm: int = 8,
+    lanes: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """(nseg, 2, nbins) two-sided log-magnitude histograms, one flat launch.
+
+    xpad:   f32[nblocks*bm, lanes] block-padded flat buffer.
+    params: f32[nblocks, 5] rows ``(seg, lo⁺, hi⁺, lo⁻, hi⁻)``.
+    """
+    nblocks = xpad.shape[0] // bm
+    return pl.pallas_call(
+        functools.partial(_seg_hist_kernel, nbins=nbins, nseg=nseg),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((bm, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, 5), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((nseg, 2, nbins), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nseg, 2, nbins), jnp.float32),
+        interpret=interpret,
+    )(xpad, params)
+
+
+def _seg_moments_kernel(x_ref, params_ref, out_ref, *, nseg: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    seg = params_ref[0, 0].astype(jnp.int32)
+    tpos = params_ref[0, 1]
+    tneg = params_ref[0, 2]
+
+    pos = x >= tpos
+    neg = x <= -tneg
+    block = jnp.array(
+        [
+            [jnp.sum(jnp.where(pos, x, 0.0)), jnp.sum(jnp.where(pos, 1.0, 0.0))],
+            [jnp.sum(jnp.where(neg, x, 0.0)), jnp.sum(jnp.where(neg, 1.0, 0.0))],
+        ],
+        jnp.float32,
+    )
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (nseg, 1, 1), 0) == seg
+    ).astype(jnp.float32)
+    out_ref[...] += onehot * block[None]
+
+
+@functools.partial(jax.jit, static_argnames=("nseg", "bm", "lanes", "interpret"))
+def seg_moments(
+    xpad: jax.Array,
+    params: jax.Array,
+    *,
+    nseg: int,
+    bm: int = 8,
+    lanes: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """(nseg, 2, 2) masked moments [[Σ⁺, n⁺], [Σ⁻, n⁻]] per segment.
+
+    params: f32[nblocks, 3] rows ``(seg, t⁺, t⁻)``.  Padding zeros are never
+    selected because t⁺, t⁻ > 0.
+    """
+    nblocks = xpad.shape[0] // bm
+    return pl.pallas_call(
+        functools.partial(_seg_moments_kernel, nseg=nseg),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((bm, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((nseg, 2, 2), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nseg, 2, 2), jnp.float32),
+        interpret=interpret,
+    )(xpad, params)
+
+
+def _seg_apply_kernel(x_ref, params_ref, out_ref, res_ref):
+    x = x_ref[...]
+    tpos = params_ref[0, 0]
+    tneg = params_ref[0, 1]
+    mu = params_ref[0, 2]
+    pos_wins = params_ref[0, 3] > 0.5
+
+    mask = jnp.where(pos_wins, x >= tpos, x <= -tneg)
+    out = jnp.where(mask, mu, 0.0)
+    out_ref[...] = out
+    res_ref[...] = x - out
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "lanes", "interpret"))
+def seg_binarize_apply(
+    xpad: jax.Array,
+    params: jax.Array,
+    *,
+    bm: int = 8,
+    lanes: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused (ΔW*, R) over the whole flat buffer — 1 read, 2 writes.
+
+    params: f32[nblocks, 4] rows ``(t⁺, t⁻, μ, pos_wins)``.  Padding zeros
+    yield ΔW* = 0 and R = 0 in the pad region (t⁺, t⁻ > 0).
+    """
+    nblocks = xpad.shape[0] // bm
+    return pl.pallas_call(
+        _seg_apply_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((bm, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((bm, lanes), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xpad.shape, jnp.float32),
+            jax.ShapeDtypeStruct(xpad.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(xpad, params)

@@ -181,7 +181,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool, *, compressor="sbc",
     return record
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -190,7 +190,11 @@ def main():
     ap.add_argument("--sparsity", type=float, default=0.001)
     ap.add_argument("--opts", default="", help="comma list: expert_parallel,seq_every2")
     ap.add_argument("--all", action="store_true")
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
     opts = frozenset(o for o in args.opts.split(",") if o)
 
     archs = [args.arch] if args.arch else ASSIGNED_ARCHS

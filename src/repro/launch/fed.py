@@ -60,18 +60,21 @@ def parse_profiles(spec: str, default_delay: int, default_p: float):
     return tuple(out)
 
 
-def build_policy(compressor: str) -> CompressionPolicy:
+def build_policy(compressor: str, fast: bool = False) -> CompressionPolicy:
     """The DGC-style recipe: tiny leaves ride dense, matrices get the
-    chosen codec (see DESIGN.md §3)."""
+    chosen codec (see DESIGN.md §3).  ``fast=True`` opts client uploads AND
+    the server's per-round broadcast re-compression into the flat-buffer
+    fast path (DESIGN.md §10)."""
     comp = get_compressor(compressor)
     return CompressionPolicy(
         default=comp.codec,
         rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),) + comp.policy.rules,
         name=f"{compressor}+dense-small",
+        fast=fast,
     )
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--cohort", type=int, default=None,
@@ -103,7 +106,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--history", default=None, help="metrics JSON path")
-    args = ap.parse_args(argv)
+    ap.add_argument("--fast", action="store_true",
+                    help="flat-buffer compression fast path (DESIGN.md §10)")
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = fed_tiny_config()
     model = build_model(cfg)
@@ -118,7 +127,7 @@ def main(argv=None):
                             seq_len=args.seq_len, temperature=0.5,
                             seed=args.seed)
 
-    policy = build_policy(args.compressor)
+    policy = build_policy(args.compressor, fast=args.fast)
     profiles = parse_profiles(args.profiles, args.delay, args.sparsity)
     agg = args.agg or ("staleness" if args.async_mode else "mean")
 

@@ -19,7 +19,7 @@ from repro.models.model import build_model
 from repro.serve import ServeEngine
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--batch", type=int, default=4)
@@ -28,7 +28,11 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--full-size", action="store_true",
                     help="use the full config (default: reduced smoke variant)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = get_config(args.arch)
     if not args.full_size:

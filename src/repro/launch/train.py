@@ -106,7 +106,7 @@ def lr_schedule(base_lr: float, decay_at: tuple[int, ...] = (), factor: float = 
     return lr
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="lm-100m")
     ap.add_argument("--compressor", default="sbc")
@@ -128,7 +128,13 @@ def main(argv=None):
                     help="pack client 0's update to real bytes every round")
     ap.add_argument("--print-policy", action="store_true",
                     help="print the per-leaf codec resolution and exit")
-    args = ap.parse_args(argv)
+    ap.add_argument("--fast", action="store_true",
+                    help="flat-buffer compression fast path (DESIGN.md §10)")
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg, task = build_preset(args.preset, batch=args.batch, seq_len=args.seq_len)
     model = build_model(cfg)
@@ -153,6 +159,7 @@ def main(argv=None):
         optimizer=get_optimizer(cfg.local_opt),
         n_clients=args.clients,
         lr=lr_schedule(lr),
+        fast=True if args.fast else None,
     )
     if args.print_policy:
         a_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))

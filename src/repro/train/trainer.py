@@ -65,11 +65,21 @@ class DSGDTrainer:
     n_clients: int
     lr: Callable[[jax.Array], jax.Array]  # lr(iteration) schedule
     residual_dtype: Any = jnp.float32
+    # None → keep the policy's own flag; True/False → force the flat-buffer
+    # fast path (core/flat.py §10) on or off.  With the fast path active the
+    # per-client error-feedback residual is stored as ONE flat f32 buffer
+    # per client instead of a per-leaf pytree.
+    fast: Optional[bool] = None
 
     def __post_init__(self) -> None:
         if isinstance(self.compressor, CompressionPolicy):
             self.compressor = Compressor.from_policy(
                 self.compressor.name, self.compressor
+            )
+        if self.fast is not None and self.fast != self.compressor.policy.fast:
+            self.compressor = Compressor.from_policy(
+                self.compressor.name,
+                dataclasses.replace(self.compressor.policy, fast=self.fast),
             )
         self._resolved: Optional[ResolvedPolicy] = None
 

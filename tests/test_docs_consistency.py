@@ -1,0 +1,114 @@
+"""Docs cannot silently rot: every registry name, codec spec, CLI flag,
+and module reference in README/docs/DESIGN must exist in the code.
+
+Two directions:
+  * accuracy — names the docs mention must exist (flags in some launcher
+    parser, stage names in the registries, `a|b|c` specs composable,
+    referenced modules importable);
+  * completeness — every registered selector/quantizer/encoder/codec/
+    compressor name must be documented somewhere.
+"""
+import importlib
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", REPO / "DESIGN.md",
+             *sorted((REPO / "docs").glob("*.md"))]
+
+# launcher + harness modules that expose build_parser()
+PARSER_MODULES = [
+    "repro.launch.train",
+    "repro.launch.fed",
+    "repro.launch.serve",
+    "repro.launch.dryrun",
+    "benchmarks.run",
+]
+
+
+def doc_text() -> str:
+    assert DOC_FILES[0].exists(), "README.md missing"
+    return "\n".join(p.read_text() for p in DOC_FILES if p.exists())
+
+
+def all_parser_flags() -> set:
+    flags = set()
+    for mod in PARSER_MODULES:
+        ap = importlib.import_module(mod).build_parser()
+        for action in ap._actions:
+            flags.update(o for o in action.option_strings if o.startswith("--"))
+    return flags
+
+
+def registries():
+    from repro.core import api
+    from repro.core.codec import available_codecs
+    from repro.core.stages import available_stages
+
+    stages = available_stages()
+    return {
+        "selectors": set(stages["selectors"]),
+        "quantizers": set(stages["quantizers"]),
+        "encoders": set(stages["encoders"]),
+        "codecs": set(available_codecs()),
+        "compressors": set(api.available()),
+    }
+
+
+def test_documented_cli_flags_exist():
+    """Every `--flag` in the docs parses in at least one launcher."""
+    documented = set(re.findall(r"`(--[a-z][a-z0-9-]*)", doc_text()))
+    assert documented, "docs mention no CLI flags — README table missing?"
+    known = all_parser_flags()
+    unknown = documented - known
+    assert not unknown, f"docs mention nonexistent CLI flags: {sorted(unknown)}"
+
+
+def test_registered_stage_and_codec_names_are_documented():
+    """Completeness: every registered name appears in README/docs."""
+    text = doc_text()
+    missing = {
+        kind: sorted(n for n in names if f"`{n}`" not in text)
+        for kind, names in registries().items()
+    }
+    missing = {k: v for k, v in missing.items() if v}
+    assert not missing, f"registered but undocumented names: {missing}"
+
+
+def test_documented_spec_strings_compose():
+    """Every `sel|quant|enc` spec in the docs is buildable from the
+    registries (catches renames that orphan doc examples)."""
+    regs = registries()
+    specs = re.findall(r"`([a-z_0-9]+)\|([a-z_0-9]+)\|([a-z_0-9]+)`", doc_text())
+    assert specs, "docs mention no codec spec strings"
+    for sel, quant, enc in specs:
+        assert sel in regs["selectors"], f"unknown selector {sel!r} in docs"
+        assert quant in regs["quantizers"], f"unknown quantizer {quant!r} in docs"
+        assert enc in regs["encoders"], f"unknown encoder {enc!r} in docs"
+
+
+def test_referenced_modules_import():
+    """`repro.launch.*` / `benchmarks.*` names in the docs must import."""
+    text = doc_text()
+    mods = set(re.findall(r"\b(repro\.launch\.[a-z_]+)\b", text))
+    mods |= set(re.findall(r"\b(benchmarks\.[a-z_0-9]+)\b", text))
+    assert mods
+    for mod in sorted(mods):
+        importlib.import_module(mod)
+
+
+def test_benchmark_files_referenced_in_docs_exist():
+    """`benchmarks/foo.py` / `docs/foo.md` paths in the docs must exist."""
+    text = doc_text()
+    for rel in set(re.findall(r"`((?:benchmarks|docs|experiments)/[\w./-]+)`", text)):
+        assert (REPO / rel).exists(), f"docs reference missing file {rel!r}"
+
+
+def test_design_section_10_documents_flat_path():
+    """DESIGN.md must carry the §10 FlatParamSpace layout contract the
+    fast-path code points at."""
+    design = (REPO / "DESIGN.md").read_text()
+    assert "§10" in design and "FlatParamSpace" in design
+    assert "fast=True" in design

@@ -285,3 +285,67 @@ class TestNonIID:
         cross = np.abs(_bigrams(task, 0, [0, 1], 32)
                        - _bigrams(task, 1, [0, 1], 32)).sum()
         assert cross < 2.0 * noise + 0.05
+
+
+class TestFlatFastPool:
+    def test_fast_pool_matches_legacy_pool_bitwise(self):
+        """ClientPool(fast=True) routes member compression through the
+        flat-buffer fast path (DESIGN.md §10): one cohort round must match
+        the legacy pool bit for bit — losses, analytic bits, and every
+        member's compressed tree — with the pooled residual stored as one
+        (n_clients, n_pad) buffer instead of a stacked pytree."""
+        cfg, model, task = micro_setup()
+        params = model.init(jax.random.PRNGKey(0))
+        pools = {
+            fast: ClientPool(
+                model=model, optimizer=get_optimizer("momentum"),
+                policy=_policy(), task=task, n_clients=4, lr=lambda it: 0.05,
+                profiles=(ClientProfile(delay=2, sparsity=0.05),),
+                fast=fast,
+            )
+            for fast in (False, True)
+        }
+        for pool in pools.values():
+            pool.init(params)
+        assert hasattr(pools[True]._comp_state.residual, "ndim")
+        assert pools[True]._comp_state.residual.ndim == 2  # (clients, n_pad)
+
+        outs = {}
+        for fast, pool in pools.items():
+            ids = pool.sample_cohort(0, 3)
+            outs[fast] = pool.run_cohort(0, ids, params)
+        a, b = outs[False], outs[True]
+        assert a.client_ids == b.client_ids
+        np.testing.assert_array_equal(a.losses, b.losses)
+        np.testing.assert_array_equal(a.bits_analytic, b.bits_analytic)
+        for ca, cb in zip(a.ctrees, b.ctrees):
+            for xa, xb in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+                assert np.asarray(xa).tobytes() == np.asarray(xb).tobytes()
+
+
+    def test_fast_server_broadcast_matches_legacy_bitwise(self):
+        """ParameterServer with a fast=True, sparse downstream policy must
+        broadcast the same bytes as the legacy server — including the flat
+        server-side residual being viewed as a pytree for the W − Ŵ gap
+        subtraction (regression: this used to crash on round 0)."""
+        import dataclasses as _dc
+
+        cfg, model, task = micro_setup()
+        params = model.init(jax.random.PRNGKey(0))
+        bumped = jax.tree.map(lambda p: p + 0.01, params)
+        servers = {}
+        for fast in (False, True):
+            pol = _dc.replace(_policy(), fast=fast)
+            srv = ParameterServer(params=params, up_policy=pol,
+                                  down_sparsity=0.05)
+            srv.params = bumped
+            servers[fast] = srv
+        for r in range(2):  # round 1 exercises the stored flat residual
+            a = servers[False].broadcast(r)
+            b = servers[True].broadcast(r)
+            assert a.blob == b.blob
+            for xa, xb in zip(jax.tree.leaves(a.dense), jax.tree.leaves(b.dense)):
+                assert np.asarray(xa).tobytes() == np.asarray(xb).tobytes()
+            for xa, xb in zip(jax.tree.leaves(servers[False].down_residual),
+                              jax.tree.leaves(servers[True].down_residual)):
+                assert np.asarray(xa).tobytes() == np.asarray(xb).tobytes()

@@ -1,0 +1,354 @@
+"""Flat-buffer fast path (core/flat.py, DESIGN.md §10).
+
+Three layers of guarantees:
+
+  * the EXACT engine is bit-identical to the legacy per-leaf path — same
+    LeafCompressed trees, same SBW1 bytes, same residuals, same RNG
+    trajectory — across rounds, under vmap, and on the edge cases the
+    layout makes interesting (non-block-multiple "padded tail" leaves,
+    all-zero leaves, skip/dense segments);
+  * the segment-aware Pallas kernels (kernels/flat.py, interpret mode)
+    match the pure-jnp oracles in kernels/ref.py and the per-leaf kernels
+    bit for bit at matching tile shapes;
+  * the HIST engine reproduces per-leaf ``ops.sbc_compress_hist`` per
+    segment and keeps the acc == ΔW* + R residual identity.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flat as flatmod
+from repro.core.api import get_compressor
+from repro.core.policy import (
+    DENSE_SMALL_PATTERN,
+    CompressionPolicy,
+    CompressorState,
+    PolicyRule,
+)
+from repro.core.wire import wire_for
+from repro.kernels import ops, ref
+from repro.kernels.flat import seg_binarize_apply, seg_hist2side, seg_moments
+from repro.kernels.hist2side import SPAN_OCTAVES, hist2side
+from repro.kernels.moments import masked_moments
+
+BM, LANES = 8, 128
+
+
+def tree_like():
+    """A pytree exercising every flat segment kind and edge case:
+    2-D matrices, a dense-ridden bias, a skipped leaf, a non-block-multiple
+    tail (17), and an all-zero leaf."""
+    return {
+        "layer0": {"w": jnp.zeros((50, 40)), "bias": jnp.zeros((40,))},
+        "layer1": {"w": jnp.zeros((123,)), "frozen": jnp.zeros((7, 3))},
+        "tail": jnp.zeros((17,)),
+        "zero": jnp.zeros((65,)),
+    }
+
+
+def sbc_policy(fast: bool) -> CompressionPolicy:
+    return CompressionPolicy(
+        default=get_compressor("sbc").codec,
+        rules=(PolicyRule(r"frozen", codec="skip"),
+               PolicyRule(DENSE_SMALL_PATTERN, codec="dense32")),
+        name="sbc+rules",
+        fast=fast,
+    )
+
+
+def rand_delta(seed: int = 3):
+    params = tree_like()
+    delta = jax.tree.map(
+        lambda x: 0.1 * jax.random.normal(jax.random.PRNGKey(seed), x.shape),
+        params,
+    )
+    delta["zero"] = jnp.zeros((65,))  # all-zero leaf keeps its edge case
+    return params, delta
+
+
+def assert_trees_bitwise(a, b, what=""):
+    la = jax.tree_util.tree_flatten_with_path(a)[0]
+    lb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(la) == len(lb)
+    for (pa, xa), (_, xb) in zip(la, lb):
+        na, nb = np.asarray(xa), np.asarray(xb)
+        assert na.shape == nb.shape and na.tobytes() == nb.tobytes(), (
+            f"{what} mismatch at {jax.tree_util.keystr(pa)}"
+        )
+
+
+class TestExactEngine:
+    def test_bit_identical_over_rounds(self):
+        params, delta = rand_delta()
+        res_legacy = sbc_policy(fast=False).resolve(params)
+        res_fast = sbc_policy(fast=True).resolve(params)
+        assert res_fast.fast_compatible
+        sl = res_legacy.init_state(params)
+        sf = res_fast.init_state(params)
+        # fast residual is ONE flat buffer, not a pytree
+        assert hasattr(sf.residual, "ndim") and sf.residual.ndim == 1
+        rates = res_legacy.rates(0.05, 0)
+        space = res_fast.flat_space(params)
+        wire = wire_for(res_legacy, params, 0.05)
+
+        for _ in range(3):  # residual feedback must stay in lockstep
+            ctL, dnL, sl = res_legacy.compress(delta, sl, rates)
+            ctF, dnF, sf = res_fast.compress(delta, sf, rates)
+            assert_trees_bitwise(ctL, ctF, "ctree")
+            assert_trees_bitwise(dnL, dnF, "dense")
+            assert np.asarray(space.flatten(sl.residual)).tobytes() == \
+                np.asarray(sf.residual).tobytes()
+            assert wire.pack(jax.device_get(ctL)) == wire.pack(jax.device_get(ctF))
+            assert np.array_equal(np.asarray(sl.rng), np.asarray(sf.rng))
+
+    def test_all_zero_leaf(self):
+        """top_k on an all-zero leaf ties everywhere: both paths pick the
+        first k indices of the losing-side tiebreak and a μ of exactly +0.0
+        (the sign bit is packed as f32, so it must match bitwise too —
+        covered by test_bit_identical_over_rounds; this pins the values)."""
+        params, delta = rand_delta()
+        res_fast = sbc_policy(fast=True).resolve(params)
+        ct, dn, _ = res_fast.compress(delta, res_fast.init_state(params),
+                                      res_fast.rates(0.05, 0))
+        mu = np.asarray(ct["zero"].mean)
+        assert mu == 0.0 and not np.signbit(mu)
+        k = ct["zero"].idx.shape[0]
+        np.testing.assert_array_equal(np.sort(np.asarray(ct["zero"].idx)),
+                                      np.arange(k))
+        assert not np.asarray(dn["zero"]).any()
+
+    def test_vmapped_client_axis(self):
+        params, _ = rand_delta()
+        C = 3
+        deltas = jax.tree.map(
+            lambda x: 0.1 * jax.random.normal(jax.random.PRNGKey(7), (C,) + x.shape),
+            params,
+        )
+        res_legacy = sbc_policy(fast=False).resolve(params)
+        res_fast = sbc_policy(fast=True).resolve(params)
+        rates = res_legacy.rates(0.05, 0)
+        rngs = jax.random.split(jax.random.PRNGKey(5), C)
+        sl = CompressorState(
+            residual=jax.tree.map(
+                lambda x: jnp.zeros((C,) + x.shape, x.dtype),
+                res_legacy.init_state(params).residual,
+            ),
+            rng=rngs, step=jnp.zeros((C,), jnp.int32),
+        )
+        n_pad = res_fast.flat_space(params).n_pad
+        sf = CompressorState(
+            residual=jnp.zeros((C, n_pad), jnp.float32),
+            rng=rngs, step=jnp.zeros((C,), jnp.int32),
+        )
+        ctL, dnL, _ = jax.vmap(lambda d, s: res_legacy.compress(d, s, rates))(deltas, sl)
+        ctF, dnF, _ = jax.vmap(lambda d, s: res_fast.compress(d, s, rates))(deltas, sf)
+        assert_trees_bitwise(ctL, ctF, "vmapped ctree")
+        assert_trees_bitwise(dnL, dnF, "vmapped dense")
+
+    def test_unsupported_codec_falls_back_to_per_leaf(self):
+        """A fast=True policy whose codec has no flat form must silently
+        use the legacy path (pytree residual, identical output)."""
+        params, delta = rand_delta()
+        pol = CompressionPolicy.single(get_compressor("topk").codec, name="topk")
+        res_slow = pol.resolve(params)
+        res_fast = dataclasses.replace(pol, fast=True).resolve(params)
+        assert not res_fast.fast_compatible
+        assert res_fast.flat_space(params) is None
+        sl = res_slow.init_state(params)
+        sf = res_fast.init_state(params)
+        assert jax.tree_util.tree_structure(sl.residual) == \
+            jax.tree_util.tree_structure(sf.residual)
+        ctL, _, _ = res_slow.compress(delta, sl, 0.05)
+        ctF, _, _ = res_fast.compress(delta, sf, 0.05)
+        assert_trees_bitwise(ctL, ctF, "fallback ctree")
+
+    def test_non_f32_leaves_fall_back_to_per_leaf(self):
+        """bf16 trees stay on the legacy path: the flat residual is f32,
+        but the per-leaf engine re-quantizes the residual to the leaf
+        dtype each round (DESIGN.md §8 configs) — the fast path must not
+        silently change that trajectory."""
+        params = {"w": jnp.zeros((64, 8), jnp.bfloat16),
+                  "v": jnp.zeros((33,), jnp.bfloat16)}
+        delta = jax.tree.map(
+            lambda x: (0.1 * jax.random.normal(jax.random.PRNGKey(0), x.shape)
+                       ).astype(x.dtype),
+            params,
+        )
+        pol = CompressionPolicy.single(get_compressor("sbc").codec)
+        res_fast = dataclasses.replace(pol, fast=True).resolve(params)
+        assert res_fast.flat_space(params) is None
+        sf = res_fast.init_state(params)
+        # pytree residual, leaf-dtype preserved (legacy behavior)
+        assert jax.tree_util.tree_structure(sf.residual) == \
+            jax.tree_util.tree_structure(params)
+        res_slow = pol.resolve(params)
+        ctL, _, slL = res_slow.compress(delta, res_slow.init_state(params), 0.05)
+        ctF, _, sfF = res_fast.compress(delta, sf, 0.05)
+        assert_trees_bitwise(ctL, ctF, "bf16 fallback ctree")
+        assert_trees_bitwise(slL.residual, sfF.residual, "bf16 residual")
+
+    def test_decompress_and_total_bits_work_on_fast_output(self):
+        params, delta = rand_delta()
+        res_fast = sbc_policy(fast=True).resolve(params)
+        ct, dn, _ = res_fast.compress(delta, res_fast.init_state(params),
+                                      res_fast.rates(0.05, 0))
+        rec = res_fast.decompress(ct, params)
+        assert_trees_bitwise(rec, dn, "decompress")
+        assert float(res_fast.total_bits(ct)) > 0
+
+
+class TestSegKernels:
+    """Flat segment kernels vs the per-leaf kernels and ref.py oracles."""
+
+    # (sizes) per segment: padded tail + block-multiple + all-zero
+    SIZES = (1000, BM * LANES, 65, 17)
+
+    def _layout(self, seed=0):
+        per_block = BM * LANES
+        rng = np.random.default_rng(seed)
+        segs = []
+        off = 0
+        for i, s in enumerate(self.SIZES):
+            x = (rng.standard_normal(s) * 2.0).astype(np.float32)
+            if s == 65:
+                x[:] = 0.0  # all-zero segment
+            segs.append((off, s, x))
+            off += max(1, -(-s // per_block)) * per_block
+        xpad = np.zeros((off,), np.float32)
+        seg_of_block = np.zeros((off // per_block,), np.int32)
+        for i, (o, s, x) in enumerate(segs):
+            xpad[o:o + s] = x
+            seg_of_block[o // per_block:(o + s - 1) // per_block + 1] = i
+        return segs, xpad.reshape(-1, LANES), seg_of_block
+
+    def test_seg_hist2side_matches_per_leaf_and_ref(self):
+        segs, xpad, sob = self._layout()
+        nbins = 32
+        los = np.array([max(np.abs(x).max(), 1e-30) * 2.0**-SPAN_OCTAVES
+                        for _, _, x in segs], np.float32)
+        his = np.array([max(np.abs(x).max(), 1e-30) * 1.0001
+                        for _, _, x in segs], np.float32)
+        params = np.stack([sob.astype(np.float32), los[sob], his[sob],
+                           los[sob], his[sob]], axis=1)
+        got = seg_hist2side(jnp.asarray(xpad), jnp.asarray(params),
+                            nseg=len(segs), nbins=nbins, bm=BM, lanes=LANES)
+        for i, (_, _, x) in enumerate(segs):
+            want_leaf = hist2side(jnp.asarray(x), los[i], his[i],
+                                  nbins=nbins, bm=BM, lanes=LANES)
+            want_ref = ref.hist2side_ref(jnp.asarray(x), los[i], his[i], nbins=nbins)
+            np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want_leaf))
+            np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want_ref))
+
+    def test_seg_moments_matches_per_leaf_and_ref(self):
+        segs, xpad, sob = self._layout(1)
+        tp = np.array([0.7, 0.5, 0.1, 0.3], np.float32)
+        tn = np.array([0.9, 0.6, 0.1, 0.2], np.float32)
+        params = np.stack([sob.astype(np.float32), tp[sob], tn[sob]], axis=1)
+        got = seg_moments(jnp.asarray(xpad), jnp.asarray(params),
+                          nseg=len(segs), bm=BM, lanes=LANES)
+        for i, (_, _, x) in enumerate(segs):
+            want_leaf = masked_moments(jnp.asarray(x), tp[i], tn[i],
+                                       bm=BM, lanes=LANES)
+            want_ref = ref.masked_moments_ref(jnp.asarray(x), tp[i], tn[i])
+            np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want_leaf))
+            np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want_ref),
+                                       rtol=1e-4)
+
+    def test_seg_binarize_apply_matches_ref(self):
+        segs, xpad, sob = self._layout(2)
+        tp = np.array([0.5, 0.4, 0.1, 0.2], np.float32)
+        tn = np.array([0.6, 0.5, 0.1, 0.3], np.float32)
+        mu = np.array([0.55, -0.45, 0.2, 0.1], np.float32)
+        side = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+        params = np.stack([tp[sob], tn[sob], mu[sob], side[sob]], axis=1)
+        out, res = seg_binarize_apply(jnp.asarray(xpad), jnp.asarray(params),
+                                      bm=BM, lanes=LANES)
+        out, res = np.asarray(out).reshape(-1), np.asarray(res).reshape(-1)
+        for i, (o, s, x) in enumerate(segs):
+            w_out, w_res = ref.binarize_apply_ref(
+                jnp.asarray(x), tp[i], tn[i], mu[i], side[i])
+            np.testing.assert_array_equal(out[o:o + s], np.asarray(w_out))
+            np.testing.assert_array_equal(res[o:o + s], np.asarray(w_res))
+        # padding region: ΔW* = 0 and R = 0 (caller slices it off)
+        pad = np.ones((xpad.size,), bool)
+        for o, s, _ in segs:
+            pad[o:o + s] = False
+        assert not out[pad].any() and not res[pad].any()
+
+
+class TestHistEngine:
+    def test_matches_per_leaf_sbc_compress_hist(self):
+        """Flat hist pipeline == per-leaf kernel pipeline per segment:
+        identical block partition → identical accumulation order → μ,
+        counts, ΔW*, and residuals match bit for bit."""
+        params = {"a": jnp.zeros((70, 80)), "b": jnp.zeros((333,)),
+                  "c": jnp.zeros((17,)), "z": jnp.zeros((50,))}
+        delta = jax.tree.map(
+            lambda x: 0.1 * jax.random.normal(jax.random.PRNGKey(11), x.shape),
+            params,
+        )
+        delta["z"] = jnp.zeros((50,))
+        pol = dataclasses.replace(
+            CompressionPolicy.single(get_compressor("sbc").codec), fast=True
+        )
+        res = pol.resolve(params)
+        space = flatmod.FlatParamSpace.for_resolved(res, params, bm=BM, lanes=LANES)
+        state = res.init_state(params)
+        rates = res.rates(0.05, 0)
+        dense_tree, new_state, stats = space.compress_hist(
+            delta, state, rates, nbins=32
+        )
+
+        from repro.core.golomb import expected_position_bits
+        from repro.kernels.binarize_apply import binarize_apply
+        from repro.kernels.hist2side import bucket_lower_edges
+
+        for i, name in enumerate(["a", "b", "c", "z"]):
+            x = delta[name].reshape(-1).astype(jnp.float32)
+            n = x.shape[0]
+            k = max(1, min(n, int(round(rates[i] * n))))
+            scale = jnp.max(jnp.abs(x)) + 1e-30
+            lo0, hi0 = scale * 2.0**-SPAN_OCTAVES, scale * 1.0001
+            h1 = hist2side(x, lo0, hi0, nbins=32, bm=BM, lanes=LANES)
+            e0 = bucket_lower_edges(lo0, hi0, 32)
+            kf = jnp.asarray(k, jnp.float32)
+            lo_p, hi_p, ab_p = ops._side_threshold(h1[0], e0, kf)
+            lo_n, hi_n, ab_n = ops._side_threshold(h1[1], e0, kf)
+            h2 = hist2side(x, jnp.stack([lo_p, lo_n]), jnp.stack([hi_p, hi_n]),
+                           nbins=32, bm=BM, lanes=LANES)
+            t_pos, _, _ = ops._side_threshold(
+                h2[0], bucket_lower_edges(lo_p, hi_p, 32), kf - ab_p)
+            t_neg, _, _ = ops._side_threshold(
+                h2[1], bucket_lower_edges(lo_n, hi_n, 32), kf - ab_n)
+            mom = masked_moments(x, t_pos, t_neg, bm=BM, lanes=LANES)
+            mu_pos = mom[0, 0] / jnp.maximum(mom[0, 1], 1.0)
+            mu_neg = -mom[1, 0] / jnp.maximum(mom[1, 1], 1.0)
+            win = mu_pos > mu_neg
+            mu = jnp.where(win, mu_pos, -mu_neg)
+            cnt = jnp.where(win, mom[0, 1], mom[1, 1])
+            out, _ = binarize_apply(x, t_pos, t_neg, mu, win.astype(jnp.float32),
+                                    bm=BM, lanes=LANES)
+            assert np.asarray(dense_tree[name]).reshape(-1).tobytes() == \
+                np.asarray(out).tobytes()
+            assert np.asarray(stats["mu"][i]).tobytes() == np.asarray(mu).tobytes()
+            assert float(stats["count"][i]) == float(cnt)
+            want_bits = float(cnt) * expected_position_bits(rates[i]) + 32.0
+            np.testing.assert_allclose(float(stats["nbits"][i]), want_bits,
+                                       rtol=1e-5)
+
+        # Eq. 2 residual identity over the whole buffer
+        acc = space.flatten(delta)
+        recon = space.flatten(dense_tree) + new_state.residual
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(recon),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_rejects_non_sbc_policies(self):
+        params, delta = rand_delta()
+        res = sbc_policy(fast=True).resolve(params)  # has dense/skip leaves
+        space = res.flat_space(params)
+        with pytest.raises(ValueError, match="all-SBC"):
+            space.compress_hist(delta, res.init_state(params),
+                                res.rates(0.05, 0))

@@ -1,0 +1,109 @@
+"""Wire.unpack robustness: truncated / corrupted SBW1 buffers.
+
+A parameter server decodes untrusted client bytes; a malformed buffer must
+surface as a clean ``ValueError`` — never an uncaught struct.error,
+IndexError, numpy broadcast crash, or silent out-of-bounds scatter.
+Valid buffers must still round-trip exactly (the hardening adds checks,
+not behavior).
+"""
+import random
+import struct
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.wire import MAGIC, wire_for
+
+CODECS = ["sbc", "topk", "signsgd", "terngrad", "qsgd", "none"]
+
+
+def make_blob(name: str, p: float):
+    comp = api.get_compressor(name)
+    delta = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (3000,)) * 0.01,
+        "b": jax.random.normal(jax.random.PRNGKey(1), (61,)),
+    }
+    state = comp.init_state(delta)
+    ctree, dense, _ = comp.compress(delta, state, p)
+    ctree = jax.tree.map(np.asarray, ctree)
+    wire = wire_for(comp.resolve(delta), delta, p)
+    return wire, wire.pack(ctree), dense
+
+
+def rate_of(name: str) -> float:
+    return 0.01 if name in ("sbc", "topk") else 1.0
+
+
+@pytest.mark.parametrize("name", CODECS)
+def test_roundtrip_still_exact(name):
+    wire, blob, dense = make_blob(name, rate_of(name))
+    rec = wire.unpack(blob)
+    np.testing.assert_allclose(rec["w"], np.asarray(dense["w"], np.float32),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", CODECS)
+def test_truncation_sweep(name):
+    """Every prefix of a valid buffer either parses or raises ValueError."""
+    wire, blob, _ = make_blob(name, rate_of(name))
+    step = max(1, len(blob) // 60)
+    for cut in list(range(0, len(blob), step)) + [len(blob) - 1]:
+        try:
+            wire.unpack(blob[:cut])
+        except ValueError:
+            pass  # the contract: clean decode error
+
+
+@pytest.mark.parametrize("name", CODECS)
+def test_random_corruption(name):
+    """Seeded byte-flips: parse or ValueError, never another exception."""
+    wire, blob, _ = make_blob(name, rate_of(name))
+    rng = random.Random(1234)
+    for _ in range(200):
+        b = bytearray(blob)
+        for _ in range(rng.randint(1, 8)):
+            b[rng.randrange(len(b))] = rng.randrange(256)
+        try:
+            wire.unpack(bytes(b))
+        except ValueError:
+            pass
+
+
+def test_bad_magic_and_leaf_count():
+    wire, blob, _ = make_blob("sbc", 0.01)
+    with pytest.raises(ValueError, match="magic"):
+        wire.unpack(b"XXXX" + blob[4:])
+    with pytest.raises(ValueError, match="leaves"):
+        wire.unpack(MAGIC + struct.pack("<I", 99) + blob[8:])
+    with pytest.raises(ValueError, match="truncated"):
+        wire.unpack(blob[:6])
+
+
+def test_oversized_golomb_bitcount_is_clean():
+    """A corrupted golomb bit-count field claiming gigabits must raise,
+    not attempt a giant allocation or a short silent parse."""
+    wire, blob, _ = make_blob("sbc", 0.01)
+    # first leaf payload starts at byte 12 (magic+count+len); its first
+    # field is the u32 golomb bit count
+    b = bytearray(blob)
+    struct.pack_into("<I", b, 12, 1 << 31)
+    with pytest.raises(ValueError):
+        wire.unpack(bytes(b))
+
+
+def test_out_of_range_positions_are_clean():
+    """raw16 positions pointing past the tensor must raise ValueError
+    instead of scattering out of bounds at reconstruction."""
+    comp = api.get_compressor("topk")  # topk|identity|raw16
+    delta = {"w": jax.random.normal(jax.random.PRNGKey(0), (500,)) * 0.01}
+    state = comp.init_state(delta)
+    ctree, _, _ = comp.compress(delta, state, 0.02)
+    ctree = jax.tree.map(np.asarray, ctree)
+    wire = wire_for(comp.resolve(delta), delta, 0.02)
+    blob = bytearray(wire.pack(ctree))
+    # overwrite the first position with an index far past n=500
+    struct.pack_into("<H", blob, 12, 0xFFFF)
+    with pytest.raises(ValueError, match="outside"):
+        wire.unpack(bytes(blob))
