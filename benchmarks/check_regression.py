@@ -1,0 +1,141 @@
+"""Benchmark regression gate: fresh --smoke output vs committed baselines.
+
+CI copies the committed ``experiments/benchmarks/*.json`` aside, re-runs
+the smoke benchmarks, then calls this module to compare fresh output
+against the baseline with a tolerance band — a real gate instead of an
+artifact upload.
+
+Two kinds of checks per benchmark:
+
+  * structural/correctness fields (parity flags, packed byte counts,
+    analytic bit totals, shapes) must match the baseline (tiny relative
+    tolerance for floats) — these are deterministic given the code, so
+    any drift is a real behavior change and the baseline JSON must be
+    regenerated deliberately;
+  * speed ratios (fresh speedup ≥ baseline speedup / RATIO_BAND) use a
+    wide band because shared CI runners are noisy; absolute ms values
+    are never gated.
+
+Only files present in BOTH directories and named in ``RULES`` are gated,
+so adding a new benchmark is non-breaking until its baseline is
+committed.
+
+  python -m benchmarks.check_regression --baseline /tmp/bench-baseline \
+      --fresh experiments/benchmarks
+"""
+
+import argparse
+import json
+import os
+import sys
+
+RATIO_BAND = 3.0  # fresh speedup may degrade to 1/3 of baseline
+REL_TOL = 0.02  # structural float fields (measured byte counts etc.)
+
+# per-benchmark field classes; list-valued JSONs match rows by "arch".
+# Only benchmarks the CI smoke sequence actually re-runs belong here —
+# a stem CI never regenerates would be compared against its own copy.
+RULES = {
+    "compress_e2e": {
+        "exact": ("arch", "n_params", "n_leaves", "packed_bytes"),
+        "ratio_min": ("speedup_vs_per_leaf",),
+    },
+    "fed_round_smoke": {
+        "exact": ("n_clients", "delay", "timed_rounds"),
+        "true": ("ledger_reconciles",),
+        "rel": ("up_bytes_per_round", "up_bytes_per_round_legacy"),
+    },
+    "dist_flat": {
+        "exact": ("n_devices", "n_clients", "n_params"),
+        "true": ("parity", "bits_equal"),
+        "rel": ("bits_per_client",),
+        "ratio_min": ("speedup", "compile_speedup"),
+    },
+}
+
+
+def _check_record(name: str, rule: dict, base: dict, fresh: dict) -> list:
+    errs = []
+    for f in rule.get("exact", ()):
+        b, x = base.get(f), fresh.get(f)
+        if x != b:
+            errs.append(f"{name}.{f}: {x!r} != baseline {b!r}")
+    for f in rule.get("true", ()):
+        if fresh.get(f) is not True:
+            errs.append(f"{name}.{f}: expected true, got {fresh.get(f)!r}")
+    for f in rule.get("rel", ()):
+        b, x = base.get(f), fresh.get(f)
+        if b is None or x is None:
+            errs.append(f"{name}.{f}: missing (base={b!r}, fresh={x!r})")
+        elif abs(x - b) > REL_TOL * max(abs(b), 1e-12):
+            errs.append(f"{name}.{f}: {x} drifted >2% from baseline {b}")
+    for f in rule.get("ratio_min", ()):
+        b, x = base.get(f), fresh.get(f)
+        if b is None or x is None:
+            errs.append(f"{name}.{f}: missing (base={b!r}, fresh={x!r})")
+        elif x < b / RATIO_BAND:
+            floor = b / RATIO_BAND
+            errs.append(f"{name}.{f}: {x:.3f} regressed below {floor:.3f}")
+    return errs
+
+
+def compare_file(stem: str, base_path: str, fresh_path: str) -> list:
+    rule = RULES[stem]
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    if type(base) is not type(fresh):
+        tb, tf = type(base).__name__, type(fresh).__name__
+        return [f"{stem}: JSON shape changed (baseline {tb}, fresh {tf})"]
+    if isinstance(base, dict):
+        return _check_record(stem, rule, base, fresh)
+    errs = []
+    fresh_by = {r.get("arch"): r for r in fresh}
+    for row in base:
+        arch = row.get("arch")
+        got = fresh_by.get(arch)
+        if got is None:
+            errs.append(f"{stem}: arch {arch!r} missing from fresh output")
+            continue
+        errs.extend(_check_record(f"{stem}[{arch}]", rule, row, got))
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True, help="dir of committed JSONs")
+    ap.add_argument("--fresh", required=True, help="dir of fresh smoke JSONs")
+    args = ap.parse_args(argv)
+
+    checked, errs = [], []
+    for stem in sorted(RULES):
+        base_path = os.path.join(args.baseline, stem + ".json")
+        fresh_path = os.path.join(args.fresh, stem + ".json")
+        has_base = os.path.exists(base_path)
+        has_fresh = os.path.exists(fresh_path)
+        if has_fresh and not has_base:
+            # loud, not fatal: a fresh benchmark without a committed
+            # baseline is not gated yet — do not let it pass silently
+            print(f"[skip] {stem} (no committed baseline)")
+            continue
+        if has_base and not has_fresh:
+            print(f"[skip] {stem} (baseline committed but no fresh output)")
+            continue
+        if not has_base:
+            continue
+        file_errs = compare_file(stem, base_path, fresh_path)
+        checked.append(stem)
+        status = "FAIL" if file_errs else "ok"
+        print(f"[{status:4s}] {stem}")
+        errs.extend(file_errs)
+    if not checked:
+        print("no gated benchmarks found in both directories", file=sys.stderr)
+        return 1
+    for e in errs:
+        print(f"  regression: {e}", file=sys.stderr)
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,199 @@
+"""Distributed round step time: sharded flat exchange vs per-leaf shard_map.
+
+Measures one full DSGD train_step — local steps, residual add, per-shard
+SBC compression, cross-client exchange, momentum masking — on a forced
+8-device host mesh ((2, 2, 2) 'pod'/'data'/'model'), two ways:
+
+  per-leaf    the PR 2 shard_map exchange: one lax.scan of top-k per leaf
+              and 2 all_gathers per leaf per client axis.
+  flat        the §11 ``ShardedFlatParamSpace`` exchange: every device
+              compresses its shard of ONE block-padded flat buffer, one
+              fused scatter, one packed (positions, μ) all_gather per
+              client axis, flat sharded residual state.
+
+Both paths must produce bit-identical parameters (asserted here; the full
+parity matrix lives in tests/dist_flat_check.py).  Because forcing host
+devices needs XLA_FLAGS before jax initializes, the measurement runs in a
+subprocess; ``--child`` is that entry point.
+
+  PYTHONPATH=src python -m benchmarks.dist_flat            # quick
+  PYTHONPATH=src python -m benchmarks.dist_flat --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MARK = "DIST_FLAT_JSON "
+N_DEVICES = 8
+
+
+def _bench_child(repeats: int) -> dict:
+    """Runs under 8 forced host devices (see main): the actual timing."""
+    import statistics
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import ModelConfig
+    from repro.launch.dist import client_topology, make_dist_train
+    from repro.models.model import build_model
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = ModelConfig(
+        name="bench", family="decoder", n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=256, vocab_size=256, dtype=jnp.float32,
+        client_mode="data", local_opt="momentum", base_lr=0.05,
+        scan_layers=True,
+    )
+    model = build_model(cfg)
+    n_clients, _ = client_topology(cfg, mesh)
+    sparsity = 0.01
+    per_leaf = make_dist_train(cfg, mesh, sparsity=sparsity, model=model)
+    flat = make_dist_train(cfg, mesh, sparsity=sparsity, model=model, fast=True)
+    assert flat.flat_space is not None
+
+    rng = jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(rng, (n_clients, 2, 64), 0, 256),
+        "labels": jax.random.randint(rng, (n_clients, 2, 64), 0, 256),
+    }
+
+    states, batches = {}, {}
+    for name, fns in (("per_leaf", per_leaf), ("flat", flat)):
+        states[name] = jax.device_put(
+            fns.init_state(jax.random.PRNGKey(0)), fns.state_shardings
+        )
+        batches[name] = jax.device_put(batch, fns.batch_shardings(batch))
+
+    # correctness anchor: one step from identical inits, identical params
+    # (also the compile call — the flat path lowers O(1) collectives
+    # instead of O(leaves), which shows up as compile time on every mesh)
+    t0 = time.perf_counter()
+    s_pl, m = per_leaf.train_step(states["per_leaf"], batches["per_leaf"])
+    jax.block_until_ready(m["loss"])
+    compile_pl = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    s_fl, m = flat.train_step(states["flat"], batches["flat"])
+    jax.block_until_ready(m["loss"])
+    compile_fl = time.perf_counter() - t0
+    parity = all(
+        np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        for a, b in zip(jax.tree.leaves(s_pl["params"]),
+                        jax.tree.leaves(s_fl["params"]))
+    )
+    states = {"per_leaf": s_pl, "flat": s_fl}
+
+    # interleaved timing so ambient load hits both paths alike
+    fns_by = {"per_leaf": per_leaf, "flat": flat}
+    samples: dict = {"per_leaf": [], "flat": []}
+    for _ in range(repeats):
+        for name in samples:
+            t0 = time.perf_counter()
+            states[name], m = fns_by[name].train_step(
+                states[name], batches[name]
+            )
+            jax.block_until_ready(m["loss"])
+            samples[name].append(time.perf_counter() - t0)
+    t_pl = statistics.median(samples["per_leaf"])
+    t_fl = statistics.median(samples["flat"])
+
+    n_params = sum(
+        x.size for x in jax.tree.leaves(states["flat"]["params"])
+    )
+    return {
+        "n_devices": N_DEVICES,
+        "mesh": "2x2x2 pod/data/model",
+        "client_mode": cfg.client_mode,
+        "n_clients": n_clients,
+        "n_params": n_params,
+        "sparsity": sparsity,
+        "repeats": repeats,
+        "per_leaf_step_ms": 1e3 * t_pl,
+        "flat_step_ms": 1e3 * t_fl,
+        "speedup": t_pl / t_fl,
+        "per_leaf_compile_s": compile_pl,
+        "flat_compile_s": compile_fl,
+        "compile_speedup": compile_pl / compile_fl,
+        "bits_per_client": flat.bits_per_client,
+        "bits_equal": per_leaf.bits_per_client == flat.bits_per_client,
+        "parity": bool(parity),
+    }
+
+
+def run(quick: bool = True) -> dict:
+    """Spawn the 8-device child, collect and persist its measurement."""
+    from benchmarks.common import save_json
+
+    repeats = 5 if quick else 15
+    env = dict(os.environ)
+    # forced host devices only exist on the CPU backend — pin it so the
+    # child's 8-device mesh builds on GPU/TPU dev boxes too
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={N_DEVICES} "
+        + env.get("XLA_FLAGS", "")
+    )
+    env["PYTHONPATH"] = (
+        os.path.join(ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.dist_flat", "--child",
+         "--repeats", str(repeats)],
+        capture_output=True, text=True, timeout=1800, env=env, cwd=ROOT,
+    )
+    out = proc.stdout + proc.stderr
+    if proc.returncode != 0:
+        raise RuntimeError(f"dist_flat child failed:\n{out[-3000:]}")
+    payload = None
+    for line in proc.stdout.splitlines():
+        if line.startswith(MARK):
+            payload = json.loads(line[len(MARK):])
+    assert payload is not None, out[-3000:]
+    assert payload["parity"], "flat and per-leaf params diverged"
+    assert payload["bits_equal"], "Eq. 1 bit accounting diverged"
+    print(
+        f"{payload['n_devices']} devices, {payload['n_clients']} clients, "
+        f"{payload['n_params']} params, p={payload['sparsity']}"
+    )
+    print(
+        f"per-leaf {payload['per_leaf_step_ms']:.1f} ms/step   "
+        f"flat {payload['flat_step_ms']:.1f} ms/step   "
+        f"x{payload['speedup']:.2f}  (parity={payload['parity']})"
+    )
+    print(
+        f"compile: per-leaf {payload['per_leaf_compile_s']:.1f} s   "
+        f"flat {payload['flat_compile_s']:.1f} s   "
+        f"x{payload['compile_speedup']:.2f}"
+    )
+    path = save_json("dist_flat", payload)
+    print(f"wrote {path}")
+    return payload
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run (default size)")
+    ap.add_argument("--full", action="store_true", help="more timing repeats")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--repeats", type=int, default=5)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    if args.child:
+        payload = _bench_child(args.repeats)
+        print(MARK + json.dumps(payload))
+        return
+    run(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

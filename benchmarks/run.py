@@ -11,9 +11,13 @@
   compress_e2e        §Flat    whole-pytree compress+pack: fast path vs
                                per-leaf baseline (DESIGN.md §10)
   fed_round           §Fed     vmapped cohort runner vs legacy loop (§9)
+  dist_flat           §Dist    sharded flat exchange vs per-leaf shard_map
+                               on 8 forced host devices (DESIGN.md §11)
 
 ``--smoke`` runs only the fast, training-free benchmarks (what CI runs;
-CI additionally smoke-runs ``fed_round --smoke`` and the fed launcher).
+CI additionally smoke-runs ``fed_round --smoke`` and the fed launcher,
+then gates the fresh JSONs against the committed baselines with
+``benchmarks.check_regression``).
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ import argparse
 import sys
 import time
 
-SMOKE = ("table1_rates", "wire_throughput", "compress_e2e")
+SMOKE = ("table1_rates", "wire_throughput", "compress_e2e", "dist_flat")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -37,9 +41,10 @@ def main(argv=None):
     args = build_parser().parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (compress_e2e, fed_round, fig3_sparsity_grid,
-                            fig4_stagewise, fig5_convergence, roofline_table,
-                            table1_rates, table2_accuracy, wire_throughput)
+    from benchmarks import (compress_e2e, dist_flat, fed_round,
+                            fig3_sparsity_grid, fig4_stagewise,
+                            fig5_convergence, roofline_table, table1_rates,
+                            table2_accuracy, wire_throughput)
 
     suite = {
         "table1_rates": table1_rates.run,
@@ -51,6 +56,7 @@ def main(argv=None):
         "wire_throughput": wire_throughput.run,
         "compress_e2e": compress_e2e.run,
         "fed_round": fed_round.run,
+        "dist_flat": dist_flat.run,
     }
     names = [args.only] if args.only else list(SMOKE) if args.smoke else list(suite)
     failures = []

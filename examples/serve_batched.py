@@ -8,7 +8,6 @@ Run:  PYTHONPATH=src python examples/serve_batched.py
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_config, reduced
 from repro.models.model import build_model

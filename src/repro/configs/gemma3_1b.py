@@ -5,7 +5,6 @@
 table relative to model size in the pool).  The 5:1 pattern bounds most of
 the KV cache → long_500k runs (global layers are O(L) decode reads).
 """
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 

@@ -5,7 +5,6 @@ is the assignment's stub: ``input_specs`` provides 576 precomputed patch
 embeddings (CLIP ViT-L/14 @ 336px) as an early-fusion prefix.  Full
 attention (long_500k skipped — LongRoPE extends range but stays quadratic).
 """
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 

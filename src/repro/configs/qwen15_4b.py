@@ -3,7 +3,6 @@
 Dense decoder, MHA-equal GQA (kv=heads=20), QKV *biases* (the family's
 signature), 151936 vocab.  Pure full attention → long_500k skipped.
 """
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 

@@ -4,7 +4,6 @@ Attention-free linear-recurrence LM with data-dependent decay (the defining
 Finch feature, kept as a LoRA in our implementation).  O(1) state per token →
 runs every decode shape including long_500k.
 """
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 

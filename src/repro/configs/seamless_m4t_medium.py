@@ -6,7 +6,6 @@ embeddings (``enc_frames``) consumed directly by the text-decoder-facing
 transformer encoder.  12L refers to each stack; 16 heads with kv=16 (MHA),
 LayerNorm + non-gated MLP (standard seq2seq transformer block).
 """
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 

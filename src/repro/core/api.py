@@ -26,7 +26,7 @@ from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 
-from repro.core.codec import Codec, available_codecs, make_codec
+from repro.core.codec import Codec
 from repro.core.policy import (
     CompressionPolicy,
     CompressorState,

@@ -43,7 +43,7 @@ for the whole parameter set.  ``benchmarks/compress_e2e.py`` measures both.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +55,117 @@ from repro.kernels.hist2side import SPAN_OCTAVES, bucket_lower_edges
 from repro.kernels.ops import _side_threshold, on_tpu
 
 PyTree = Any
+
+
+def _pad_maps(
+    offsets: Sequence[int], sizes: Sequence[int], n_pad: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Padded-position → raw-concat position map + validity mask: turns
+    flatten into ONE gather + ONE select instead of a pad+concat per
+    segment (pad slots gather position 0 and are masked to zero)."""
+    pad_to_raw = np.zeros((n_pad,), np.int32)
+    pad_valid = np.zeros((n_pad,), bool)
+    raw = 0
+    for off, size in zip(offsets, sizes):
+        pad_to_raw[off:off + size] = np.arange(raw, raw + size, dtype=np.int32)
+        pad_valid[off:off + size] = True
+        raw += size
+    return pad_to_raw, pad_valid
+
+
+def _flatten_padded(leaves, pad_to_raw, pad_valid, contiguous: bool) -> jax.Array:
+    """Flatten ``leaves`` into the block-padded layout described by the
+    maps of :func:`_pad_maps` (identical math to the original per-space
+    flatten — shared by :class:`FlatParamSpace` and the sharded space)."""
+    raw = [jnp.asarray(leaf).reshape(-1).astype(jnp.float32) for leaf in leaves]
+    raw_flat = jnp.concatenate(raw) if len(raw) > 1 else raw[0]
+    if contiguous:
+        return raw_flat
+    gathered = jnp.take(raw_flat, jnp.asarray(pad_to_raw), mode="clip")
+    return jnp.where(jnp.asarray(pad_valid), gathered, 0.0)
+
+
+def _hist_pipeline(
+    acc_flat: jax.Array,
+    bounds: Sequence[Tuple[int, int]],
+    ks: Sequence[int],
+    rates: Sequence[float],
+    seg_of_block: np.ndarray,
+    n_blocks: int,
+    bm: int,
+    lanes: int,
+    nbins: int,
+    interpret: bool,
+) -> Tuple[jax.Array, jax.Array, dict]:
+    """The three segment-aware Pallas passes over one flat buffer.
+
+    ``bounds`` is the static per-segment ``(offset, size)`` table.  Shared
+    by :meth:`FlatParamSpace.compress_hist` (per-leaf segments) and
+    :meth:`ShardedFlatParamSpace.exchange_local_hist` (per-shard
+    segments inside ``shard_map``); per-segment semantics match
+    :func:`repro.kernels.ops.sbc_compress_hist` bit for bit at matching
+    tiles.  Returns ``(delta_star_flat, residual_flat, stats)``.
+    """
+    from repro.core.golomb import expected_position_bits
+
+    nseg = len(bounds)
+    xpad = acc_flat.reshape(n_blocks * bm, lanes)
+    sob = jnp.asarray(seg_of_block, jnp.float32)[:, None]
+
+    # per-segment |x| range for the coarse pass (same rule as
+    # ops.sbc_compress_hist; max is order-independent → exact)
+    absmax = jnp.stack([
+        jnp.max(jnp.abs(acc_flat[off:off + size])) for off, size in bounds
+    ]) + 1e-30
+    lo0 = absmax * 2.0 ** -SPAN_OCTAVES
+    hi0 = absmax * 1.0001
+
+    def block_params(*cols, seg: bool = True):
+        rows = [c[seg_of_block][:, None] for c in cols]
+        if seg:
+            rows = [sob] + rows
+        return jnp.concatenate(rows, axis=1)
+
+    kf = jnp.asarray(ks, jnp.float32)
+    vthresh = jax.vmap(_side_threshold)
+    vedges = jax.vmap(lambda lo, hi: bucket_lower_edges(lo, hi, nbins))
+
+    h1 = seg_hist2side(
+        xpad, block_params(lo0, hi0, lo0, hi0), nseg=nseg, nbins=nbins,
+        bm=bm, lanes=lanes, interpret=interpret,
+    )
+    edges0 = vedges(lo0, hi0)
+    lo_p, hi_p, above_p = vthresh(h1[:, 0], edges0, kf)
+    lo_n, hi_n, above_n = vthresh(h1[:, 1], edges0, kf)
+
+    h2 = seg_hist2side(
+        xpad, block_params(lo_p, hi_p, lo_n, hi_n), nseg=nseg, nbins=nbins,
+        bm=bm, lanes=lanes, interpret=interpret,
+    )
+    t_pos, _, _ = vthresh(h2[:, 0], vedges(lo_p, hi_p), kf - above_p)
+    t_neg, _, _ = vthresh(h2[:, 1], vedges(lo_n, hi_n), kf - above_n)
+
+    mom = seg_moments(
+        xpad, block_params(t_pos, t_neg), nseg=nseg,
+        bm=bm, lanes=lanes, interpret=interpret,
+    )
+    mu_pos = mom[:, 0, 0] / jnp.maximum(mom[:, 0, 1], 1.0)
+    mu_neg = -mom[:, 1, 0] / jnp.maximum(mom[:, 1, 1], 1.0)
+    pos_wins = mu_pos > mu_neg
+    mu = jnp.where(pos_wins, mu_pos, -mu_neg)
+    count = jnp.where(pos_wins, mom[:, 0, 1], mom[:, 1, 1])
+
+    out_pad, res_pad = seg_binarize_apply(
+        xpad,
+        block_params(t_pos, t_neg, mu, pos_wins.astype(jnp.float32),
+                     seg=False),
+        bm=bm, lanes=lanes, interpret=interpret,
+    )
+    ebits = jnp.asarray(
+        [expected_position_bits(min(p, 1.0)) for p in rates], jnp.float32
+    )
+    stats = {"mu": mu, "count": count, "nbits": count * ebits + 32.0}
+    return out_pad.reshape(-1), res_pad.reshape(-1), stats
 
 def supports(resolved) -> bool:
     """True when every leaf of the resolved policy has a flat-fast codec
@@ -113,20 +224,11 @@ class FlatParamSpace:
         self.seg_of_block = seg_of_block
         self._res_mask = res_mask
         self._dense_mask = dense_mask
-        # padded-position → raw-concat position map + validity mask: turns
-        # flatten into ONE gather + ONE select instead of a pad+concat per
-        # leaf (pad slots gather position 0 and are masked to zero)
-        pad_to_raw = np.zeros((self.n_pad,), np.int32)
-        pad_valid = np.zeros((self.n_pad,), bool)
-        raw = 0
-        for s in self.segments:
-            pad_to_raw[s.offset:s.offset + s.size] = np.arange(
-                raw, raw + s.size, dtype=np.int32
-            )
-            pad_valid[s.offset:s.offset + s.size] = True
-            raw += s.size
-        self._pad_to_raw = pad_to_raw
-        self._pad_valid = pad_valid
+        self._pad_to_raw, self._pad_valid = _pad_maps(
+            [s.offset for s in self.segments],
+            [s.size for s in self.segments],
+            self.n_pad,
+        )
         # pad slots self-maintain zeros under acc/dense/residual updates, so
         # the mask-free fast branch only needs every LEAF to use residuals
         self._all_residual = all(s.use_residual for s in self.segments)
@@ -166,15 +268,10 @@ class FlatParamSpace:
         return self._flatten_leaves(self.resolved._leaves_of(tree))
 
     def _flatten_leaves(self, leaves) -> jax.Array:
-        raw = [
-            jnp.asarray(leaf).reshape(-1).astype(jnp.float32)
-            for leaf in leaves
-        ]
-        raw_flat = jnp.concatenate(raw) if len(raw) > 1 else raw[0]
-        if self.n_pad == self.n_total:
-            return raw_flat  # contiguous layout, no pad slots
-        gathered = jnp.take(raw_flat, jnp.asarray(self._pad_to_raw), mode="clip")
-        return jnp.where(jnp.asarray(self._pad_valid), gathered, 0.0)
+        return _flatten_padded(
+            leaves, self._pad_to_raw, self._pad_valid,
+            contiguous=self.n_pad == self.n_total,
+        )
 
     def unflatten(self, flat: jax.Array, cast: bool = True) -> PyTree:
         """Flat buffer → pytree (inverse of :meth:`flatten`)."""
@@ -368,71 +465,325 @@ class FlatParamSpace:
         return self.unflatten(dense_flat), new_state, stats
 
     def _compress_hist(self, leaves, residual, rates, nbins, interpret):
-        from repro.core.golomb import expected_position_bits
-
-        segs = self.segments
-        ks = self._ks(rates)
         delta_flat = self._flatten_leaves(leaves)
         acc_flat = delta_flat if residual is None else delta_flat + residual
-        xpad = acc_flat.reshape(self.n_blocks * self.bm, self.lanes)
-        sob = jnp.asarray(self.seg_of_block, jnp.float32)[:, None]
-        nseg = len(segs)
-
-        # per-segment |x| range for the coarse pass (same rule as
-        # ops.sbc_compress_hist; max is order-independent → exact)
-        absmax = jnp.stack([
-            jnp.max(jnp.abs(acc_flat[s.offset:s.offset + s.size]))
-            for s in segs
-        ]) + 1e-30
-        lo0 = absmax * 2.0 ** -SPAN_OCTAVES
-        hi0 = absmax * 1.0001
-
-        def block_params(*cols, seg: bool = True):
-            rows = [c[self.seg_of_block][:, None] for c in cols]
-            if seg:
-                rows = [sob] + rows
-            return jnp.concatenate(rows, axis=1)
-
-        kf = jnp.asarray(ks, jnp.float32)
-        vthresh = jax.vmap(_side_threshold)
-        vedges = jax.vmap(lambda lo, hi: bucket_lower_edges(lo, hi, nbins))
-
-        h1 = seg_hist2side(
-            xpad, block_params(lo0, hi0, lo0, hi0), nseg=nseg, nbins=nbins,
-            bm=self.bm, lanes=self.lanes, interpret=interpret,
+        dense_flat, res_flat, stats = _hist_pipeline(
+            acc_flat,
+            bounds=[(s.offset, s.size) for s in self.segments],
+            ks=self._ks(rates),
+            rates=rates,
+            seg_of_block=self.seg_of_block,
+            n_blocks=self.n_blocks,
+            bm=self.bm,
+            lanes=self.lanes,
+            nbins=nbins,
+            interpret=interpret,
         )
-        edges0 = vedges(lo0, hi0)
-        lo_p, hi_p, above_p = vthresh(h1[:, 0], edges0, kf)
-        lo_n, hi_n, above_n = vthresh(h1[:, 1], edges0, kf)
-
-        h2 = seg_hist2side(
-            xpad, block_params(lo_p, hi_p, lo_n, hi_n), nseg=nseg, nbins=nbins,
-            bm=self.bm, lanes=self.lanes, interpret=interpret,
-        )
-        t_pos, _, _ = vthresh(h2[:, 0], vedges(lo_p, hi_p), kf - above_p)
-        t_neg, _, _ = vthresh(h2[:, 1], vedges(lo_n, hi_n), kf - above_n)
-
-        mom = seg_moments(
-            xpad, block_params(t_pos, t_neg), nseg=nseg,
-            bm=self.bm, lanes=self.lanes, interpret=interpret,
-        )
-        mu_pos = mom[:, 0, 0] / jnp.maximum(mom[:, 0, 1], 1.0)
-        mu_neg = -mom[:, 1, 0] / jnp.maximum(mom[:, 1, 1], 1.0)
-        pos_wins = mu_pos > mu_neg
-        mu = jnp.where(pos_wins, mu_pos, -mu_neg)
-        count = jnp.where(pos_wins, mom[:, 0, 1], mom[:, 1, 1])
-
-        out_pad, res_pad = seg_binarize_apply(
-            xpad,
-            block_params(t_pos, t_neg, mu, pos_wins.astype(jnp.float32),
-                         seg=False),
-            bm=self.bm, lanes=self.lanes, interpret=interpret,
-        )
-        dense_flat = out_pad.reshape(-1)
-        new_res = res_pad.reshape(-1) if residual is not None else None
-
-        ebits = jnp.asarray(
-            [expected_position_bits(min(p, 1.0)) for p in rates], jnp.float32
-        )
-        stats = {"mu": mu, "count": count, "nbits": count * ebits + 32.0}
+        new_res = res_flat if residual is not None else None
         return dense_flat, new_res, stats
+
+
+# ===================================================================== sharded
+
+
+class DistSegment(NamedTuple):
+    """Static per-(leaf, shard) slot in the per-device local flat buffer.
+
+    ``shape`` is the LOCAL body shape of one shard of the leaf (no client
+    dim); replicated leaves carry their full shape on every shard.  The
+    per-row survivor count ``k`` uses the dist backend's rule
+    ``max(1, min(n_loc, round(p · n_loc)))`` so selection matches the
+    per-leaf ``_sbc_local`` exchange bit for bit.
+    """
+
+    path: str
+    shape: Tuple[int, ...]  # local body shape (one shard)
+    rows: int  # L (scan superblock dim; 1 for unscanned leaves)
+    n_loc: int  # per-row local length
+    offset: int  # block-aligned start in the local flat buffer
+    kind: str  # "sparse" | "dense" | "skip"
+    rate: float  # per-leaf sparsity rate (static)
+    k: int  # per-row survivors (0 for dense/skip)
+    n_shards: int  # distinct shards of the GLOBAL leaf (for Eq. 1 bits)
+    global_size: int
+
+
+@dataclasses.dataclass(eq=False)
+class ShardedFlatParamSpace:
+    """The §11 sharded twin of :class:`FlatParamSpace` (DESIGN.md §11).
+
+    One per-DEVICE block-padded flat buffer holding every local leaf
+    shard; the global residual/acc buffer has shape
+    ``(n_clients, shards_per_client, n_pad)`` and carries a
+    ``NamedSharding`` of ``P(client_axes, shard_axes, None)`` over the
+    mesh, so each device owns exactly its ``(1, 1, n_pad)`` slice.  All
+    ``exchange_local*`` methods are meant to run INSIDE ``shard_map``:
+    each device compresses its own shard of the one flat buffer and the
+    exchange is one ``all_gather`` of packed (positions, μ) flat
+    segments — not per-leaf collectives.
+
+    Selection/aggregation math mirrors the per-leaf ``_sbc_local`` /
+    ``_dense_local`` shard_map kernels of ``repro.launch.dist`` exactly
+    (same per-row top-k, same client-order scatter accumulation, same
+    sequential per-axis collectives), so the aggregated update, the
+    residual, and the Eq. 1/Eq. 5 bit counts are bit-identical to the
+    per-leaf path.
+    """
+
+    segments: Tuple[DistSegment, ...]
+    client_axes: Tuple[str, ...]
+    shard_axes: Tuple[str, ...]
+    n_clients: int
+    shards_per_client: int
+    bm: int = 8
+    lanes: int = 128
+
+    def __post_init__(self) -> None:
+        per_block = self.bm * self.lanes
+        sizes = [s.rows * s.n_loc for s in self.segments]
+        self.n_blocks = sum(max(1, -(-sz // per_block)) for sz in sizes)
+        self.n_pad = self.n_blocks * per_block
+        self.n_total = sum(sizes)
+        seg_of_block = np.zeros((self.n_blocks,), np.int32)
+        dense_mask = np.zeros((self.n_pad,), bool)
+        for i, (s, sz) in enumerate(zip(self.segments, sizes)):
+            blk0 = s.offset // per_block
+            nblk = max(1, -(-sz // per_block))
+            seg_of_block[blk0:blk0 + nblk] = i
+            if s.kind == "dense":
+                dense_mask[s.offset:s.offset + sz] = True
+        self.seg_of_block = seg_of_block
+        self._pad_to_raw, self._pad_valid = _pad_maps(
+            [s.offset for s in self.segments], sizes, self.n_pad
+        )
+        self._dense_idx = np.flatnonzero(dense_mask).astype(np.int32)
+        # static maps for the packed sparse exchange: every (row, k-slot)
+        # of every sparse segment gets one position slot; ``_pos_row``
+        # maps it to its row's slot in the packed μ stream
+        self._sparse = tuple(s for s in self.segments if s.kind == "sparse")
+        pos_row: List[np.ndarray] = []
+        mu_slot = 0
+        for s in self._sparse:
+            pos_row.append(
+                np.repeat(np.arange(mu_slot, mu_slot + s.rows, dtype=np.int32),
+                          s.k)
+            )
+            mu_slot += s.rows
+        self.n_mu = mu_slot
+        self._pos_row = (
+            np.concatenate(pos_row) if pos_row else np.zeros((0,), np.int32)
+        )
+        self.n_pos = int(self._pos_row.shape[0])
+
+    # ------------------------------------------------------------- building
+
+    @classmethod
+    def build(
+        cls,
+        entries: Sequence[dict],
+        *,
+        client_axes: Tuple[str, ...],
+        shard_axes: Tuple[str, ...],
+        n_clients: int,
+        shards_per_client: int,
+        bm: int = 8,
+        lanes: int = 128,
+    ) -> "ShardedFlatParamSpace":
+        """``entries``: per-leaf dicts with keys ``path``, ``shape``
+        (local body shape), ``rows``, ``kind``, ``rate``, ``n_shards``,
+        ``global_size`` (plain data — the launch layer computes local
+        shapes from the mesh + PartitionSpecs, core stays mesh-free)."""
+        per_block = bm * lanes
+        segs: List[DistSegment] = []
+        off = 0
+        for e in entries:
+            size = int(np.prod(e["shape"])) if e["shape"] else 1
+            rows = int(e["rows"])
+            n_loc = size // rows
+            k = (
+                max(1, min(n_loc, int(round(e["rate"] * n_loc))))
+                if e["kind"] == "sparse" else 0
+            )
+            segs.append(DistSegment(
+                path=e["path"], shape=tuple(e["shape"]), rows=rows,
+                n_loc=n_loc, offset=off, kind=e["kind"],
+                rate=float(e["rate"]), k=k, n_shards=int(e["n_shards"]),
+                global_size=int(e["global_size"]),
+            ))
+            off += max(1, -(-size // per_block)) * per_block
+        return cls(
+            segments=tuple(segs), client_axes=tuple(client_axes),
+            shard_axes=tuple(shard_axes), n_clients=int(n_clients),
+            shards_per_client=int(shards_per_client), bm=bm, lanes=lanes,
+        )
+
+    # --------------------------------------------------------- flat plumbing
+
+    def flatten_local(self, bodies) -> jax.Array:
+        """Local leaf shards (in segment order) → one local flat buffer."""
+        return _flatten_padded(
+            bodies, self._pad_to_raw, self._pad_valid,
+            contiguous=self.n_pad == self.n_total,
+        )
+
+    def unflatten_local(self, flat: jax.Array) -> List[jax.Array]:
+        """Local flat buffer → list of local body arrays (segment order)."""
+        return [
+            flat[s.offset:s.offset + s.rows * s.n_loc].reshape(s.shape)
+            for s in self.segments
+        ]
+
+    def zeros_residual(self) -> jax.Array:
+        """The flat sharded error-feedback state (host-side layout)."""
+        return jnp.zeros(
+            (self.n_clients, self.shards_per_client, self.n_pad), jnp.float32
+        )
+
+    # ------------------------------------------------------- bit accounting
+
+    def bits_per_client(self) -> float:
+        """Static Eq. 1 wire bits per client per round, summed over the
+        per-(segment, shard) counts: sparse segments pay
+        ``rows · n_shards · (k · b̄_pos(p) + 32)`` (Eq. 5 Golomb positions
+        + one 32-bit μ per (row, shard)), dense segments 32 bits/entry,
+        skipped segments 0 — the same totals as the per-leaf loop."""
+        from repro.core.golomb import expected_position_bits
+
+        total = 0.0
+        for s in self.segments:
+            if s.kind == "sparse":
+                total += s.rows * s.n_shards * (
+                    s.k * expected_position_bits(s.rate) + 32.0
+                )
+            elif s.kind == "dense":
+                total += 32.0 * s.global_size
+        return total
+
+    # ------------------------------------------------------- exact exchange
+
+    def exchange_local(self, bodies, res_flat: Optional[jax.Array]) -> tuple:
+        """Inside shard_map: compress this device's shard of every leaf
+        and exchange.  Returns ``(mean_flat, own_flat, new_res_flat)`` —
+        the aggregated update, this client's ΔW*, and the new residual,
+        all in the local flat layout.
+
+        Per-(segment, shard, row) exact two-sided top-k (paper Alg. 2,
+        identical math to ``_sbc_local``); THE exchange is one
+        ``all_gather`` of the packed global positions + one of the packed
+        μ stream per client axis, followed by one fused scatter per
+        client (scanned in client order, so float accumulation matches
+        the per-leaf path bit for bit).  Dense segments ride one
+        ``pmean`` of the packed dense slice; skip segments move nothing
+        and keep their full update in the residual.
+        """
+        acc = self.flatten_local(bodies)
+        if res_flat is not None:
+            acc = res_flat + acc
+
+        pos_parts, mu_parts = [], []
+        for s in self._sparse:
+            x = acc[s.offset:s.offset + s.rows * s.n_loc].reshape(
+                s.rows, s.n_loc
+            )
+            k = s.k
+
+            def one_layer(_, x_row, k=k):
+                val_pos, idx_pos = jax.lax.top_k(x_row, k)
+                val_neg, idx_neg = jax.lax.top_k(-x_row, k)
+                mu_pos, mu_neg = jnp.mean(val_pos), jnp.mean(val_neg)
+                pos_wins = mu_pos > mu_neg
+                idx = jnp.where(pos_wins, idx_pos, idx_neg).astype(jnp.int32)
+                mu = jnp.where(pos_wins, mu_pos, -mu_neg).astype(jnp.float32)
+                return None, (idx, mu)
+
+            _, (idx, mu) = jax.lax.scan(one_layer, None, x)
+            base = s.offset + np.arange(s.rows, dtype=np.int32) * s.n_loc
+            pos_parts.append((idx + jnp.asarray(base)[:, None]).reshape(-1))
+            mu_parts.append(mu)
+
+        own = jnp.zeros((self.n_pad,), jnp.float32)
+        if pos_parts:
+            pos = jnp.concatenate(pos_parts)
+            mu = jnp.concatenate(mu_parts)
+            pos_row = jnp.asarray(self._pos_row)
+            own = own.at[pos].set(jnp.take(mu, pos_row))
+        if self._dense_idx.size:
+            dense_idx = jnp.asarray(self._dense_idx)
+            dvals = acc[dense_idx]
+            own = own.at[dense_idx].set(dvals)
+
+        if self.client_axes and self.n_clients > 1 and pos_parts:
+            # THE exchange: the packed (positions, μ) streams cross the
+            # client axes once, not once per leaf.
+            gpos, gmu = pos, mu
+            for ax in self.client_axes:
+                gpos = jax.lax.all_gather(gpos, ax)
+                gmu = jax.lax.all_gather(gmu, ax)
+            gpos = gpos.reshape(self.n_clients, self.n_pos)
+            gmu = gmu.reshape(self.n_clients, self.n_mu)
+
+            def add_client(buf, ci):
+                vals = jnp.take(gmu[ci], pos_row) / self.n_clients
+                return buf.at[gpos[ci]].add(vals), None
+
+            mean, _ = jax.lax.scan(
+                add_client, jnp.zeros((self.n_pad,), jnp.float32),
+                jnp.arange(self.n_clients),
+            )
+        else:
+            mean = own
+        if self._dense_idx.size and self.client_axes:
+            dv = dvals
+            for ax in self.client_axes:
+                dv = jax.lax.pmean(dv, ax)
+            mean = mean.at[dense_idx].set(dv)
+
+        new_res = acc - own if res_flat is not None else None
+        return mean, own, new_res
+
+    # -------------------------------------------------------- hist exchange
+
+    def exchange_local_hist(
+        self,
+        bodies,
+        res_flat: Optional[jax.Array],
+        *,
+        nbins: int = 128,
+        interpret: Optional[bool] = None,
+    ) -> tuple:
+        """Inside shard_map: the segment-aware Pallas passes
+        (:mod:`repro.kernels.flat`) over this device's local flat buffer
+        — one launch per pass per device, per-(segment, shard) μ±.
+
+        Approximate survivor counts (histogram thresholds, like
+        ``ops.sbc_compress_hist``); the exchange is a ``pmean`` of the
+        binarized ΔW* over the client axes (no packed positions stream —
+        that needs the exact engine).  Requires an all-sparse policy.
+        """
+        if any(s.kind != "sparse" for s in self.segments):
+            raise ValueError(
+                "exchange_local_hist needs an all-SBC policy; dense/skip "
+                "leaves belong to the exact engine"
+            )
+        if interpret is None:
+            interpret = not on_tpu()
+        acc = self.flatten_local(bodies)
+        if res_flat is not None:
+            acc = res_flat + acc
+        own, res, _stats = _hist_pipeline(
+            acc,
+            bounds=[(s.offset, s.rows * s.n_loc) for s in self.segments],
+            ks=[k_for(s.rows * s.n_loc, s.rate) for s in self.segments],
+            rates=[s.rate for s in self.segments],
+            seg_of_block=self.seg_of_block,
+            n_blocks=self.n_blocks,
+            bm=self.bm,
+            lanes=self.lanes,
+            nbins=nbins,
+            interpret=interpret,
+        )
+        mean = own
+        for ax in self.client_axes:
+            mean = jax.lax.pmean(mean, ax)
+        new_res = res if res_flat is not None else None
+        return mean, own, new_res

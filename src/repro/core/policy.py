@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codec import Codec, make_codec
-from repro.core.stages import LeafCompressed, decompress_leaf
+from repro.core.stages import decompress_leaf
 
 PyTree = Any
 

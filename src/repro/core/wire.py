@@ -41,13 +41,13 @@ from __future__ import annotations
 import dataclasses
 import math
 import struct
-from typing import Any, NamedTuple, Optional, Tuple, Union
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import numpy as np
 
 from repro.core import golomb
-from repro.core.codec import Codec, leaf_k
+from repro.core.codec import Codec
 from repro.core.policy import ResolvedPolicy
 from repro.core.stages import LeafCompressed, k_for
 

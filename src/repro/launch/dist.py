@@ -37,7 +37,6 @@ per round; dense leaves count 32 bits/entry; skipped leaves count 0.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -60,6 +59,7 @@ except ImportError:  # pragma: no cover
 
 from repro.configs.base import ModelConfig
 from repro.core.codec import Codec, make_codec
+from repro.core.flat import ShardedFlatParamSpace
 from repro.core.golomb import expected_position_bits
 from repro.core.policy import CompressionPolicy, path_str
 from repro.models import hints
@@ -187,6 +187,69 @@ def _dense_local(acc_flat, client_axes, n_clients):
     return out, acc_flat
 
 
+# ------------------------------------------------- sharded flat param space
+
+
+def _local_shape(shape, spec: P, mesh_sizes: dict[str, int]) -> tuple[int, ...]:
+    """One shard's shape of a leaf under ``spec`` (GSPMD equal blocks)."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    local = []
+    for dim, entry in zip(shape, entries):
+        axes = () if entry is None else (
+            entry if isinstance(entry, tuple) else (entry,)
+        )
+        local.append(dim // math.prod(mesh_sizes.get(a, 1) for a in axes))
+    return tuple(local)
+
+
+def _sharded_flat_space(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    flat_p,
+    flat_specs,
+    scanned,
+    modes,
+    leaf_rates,
+    client_axes: tuple[str, ...],
+    n_clients: int,
+) -> Optional[ShardedFlatParamSpace]:
+    """The §11 sharded flat layout for this (cfg, mesh, policy) — or None
+    when the fast path does not apply (non-f32 leaves / non-f32 residual
+    fall back to the per-leaf exchange, same rule as PR 3's single-device
+    fast path)."""
+    if jnp.dtype(cfg.residual_dtype) != jnp.float32:
+        return None
+    if any(leaf.dtype != jnp.float32 for _, leaf in flat_p):
+        return None
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shard_axes = tuple(a for a in mesh.axis_names if a not in client_axes)
+    entries = []
+    for (path, leaf), spec, is_scan, mode, p_leaf in zip(
+        flat_p, flat_specs, scanned, modes, leaf_rates
+    ):
+        local = _local_shape(leaf.shape, spec, mesh_sizes)
+        rows = local[0] if is_scan and len(local) > 1 else 1
+        entries.append(dict(
+            path="/".join(
+                k.key if hasattr(k, "key") else str(k) for k in path
+            ),
+            shape=local,
+            rows=rows,
+            kind=mode,
+            rate=p_leaf,
+            n_shards=_shards_of(spec, mesh_sizes),
+            global_size=leaf.size,
+        ))
+    return ShardedFlatParamSpace.build(
+        entries,
+        client_axes=client_axes,
+        shard_axes=shard_axes,
+        n_clients=n_clients,
+        shards_per_client=math.prod(mesh_sizes[a] for a in shard_axes)
+        if shard_axes else 1,
+    )
+
+
 # ------------------------------------------------------------ train builder
 
 
@@ -198,6 +261,9 @@ class DistTrainFns(NamedTuple):
     abstract_state: Any
     bits_per_client: float  # static Eq. 1 wire bits per round
     bits_dense: float
+    # §11 sharded flat fast path (None when the per-leaf exchange runs):
+    flat_space: Any = None  # ShardedFlatParamSpace bound to (cfg, mesh)
+    residual_to_tree: Optional[Callable] = None  # flat residual → pytree
 
 
 def _dist_leaf_mode(codec: Codec) -> str:
@@ -228,6 +294,8 @@ def make_dist_train(
     policy: Optional[CompressionPolicy] = None,
     model: Optional[Model] = None,
     opts: frozenset = frozenset(),
+    fast: Optional[bool] = None,
+    flat_engine: str = "exact",
 ) -> DistTrainFns:
     """Build the sharded DSGD train_step for (cfg, mesh).
 
@@ -239,6 +307,21 @@ def make_dist_train(
     exchange kernels (see :func:`_dist_leaf_mode`) with its own sparsity
     rate.  Without a policy, ``compressor`` picks one codec for every leaf
     ("sbc" or any dense codec name), matching the seed behavior.
+
+    ``fast`` — None keeps the policy's own ``fast`` flag; True/False
+    forces the §11 sharded flat exchange on or off.  When active, every
+    device compresses its shard of ONE block-padded flat buffer inside
+    ``shard_map`` (:class:`~repro.core.flat.ShardedFlatParamSpace`), the
+    error-feedback residual is stored flat-sharded, and the exchange is
+    one all_gather of packed (positions, μ) flat segments.  Output is
+    bit-identical to the per-leaf exchange; non-f32 leaves (or a non-f32
+    ``cfg.residual_dtype``) fall back to the per-leaf path silently,
+    same as PR 3's single-device fast path.
+
+    ``flat_engine`` — 'exact' (default; two-sided per-row top-k) or
+    'hist' (the segment-aware Pallas passes, approximate survivor
+    counts, dense pmean exchange); 'hist' needs an all-SBC policy and an
+    active fast path.
 
     ``opts`` — §Perf beyond-baseline toggles (baseline = empty set):
       'expert_parallel'  experts shard over 'data', dispatch follows
@@ -287,6 +370,24 @@ def make_dist_train(
     modes = [_dist_leaf_mode(pl.codec) for pl in plans]
     leaf_rates = [pl.rate(sparsity, 0) for pl in plans]
 
+    # ---- §11 sharded flat fast path (None → per-leaf exchange)
+    if flat_engine not in ("exact", "hist"):
+        raise ValueError(f"unknown flat_engine {flat_engine!r}")
+    want_fast = policy.fast if fast is None else bool(fast)
+    space = None
+    if want_fast:
+        space = _sharded_flat_space(
+            cfg, mesh, flat_p, flat_specs, scanned, modes, leaf_rates,
+            client_axes, n_clients,
+        )
+    if flat_engine == "hist" and space is None:
+        raise ValueError(
+            "flat_engine='hist' needs the sharded flat fast path "
+            "(fast=True with all-f32 leaves and an f32 residual_dtype)"
+        )
+    shard_axes = tuple(a for a in mesh.axis_names if a not in client_axes)
+    res_spec = P(lead, _lead_spec(shard_axes), None)
+
     def stack_c(tree):
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n_clients,) + x.shape).copy(), tree
@@ -294,16 +395,22 @@ def make_dist_train(
 
     def init_state(rng):
         params = model.init(rng)
-        residual = jax.tree.map(
-            lambda x: jnp.zeros((n_clients,) + x.shape, cfg.residual_dtype), params
-        )
+        if space is not None:
+            # §11: the error-feedback residual lives as ONE flat sharded
+            # f32 buffer — never round-trips through the per-leaf pytree
+            residual = space.zeros_residual()
+        else:
+            residual = jax.tree.map(
+                lambda x: jnp.zeros((n_clients,) + x.shape, cfg.residual_dtype),
+                params,
+            )
         return {"params": params, "opt": stack_c(opt.init(params)), "residual": residual}
 
     a_state = jax.eval_shape(init_state, jax.random.PRNGKey(0))
     state_specs = {
         "params": p_specs,
         "opt": opt_state_specs(cfg.local_opt, p_specs, client_axes),
-        "residual": jax.tree.unflatten(
+        "residual": res_spec if space is not None else jax.tree.unflatten(
             jax.tree.structure(p_specs, is_leaf=lambda s: isinstance(s, P)), flat_r_specs
         ),
     }
@@ -326,6 +433,9 @@ def make_dist_train(
         elif mode == "dense":
             bits_policy += 32.0 * leaf.size
         bits_dense += 32.0 * leaf.size
+    if space is not None:
+        # same totals, summed from the per-(segment, shard) table (§11)
+        bits_policy = space.bits_per_client()
 
     # ---- batch shardings
     inner = "data" if cfg.client_mode == "pod" else None
@@ -354,55 +464,89 @@ def make_dist_train(
 
         deltas, opt_states, losses = jax.vmap(local)(state["opt"], batch)
 
-        # residual add (Alg. 1 l.10): acc = R + ΔW
-        acc = jax.tree.map(
-            lambda r, d: (r.astype(jnp.float32) + d.astype(jnp.float32)).astype(
-                cfg.residual_dtype
-            ),
-            state["residual"],
-            deltas,
-        )
-        acc_leaves, acc_def = jax.tree.flatten(acc)
         in_specs = tuple(flat_r_specs)
         need_mask = cfg.local_opt != "sgd"  # momentum masking needs ΔW*_i
-
-        def exchange(*leaves):
-            """Per-leaf: compress own shard with the LEAF'S codec, exchange,
-            and emit (mean ΔW, NEW residual = acc − own) — own itself never
-            leaves the shard_map unless momentum masking needs it (§Perf B9)."""
-            means, residuals, owns = [], [], []
-            for leaf, is_scan, mode, p_leaf in zip(
-                leaves, scanned, modes, leaf_rates
-            ):
-                body = leaf[0]  # client dim is locally 1 (sharded over clients)
-                L = body.shape[0] if is_scan and body.ndim > 1 else 1
-                flat = body.reshape(L, -1)
-                if mode == "sparse":
-                    dense, own = _sbc_local(flat, p_leaf, client_axes, n_clients,
-                                            out_dtype=leaf.dtype)
-                elif mode == "dense":
-                    dense, own = _dense_local(flat.astype(jnp.float32),
-                                              client_axes, n_clients)
-                else:  # skip: no traffic; the residual keeps the full update
-                    dense = jnp.zeros_like(flat, dtype=leaf.dtype)
-                    own = dense
-                new_res = (flat.astype(jnp.float32) - own.astype(jnp.float32)).astype(
-                    cfg.residual_dtype
-                )
-                means.append(dense.reshape(body.shape).astype(leaf.dtype)[None])
-                residuals.append(new_res.reshape(body.shape).astype(leaf.dtype)[None])
-                owns.append(own.reshape(body.shape).astype(leaf.dtype)[None]
-                            if need_mask else jnp.zeros((1,) * leaf.ndim, leaf.dtype))
-            return tuple(means), tuple(residuals), tuple(owns)
-
         own_specs = in_specs if need_mask else tuple(P() for _ in flat_r_specs)
-        mean_leaves, res_leaves, own_leaves = shard_map(
-            exchange, mesh=mesh, in_specs=in_specs,
-            out_specs=(in_specs, in_specs, own_specs),
-        )(*acc_leaves)
 
-        mean_tree = jax.tree.unflatten(acc_def, mean_leaves)
-        new_residual = jax.tree.unflatten(acc_def, res_leaves)
+        if space is not None:
+            # §11 sharded flat exchange: residual add + compression + the
+            # packed (positions, μ) collective all run on ONE flat buffer
+            # per device, one launch per pass.
+            delta_leaves, acc_def = jax.tree.flatten(deltas)
+
+            def exchange_flat(res, *leaves):
+                bodies = [leaf[0] for leaf in leaves]
+                fn = (space.exchange_local if flat_engine == "exact"
+                      else space.exchange_local_hist)
+                mean_f, own_f, new_res_f = fn(bodies, res[0, 0])
+                means = tuple(
+                    m.astype(leaf.dtype)[None] for m, leaf in
+                    zip(space.unflatten_local(mean_f), leaves)
+                )
+                if need_mask:
+                    owns = tuple(
+                        o.astype(leaf.dtype)[None] for o, leaf in
+                        zip(space.unflatten_local(own_f), leaves)
+                    )
+                else:
+                    owns = tuple(
+                        jnp.zeros((1,) * leaf.ndim, leaf.dtype)
+                        for leaf in leaves
+                    )
+                return means, new_res_f[None, None], owns
+
+            mean_leaves, new_residual, own_leaves = shard_map(
+                exchange_flat, mesh=mesh, in_specs=(res_spec,) + in_specs,
+                out_specs=(in_specs, res_spec, own_specs),
+            )(state["residual"], *delta_leaves)
+            mean_tree = jax.tree.unflatten(acc_def, mean_leaves)
+        else:
+            # residual add (Alg. 1 l.10): acc = R + ΔW
+            acc = jax.tree.map(
+                lambda r, d: (r.astype(jnp.float32) + d.astype(jnp.float32)).astype(
+                    cfg.residual_dtype
+                ),
+                state["residual"],
+                deltas,
+            )
+            acc_leaves, acc_def = jax.tree.flatten(acc)
+
+            def exchange(*leaves):
+                """Per-leaf: compress own shard with the LEAF'S codec, exchange,
+                and emit (mean ΔW, NEW residual = acc − own) — own itself never
+                leaves the shard_map unless momentum masking needs it (§Perf B9)."""
+                means, residuals, owns = [], [], []
+                for leaf, is_scan, mode, p_leaf in zip(
+                    leaves, scanned, modes, leaf_rates
+                ):
+                    body = leaf[0]  # client dim is locally 1 (sharded over clients)
+                    L = body.shape[0] if is_scan and body.ndim > 1 else 1
+                    flat = body.reshape(L, -1)
+                    if mode == "sparse":
+                        dense, own = _sbc_local(flat, p_leaf, client_axes, n_clients,
+                                                out_dtype=leaf.dtype)
+                    elif mode == "dense":
+                        dense, own = _dense_local(flat.astype(jnp.float32),
+                                                  client_axes, n_clients)
+                    else:  # skip: no traffic; the residual keeps the full update
+                        dense = jnp.zeros_like(flat, dtype=leaf.dtype)
+                        own = dense
+                    new_res = (flat.astype(jnp.float32) - own.astype(jnp.float32)).astype(
+                        cfg.residual_dtype
+                    )
+                    means.append(dense.reshape(body.shape).astype(leaf.dtype)[None])
+                    residuals.append(new_res.reshape(body.shape).astype(leaf.dtype)[None])
+                    owns.append(own.reshape(body.shape).astype(leaf.dtype)[None]
+                                if need_mask else jnp.zeros((1,) * leaf.ndim, leaf.dtype))
+                return tuple(means), tuple(residuals), tuple(owns)
+
+            mean_leaves, res_leaves, own_leaves = shard_map(
+                exchange, mesh=mesh, in_specs=in_specs,
+                out_specs=(in_specs, in_specs, own_specs),
+            )(*acc_leaves)
+
+            mean_tree = jax.tree.unflatten(acc_def, mean_leaves)
+            new_residual = jax.tree.unflatten(acc_def, res_leaves)
 
         # every client reconstructs the identical mean update; take client 0
         mean_delta = jax.tree.map(lambda m: m[0], mean_tree)
@@ -440,10 +584,30 @@ def make_dist_train(
         out_shardings=(state_shardings, None),
         donate_argnums=(0,),
     )
+
+    residual_to_tree = None
+    if space is not None:
+        # host-side view of the flat sharded residual as the per-leaf
+        # stacked pytree the legacy path stores (tests / checkpoints)
+        p_treedef = jax.tree.structure(a_params)
+
+        def _unf(res):
+            return tuple(b[None] for b in space.unflatten_local(res[0, 0]))
+
+        unf_jit = jax.jit(shard_map(
+            _unf, mesh=mesh, in_specs=(res_spec,),
+            out_specs=tuple(flat_r_specs),
+        ))
+
+        def residual_to_tree(flat_res):
+            return jax.tree.unflatten(p_treedef, unf_jit(flat_res))
+
     return DistTrainFns(
         jitted, init_state, state_shardings, batch_shardings, a_state,
         bits_per_client=bits_policy,
         bits_dense=bits_dense,
+        flat_space=space,
+        residual_to_tree=residual_to_tree,
     )
 
 

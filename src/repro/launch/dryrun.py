@@ -22,7 +22,6 @@ Usage:
 """
 import argparse
 import json
-import math
 import time
 import traceback
 
@@ -52,7 +51,8 @@ def scan_trips_for(cfg) -> int:
 
 
 def lower_pair(cfg, shape_name: str, mesh, *, compressor: str = "sbc",
-               sparsity: float = 0.001, opts: frozenset = frozenset()):
+               sparsity: float = 0.001, opts: frozenset = frozenset(),
+               fast: bool = False):
     """Returns (lowered, compiled, meta dict)."""
     shape = INPUT_SHAPES[shape_name]
     kind = shape["kind"]
@@ -60,7 +60,7 @@ def lower_pair(cfg, shape_name: str, mesh, *, compressor: str = "sbc",
 
     if kind == "train":
         fns = make_dist_train(cfg, mesh, compressor=compressor, sparsity=sparsity,
-                              opts=opts)
+                              opts=opts, fast=True if fast else None)
         n_clients, _ = client_topology(cfg, mesh)
         batch_sds = input_specs(cfg, shape_name, n_clients=n_clients)
         # drop the labels/tokens etc already shaped (C, per, ...) — attach shardings
@@ -75,7 +75,8 @@ def lower_pair(cfg, shape_name: str, mesh, *, compressor: str = "sbc",
         )
         lowered = fns.train_step.lower(state_sds, batch_sds)
         meta = {"unit": "train_step", "n_clients": n_clients,
-                "bits_per_client": fns.bits_per_client, "bits_dense": fns.bits_dense}
+                "bits_per_client": fns.bits_per_client, "bits_dense": fns.bits_dense,
+                "flat_fast": fns.flat_space is not None}
     elif kind == "prefill":
         fns = make_dist_prefill(cfg, mesh)
         batch_sds = input_specs(cfg, shape_name)
@@ -116,7 +117,7 @@ def _param_sds(cfg, p_shardings):
 
 def run_pair(arch: str, shape_name: str, multi_pod: bool, *, compressor="sbc",
              sparsity=0.001, save=True, verbose=True,
-             opts: frozenset = frozenset()) -> dict:
+             opts: frozenset = frozenset(), fast: bool = False) -> dict:
     cfg = get_config(arch)
     mesh_name = "multi" if multi_pod else "single"
     if opts:
@@ -136,7 +137,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool, *, compressor="sbc",
     try:
         lowered, compiled, meta = lower_pair(
             cfg, shape_name, mesh, compressor=compressor, sparsity=sparsity,
-            opts=opts,
+            opts=opts, fast=fast,
         )
         record.update(meta)
         mem = compiled.memory_analysis()
@@ -189,6 +190,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--compressor", default="sbc")
     ap.add_argument("--sparsity", type=float, default=0.001)
     ap.add_argument("--opts", default="", help="comma list: expert_parallel,seq_every2")
+    ap.add_argument("--fast", action="store_true",
+                    help="sharded flat-buffer exchange (DESIGN.md §11)")
     ap.add_argument("--all", action="store_true")
     return ap
 
@@ -207,7 +210,7 @@ def main():
             for mp in meshes:
                 results.append(
                     run_pair(arch, shape, mp, compressor=args.compressor,
-                             sparsity=args.sparsity, opts=opts)
+                             sparsity=args.sparsity, opts=opts, fast=args.fast)
                 )
     ok = sum(r["status"] == "ok" for r in results)
     skip = sum(r["status"] == "skip" for r in results)

@@ -12,7 +12,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_config, reduced
 from repro.models.model import build_model

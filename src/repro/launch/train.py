@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 import os
 import time
 
@@ -37,9 +36,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import save_pytree
-from repro.configs.base import ASSIGNED_ARCHS, ModelConfig, get_config, reduced
+from repro.configs.base import ModelConfig, get_config, reduced
 from repro.core.api import CompressionPolicy, PolicyRule, get_compressor
-from repro.core.baselines import dgc_policy
+from repro.core.baselines import dgc_policy  # noqa: F401 (registration)
 from repro.data import client_batches, make_classification_task, make_lm_task
 from repro.models.model import build_model
 from repro.optim import get_optimizer

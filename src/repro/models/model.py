@@ -11,7 +11,6 @@ import re
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig

@@ -18,8 +18,6 @@ Shazeer/Switch form the MoE sources use.
 from __future__ import annotations
 
 import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -18,8 +18,7 @@ prefill (full seq, returns caches), decode (1 token, carries caches).
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,7 @@ from repro.models import attention as attn
 from repro.models import hints
 from repro.models import moe as moe_lib
 from repro.models import ssm
-from repro.models.layers import dense, embed_lookup, init_embed, init_mlp, init_norm, mlp_apply, norm_apply
+from repro.models.layers import embed_lookup, init_embed, init_mlp, init_norm, mlp_apply, norm_apply
 
 PyTree = Any
 

@@ -20,7 +20,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.launch.dist import client_topology, make_dist_train
-from repro.models.model import build_model
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 

@@ -1,0 +1,77 @@
+"""The benchmark regression gate (benchmarks/check_regression.py) must
+pass on identical dirs, tolerate noisy-but-sane timing drift, and fail on
+correctness drift or large speed regressions."""
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import RATIO_BAND, main
+
+BASE = {
+    "n_devices": 8,
+    "n_clients": 4,
+    "n_params": 1000,
+    "bits_per_client": 5e4,
+    "speedup": 3.0,
+    "compile_speedup": 1.5,
+    "parity": True,
+    "bits_equal": True,
+}
+
+
+def write(dirpath, payload):
+    dirpath.mkdir(exist_ok=True)
+    (dirpath / "dist_flat.json").write_text(json.dumps(payload))
+
+
+def run_gate(tmp_path, fresh):
+    write(tmp_path / "base", BASE)
+    write(tmp_path / "fresh", fresh)
+    base_dir = str(tmp_path / "base")
+    fresh_dir = str(tmp_path / "fresh")
+    return main(["--baseline", base_dir, "--fresh", fresh_dir])
+
+
+def test_identical_passes(tmp_path):
+    assert run_gate(tmp_path, dict(BASE)) == 0
+
+
+def test_timing_noise_within_band_passes(tmp_path):
+    fresh = dict(BASE, speedup=BASE["speedup"] / (RATIO_BAND - 0.5))
+    assert run_gate(tmp_path, fresh) == 0
+
+
+def test_speed_regression_fails(tmp_path):
+    fresh = dict(BASE, speedup=BASE["speedup"] / (RATIO_BAND + 1.0))
+    assert run_gate(tmp_path, fresh) == 1
+
+
+def test_parity_flip_fails(tmp_path):
+    assert run_gate(tmp_path, dict(BASE, parity=False)) == 1
+
+
+def test_structural_drift_fails(tmp_path):
+    assert run_gate(tmp_path, dict(BASE, n_params=999)) == 1
+    assert run_gate(tmp_path, dict(BASE, bits_per_client=6e4)) == 1
+
+
+def test_empty_intersection_fails(tmp_path):
+    (tmp_path / "base").mkdir()
+    (tmp_path / "fresh").mkdir()
+    base_dir = str(tmp_path / "base")
+    fresh_dir = str(tmp_path / "fresh")
+    assert main(["--baseline", base_dir, "--fresh", fresh_dir]) == 1
+
+
+def test_missing_gated_field_fails(tmp_path):
+    fresh = dict(BASE)
+    del fresh["speedup"]
+    assert run_gate(tmp_path, fresh) == 1
+
+
+@pytest.mark.parametrize("field", ["parity", "bits_equal"])
+def test_true_fields_must_be_present(tmp_path, field):
+    fresh = dict(BASE)
+    del fresh[field]
+    assert run_gate(tmp_path, fresh) == 1

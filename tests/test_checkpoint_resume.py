@@ -1,0 +1,108 @@
+"""Checkpoint/resume of a DSGDTrainer mid-run (ISSUE 4 satellite).
+
+A fast=True trainer's per-client error-feedback residual is ONE flat f32
+buffer per client (core/flat.py §10).  Saving the full TrainState —
+params, per-client optimizer state, the flat residual, RNG keys, round
+counter — through checkpoint/io.py and restoring it must continue the
+run BIT-identically to an uninterrupted one: error feedback means a
+lossy checkpoint would silently change every later update.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import restore_train_state, save_train_state
+from repro.core.api import get_compressor
+from repro.core.policy import (
+    DENSE_SMALL_PATTERN,
+    CompressionPolicy,
+    PolicyRule,
+)
+from repro.data import client_batches
+from repro.optim import get_optimizer
+from repro.train import DSGDTrainer
+
+N_CLIENTS = 2
+SPARSITY = 0.02
+
+
+def make_trainer(lm_setup):
+    cfg, model, task = lm_setup
+    policy = CompressionPolicy(
+        default=get_compressor("sbc").codec,
+        rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),),
+        name="sbc+dense-small",
+        fast=True,
+    )
+    trainer = DSGDTrainer(
+        model=model,
+        compressor=policy,
+        optimizer=get_optimizer("momentum"),
+        n_clients=N_CLIENTS,
+        lr=lambda it: 0.1,
+    )
+    return trainer, client_batches(task, N_CLIENTS, 1)
+
+
+def run_rounds(trainer, batch_fn, state, rates, start, n):
+    for r in range(start, start + n):
+        state, _ = trainer.round_step(
+            state, batch_fn(r), n_delay=1, sparsity=rates
+        )
+    return state
+
+
+def assert_state_bitwise(a, b):
+    la = jax.tree.leaves(a._asdict())
+    lb = jax.tree.leaves(b._asdict())
+    assert len(la) == len(lb)
+    for xa, xb in zip(la, lb):
+        na, nb = np.asarray(xa), np.asarray(xb)
+        assert na.dtype == nb.dtype and na.shape == nb.shape
+        assert na.tobytes() == nb.tobytes()
+
+
+def test_resume_mid_run_is_bit_identical(tmp_path, lm_setup):
+    trainer, batch_fn = make_trainer(lm_setup)
+    state = trainer.init(jax.random.PRNGKey(0))
+    rates = trainer.resolved(state.params).rates(SPARSITY, 0)
+
+    # the fast path stores the residual FLAT: (clients, n_pad) f32
+    assert state.comp_state.residual.ndim == 2
+    assert state.comp_state.residual.shape[0] == N_CLIENTS
+    assert state.comp_state.residual.dtype == jnp.float32
+
+    # 2 rounds → checkpoint → 2 more rounds, against 4 straight rounds
+    mid = run_rounds(trainer, batch_fn, state, rates, 0, 2)
+    path = str(tmp_path / "mid.npz")
+    save_train_state(path, mid)
+    uninterrupted = run_rounds(trainer, batch_fn, mid, rates, 2, 2)
+
+    like = trainer.init(jax.random.PRNGKey(7))  # template only
+    restored = restore_train_state(path, like)
+    assert_state_bitwise(restored, mid)  # the checkpoint itself is lossless
+    assert int(restored.round) == 2
+    resumed = run_rounds(trainer, batch_fn, restored, rates, 2, 2)
+
+    assert_state_bitwise(resumed, uninterrupted)
+
+
+def test_restore_rejects_mismatched_structure(tmp_path, lm_setup):
+    import pytest
+
+    trainer, batch_fn = make_trainer(lm_setup)
+    state = trainer.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "state.npz")
+    save_train_state(path, state)
+
+    wrong = DSGDTrainer(
+        model=trainer.model,
+        compressor=CompressionPolicy.single(
+            get_compressor("sbc").codec, name="sbc", fast=True
+        ),
+        optimizer=get_optimizer("momentum"),
+        n_clients=N_CLIENTS + 1,
+        lr=lambda it: 0.1,
+    )
+    with pytest.raises(ValueError):
+        restore_train_state(path, wrong.init(jax.random.PRNGKey(0)))

@@ -1,0 +1,157 @@
+"""Sharded flat dist exchange (DESIGN.md §11).
+
+Two layers:
+
+  * the 8-fake-device parity matrix runs in a subprocess
+    (``dist_flat_check.py``): both client modes must produce bit-identical
+    params, residuals, optimizer state, and Eq. 1/Eq. 5 bit counts
+    against the per-leaf shard_map path, and the Pallas hist engine must
+    execute inside shard_map;
+  * single-device unit tests of :class:`ShardedFlatParamSpace` — layout
+    invariants, flatten/unflatten round-trip, bit accounting equal to the
+    per-leaf static loop, fallback gating.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.flat import ShardedFlatParamSpace
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_sharded_flat_parity_on_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "dist_flat_check.py")],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, out[-3000:]
+    assert "CHECK all_parity_ok=True" in out
+    for line in out.splitlines():
+        if line.startswith("CHECK ") and "params_identical" in line:
+            for field in ("params_identical", "residual_identical",
+                          "opt_identical", "bits_identical",
+                          "loss_identical"):
+                assert f"{field}=True" in line, line
+
+
+def _toy_space(kinds=("sparse", "sparse", "dense", "skip")):
+    shapes = [(2, 40, 8), (123,), (40,), (7, 3)]
+    entries = [
+        dict(path=f"leaf{i}", shape=s, rows=s[0] if len(s) > 1 else 1,
+             kind=k, rate=0.05, n_shards=1,
+             global_size=int(np.prod(s)))
+        for i, (s, k) in enumerate(zip(shapes, kinds))
+    ]
+    return ShardedFlatParamSpace.build(
+        entries, client_axes=(), shard_axes=(), n_clients=1,
+        shards_per_client=1,
+    )
+
+
+class TestShardedSpace:
+    def test_layout_invariants(self):
+        space = _toy_space()
+        per_block = space.bm * space.lanes
+        for seg in space.segments:
+            assert seg.offset % per_block == 0
+            assert seg.n_loc * seg.rows == int(np.prod(seg.shape))
+        assert space.n_pad == space.n_blocks * per_block
+        # sparse position slots: one per (row, k)
+        n_pos = sum(s.rows * s.k for s in space.segments if s.kind == "sparse")
+        assert space.n_pos == n_pos
+
+    def test_flatten_unflatten_roundtrip(self):
+        space = _toy_space()
+        bodies = [
+            jax.random.normal(jax.random.PRNGKey(i), seg.shape)
+            for i, seg in enumerate(space.segments)
+        ]
+        flat = space.flatten_local(bodies)
+        assert flat.shape == (space.n_pad,)
+        back = space.unflatten_local(flat)
+        for b, r in zip(bodies, back):
+            np.testing.assert_array_equal(np.asarray(b), np.asarray(r))
+
+    def test_exchange_local_single_client(self):
+        """No client axes: mean == own, residual identity acc = ΔW* + R,
+        sparse rows keep exactly k nonzeros with one shared magnitude."""
+        space = _toy_space()
+        bodies = [
+            0.1 * jax.random.normal(jax.random.PRNGKey(i), seg.shape)
+            for i, seg in enumerate(space.segments)
+        ]
+        res = jnp.zeros((space.n_pad,), jnp.float32)
+        mean, own, new_res = jax.jit(space.exchange_local)(bodies, res)
+        np.testing.assert_array_equal(np.asarray(mean), np.asarray(own))
+        acc = space.flatten_local(bodies)
+        np.testing.assert_allclose(
+            np.asarray(acc), np.asarray(own + new_res), rtol=1e-6, atol=1e-7
+        )
+        for seg in space.segments:
+            block = np.asarray(
+                own[seg.offset:seg.offset + seg.rows * seg.n_loc]
+            ).reshape(seg.rows, seg.n_loc)
+            if seg.kind == "sparse":
+                for row in block:
+                    nz = row[row != 0]
+                    assert len(nz) == seg.k
+                    assert len(set(np.abs(nz).tolist())) == 1
+            elif seg.kind == "skip":
+                assert not block.any()
+
+    def test_bits_match_per_leaf_static_loop(self):
+        """space.bits_per_client() == the per-leaf Eq. 1/Eq. 5 loop on an
+        unsharded host mesh (exact float equality)."""
+        from repro.configs.base import ModelConfig
+        from repro.launch.dist import make_dist_train
+        from repro.launch.mesh import make_host_mesh
+
+        cfg = ModelConfig(name="t", family="decoder", n_layers=2, d_model=64,
+                          n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=96,
+                          dtype=jnp.float32, client_mode="data",
+                          local_opt="sgd", scan_layers=True)
+        mesh = make_host_mesh()
+        slow = make_dist_train(cfg, mesh, sparsity=0.01)
+        fast = make_dist_train(cfg, mesh, sparsity=0.01, fast=True)
+        assert fast.flat_space is not None
+        assert fast.bits_per_client == slow.bits_per_client
+        assert fast.bits_dense == slow.bits_dense
+
+    def test_non_f32_residual_falls_back(self):
+        """bf16 residual_dtype keeps the per-leaf exchange (PR 3 rule)."""
+        from repro.configs.base import ModelConfig
+        from repro.launch.dist import make_dist_train
+        from repro.launch.mesh import make_host_mesh
+
+        cfg = ModelConfig(name="t", family="decoder", n_layers=2, d_model=64,
+                          n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=96,
+                          dtype=jnp.float32, residual_dtype=jnp.bfloat16,
+                          client_mode="data", local_opt="sgd",
+                          scan_layers=True)
+        fns = make_dist_train(cfg, make_host_mesh(), sparsity=0.01, fast=True)
+        assert fns.flat_space is None
+        assert fns.residual_to_tree is None
+
+    def test_hist_engine_requires_fast_path(self):
+        from repro.configs.base import ModelConfig
+        from repro.launch.dist import make_dist_train
+        from repro.launch.mesh import make_host_mesh
+
+        cfg = ModelConfig(name="t", family="decoder", n_layers=2, d_model=64,
+                          n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=96,
+                          dtype=jnp.float32, residual_dtype=jnp.bfloat16,
+                          client_mode="data", local_opt="sgd",
+                          scan_layers=True)
+        with pytest.raises(ValueError, match="hist"):
+            make_dist_train(cfg, make_host_mesh(), sparsity=0.01, fast=True,
+                            flat_engine="hist")

@@ -12,8 +12,6 @@ import importlib
 import re
 from pathlib import Path
 
-import pytest
-
 REPO = Path(__file__).resolve().parent.parent
 DOC_FILES = [REPO / "README.md", REPO / "DESIGN.md",
              *sorted((REPO / "docs").glob("*.md"))]

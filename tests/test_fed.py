@@ -10,7 +10,6 @@ rounding (the same measured-vs-analytic tolerance style as
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

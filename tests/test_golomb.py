@@ -1,7 +1,6 @@
 """Golomb position coding (paper Alg. 3/4, Eq. 5) — exact round-trip +
 property tests + agreement between the analytic bit model and the real
 bitstream."""
-import math
 
 import numpy as np
 import pytest

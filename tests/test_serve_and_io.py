@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import load_pytree, save_pytree
-from repro.configs.base import INPUT_SHAPES, get_config, input_specs, reduced
+from repro.configs.base import INPUT_SHAPES, get_config, input_specs
 from repro.data import make_classification_task, make_lm_task, split_among_clients
 from repro.models.model import build_model
 from repro.serve import ServeEngine

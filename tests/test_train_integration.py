@@ -4,15 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ModelConfig
 from repro.core.api import get_compressor
 from repro.core.golomb import expected_position_bits
 from repro.data import client_batches, make_lm_task
-from repro.models.model import build_model
 from repro.optim import get_optimizer
 from repro.train import DSGDTrainer
 
-from conftest import tiny_decoder
 
 
 def _trainer(model, compressor="sbc", opt="momentum", clients=4, lr=0.05):
