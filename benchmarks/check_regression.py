@@ -51,6 +51,13 @@ RULES = {
         "rel": ("bits_per_client",),
         "ratio_min": ("speedup", "compile_speedup"),
     },
+    # §12 channel/Run driver overhead vs the direct trainer loop: the
+    # <5% bound is computed by the benchmark itself (interleaved medians),
+    # so the gate only needs the boolean + stable structural fields
+    "run_api_overhead": {
+        "exact": ("preset", "n_clients", "timed_rounds", "bound"),
+        "true": ("overhead_within_bound",),
+    },
 }
 
 

@@ -4,12 +4,13 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, get_config
-from repro.core.api import get_compressor
+from repro.core.api import make_compressor
 from repro.data import client_batches, make_classification_task, make_lm_task
 from repro.models.model import build_model
 from repro.optim import get_optimizer
@@ -60,10 +61,14 @@ def run_training(cfg, task, *, compressor: str, n_rounds: int, delay: int,
     """One training run; returns history dict (loss curve, bits, rate)."""
     model = build_model(cfg)
     opt = get_optimizer(cfg.local_opt if cfg.local_opt != "momentum" else "momentum")
-    trainer = DSGDTrainer(
-        model=model, compressor=get_compressor(compressor), optimizer=opt,
-        n_clients=clients, lr=lambda it: lr,
-    )
+    with warnings.catch_warnings():
+        # this harness benchmarks the trainer layer itself over custom
+        # tasks; the legacy-surface warning targets end users
+        warnings.simplefilter("ignore", DeprecationWarning)
+        trainer = DSGDTrainer(
+            model=model, compressor=make_compressor(compressor), optimizer=opt,
+            n_clients=clients, lr=lambda it: lr,
+        )
     batch_fn = client_batches(task, clients, delay)
     t0 = time.time()
     _, hist = trainer.fit(

@@ -29,7 +29,7 @@ import jax
 
 from benchmarks.common import save_json
 from repro.configs.base import get_config
-from repro.core.api import get_compressor
+from repro.core.api import make_compressor
 from repro.core.policy import (
     DENSE_SMALL_PATTERN,
     CompressionPolicy,
@@ -42,7 +42,7 @@ SPARSITY = 0.01
 
 
 def _policy(fast: bool) -> CompressionPolicy:
-    comp = get_compressor("sbc")
+    comp = make_compressor("sbc")
     return CompressionPolicy(
         default=comp.codec,
         rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),),

@@ -42,7 +42,7 @@ def _bench_child(repeats: int) -> dict:
     import numpy as np
 
     from repro.configs.base import ModelConfig
-    from repro.launch.dist import client_topology, make_dist_train
+    from repro.launch.dist import build_dist_train, client_topology
     from repro.models.model import build_model
 
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -55,8 +55,8 @@ def _bench_child(repeats: int) -> dict:
     model = build_model(cfg)
     n_clients, _ = client_topology(cfg, mesh)
     sparsity = 0.01
-    per_leaf = make_dist_train(cfg, mesh, sparsity=sparsity, model=model)
-    flat = make_dist_train(cfg, mesh, sparsity=sparsity, model=model, fast=True)
+    per_leaf = build_dist_train(cfg, mesh, sparsity=sparsity, model=model)
+    flat = build_dist_train(cfg, mesh, sparsity=sparsity, model=model, fast=True)
     assert flat.flat_space is not None
 
     rng = jax.random.PRNGKey(1)

@@ -13,6 +13,8 @@
   fed_round           §Fed     vmapped cohort runner vs legacy loop (§9)
   dist_flat           §Dist    sharded flat exchange vs per-leaf shard_map
                                on 8 forced host devices (DESIGN.md §11)
+  run_api_overhead    §12      Run/channel driver overhead vs the direct
+                               trainer loop (<5% gate, DESIGN.md §12)
 
 ``--smoke`` runs only the fast, training-free benchmarks (what CI runs;
 CI additionally smoke-runs ``fed_round --smoke`` and the fed launcher,
@@ -25,7 +27,8 @@ import argparse
 import sys
 import time
 
-SMOKE = ("table1_rates", "wire_throughput", "compress_e2e", "dist_flat")
+SMOKE = ("table1_rates", "wire_throughput", "compress_e2e", "dist_flat",
+         "run_api_overhead")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -43,7 +46,8 @@ def main(argv=None):
 
     from benchmarks import (compress_e2e, dist_flat, fed_round,
                             fig3_sparsity_grid, fig4_stagewise,
-                            fig5_convergence, roofline_table, table1_rates,
+                            fig5_convergence, roofline_table,
+                            run_api_overhead, table1_rates,
                             table2_accuracy, wire_throughput)
 
     suite = {
@@ -57,6 +61,7 @@ def main(argv=None):
         "compress_e2e": compress_e2e.run,
         "fed_round": fed_round.run,
         "dist_flat": dist_flat.run,
+        "run_api_overhead": run_api_overhead.run,
     }
     names = [args.only] if args.only else list(SMOKE) if args.smoke else list(suite)
     failures = []

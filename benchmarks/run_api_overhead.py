@@ -1,0 +1,119 @@
+"""Channel/Run-layer overhead gate (ISSUE 5 satellite).
+
+The §12 redesign routes every round through ``CommChannel.round_exchange``
+and the ``Run.step`` driver.  The channel call is INSIDE the jit (zero
+graph cost by construction — the parity matrix pins bit-identity), so the
+only possible regression is host-side dispatch: rate resolution, the Run
+indirection, metrics dict plumbing.  This benchmark measures it directly:
+
+  direct   the pre-§12 drive: ``DSGDTrainer.round_step`` called in a bare
+           loop with precomputed static rates (what PR 4 timed),
+  run_api  the same rounds through ``build_run(spec)`` → ``Run.step``.
+
+Both run the SAME compiled computation (one warm-up round each), sampled
+in interleaved round-robin so CI-runner drift hits both equally; we
+report per-round medians and gate ``overhead_frac < 0.05`` in
+``benchmarks/check_regression.py``.
+
+  PYTHONPATH=src python -m benchmarks.run_api_overhead [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+
+import jax
+
+from benchmarks.common import save_json
+from repro.run import RunSpec, build_run
+
+PRESET = "lenet5"
+ROUNDS_TIMED = 30
+BOUND = 0.05  # the <5% acceptance bound
+
+
+def _spec(rounds: int) -> RunSpec:
+    return RunSpec(preset=PRESET, backend="local", rounds=rounds,
+                   batch=16, clients=4, delay=1, sparsity=0.01)
+
+
+def bench(timed_rounds: int = ROUNDS_TIMED) -> dict:
+    spec = _spec(timed_rounds)
+    run = build_run(spec)
+    trainer, batch_fn = run.trainer, run.batch_fn
+
+    # two independent states so neither path aliases the other's buffers
+    state_direct = trainer.init(jax.random.PRNGKey(0))
+    state_run = trainer.init(jax.random.PRNGKey(0))
+    rates = trainer.resolved(state_direct.params).rates(spec.sparsity, 0)
+
+    def step_direct(state, r):
+        state, m = trainer.round_step(
+            state, batch_fn(r), n_delay=spec.delay, sparsity=rates
+        )
+        return state, m
+
+    def step_run(state, r):
+        return run.step(state, r)
+
+    # warm-up: one compile each (identical jit cache key → second is a hit)
+    state_direct, _ = step_direct(state_direct, 0)
+    state_run, _ = step_run(state_run, 0)
+
+    def timed(fn, state, r, sink):
+        t0 = time.perf_counter()
+        state, m = fn(state, r)
+        jax.block_until_ready(m["loss"])
+        sink.append(1e3 * (time.perf_counter() - t0))
+        return state
+
+    direct_ms, run_ms = [], []
+    for r in range(1, timed_rounds + 1):
+        # alternate which path goes first so runner drift and cache warmth
+        # bias neither side
+        if r % 2:
+            state_direct = timed(step_direct, state_direct, r, direct_ms)
+            state_run = timed(step_run, state_run, r, run_ms)
+        else:
+            state_run = timed(step_run, state_run, r, run_ms)
+            state_direct = timed(step_direct, state_direct, r, direct_ms)
+
+    direct = statistics.median(direct_ms)
+    run_api = statistics.median(run_ms)
+    overhead = (run_api - direct) / direct
+    return {
+        "preset": PRESET,
+        "n_clients": spec.clients,
+        "timed_rounds": timed_rounds,
+        "direct_step_ms": direct,
+        "run_api_step_ms": run_api,
+        "overhead_frac": overhead,
+        "overhead_within_bound": bool(overhead < BOUND),
+        "bound": BOUND,
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timed rounds (what CI runs)")
+    args = ap.parse_args(argv)
+    rec = bench(timed_rounds=16 if args.smoke else ROUNDS_TIMED)
+    path = save_json("run_api_overhead", rec)
+    print(
+        f"run_api_overhead: direct {rec['direct_step_ms']:.2f} ms/round, "
+        f"run-api {rec['run_api_step_ms']:.2f} ms/round "
+        f"({100 * rec['overhead_frac']:+.1f}%, bound {100 * BOUND:.0f}%) "
+        f"→ {path}"
+    )
+    return rec
+
+
+def run(quick: bool = True) -> dict:
+    """benchmarks.run harness hook."""
+    return main(["--smoke"] if quick else [])
+
+
+if __name__ == "__main__":
+    main()

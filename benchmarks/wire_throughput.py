@@ -25,7 +25,7 @@ CODECS = ["sbc", "topk", "signsgd", "terngrad", "qsgd", "none"]
 
 def bench_one(name: str, n: int, p: float, repeats: int) -> dict:
     delta = {"w": jax.random.normal(jax.random.PRNGKey(0), (n,)) * 0.01}
-    comp = api.get_compressor(name)
+    comp = api.make_compressor(name)
     state = comp.init_state(delta)
     ctree, dense, _ = comp.compress(delta, state, p)
     ctree = jax.tree.map(np.asarray, ctree)  # host-side, like a real server

@@ -12,7 +12,7 @@ import jax
 import numpy as np
 
 from repro.core import golomb
-from repro.core.api import CompressionPolicy, PolicyRule, get_compressor
+from repro.core.api import CompressionPolicy, PolicyRule, make_compressor
 from repro.core.codec import make_codec
 from repro.core.wire import wire_for
 
@@ -24,7 +24,7 @@ delta = {
 }
 
 # --- 1. a codec is a composition of three registered stages
-sbc = get_compressor("sbc")  # shim → topk_signed|binarize|golomb
+sbc = make_compressor("sbc")  # shim → topk_signed|binarize|golomb
 print(f"SBC as a staged codec: {sbc.codec.spec}")
 
 # --- 2. per-leaf policy: the bias rides dense, the matrix gets SBC

@@ -9,11 +9,13 @@ Trains the same model three ways under an IDENTICAL total-sparsity budget:
 
 Run:  PYTHONPATH=src python examples/sparsity_tradeoff.py
 """
+import warnings
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.api import get_compressor
+from repro.core.api import make_compressor
 from repro.core.sparsity import adaptive_total_budget
 from repro.data import client_batches, make_lm_task
 from repro.models.model import build_model
@@ -32,11 +34,17 @@ task = make_lm_task(vocab=256, batch=8, seq_len=64, temperature=0.5)
 
 def run(tag, schedule):
     # dense rounds (p = 1) exchange full updates (FedAvg semantics);
-    # sparse rounds go through SBC — both share the same model state
-    mk = lambda name: DSGDTrainer(
-        model=model, compressor=get_compressor(name),
-        optimizer=get_optimizer("momentum"), n_clients=4, lr=lambda it: 0.05,
-    )
+    # sparse rounds go through SBC — both share the same model state.
+    # Per-round adaptive schedules need the trainer layer directly (a
+    # RunSpec pins one static schedule), so the legacy warning is muted.
+    def mk(name):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return DSGDTrainer(
+                model=model, compressor=make_compressor(name),
+                optimizer=get_optimizer("momentum"), n_clients=4,
+                lr=lambda it: 0.05,
+            )
     tr_sbc, tr_dense = mk("sbc"), mk("none")
     state = tr_sbc.init(jax.random.PRNGKey(0))
     total_bits, it, r, last = 0.0, 0, 0, 0.0

@@ -14,7 +14,17 @@ from repro.core.api import (
     PolicyRule,
     available,
     get_compressor,
+    make_compressor,
 )
+from repro.core.channel import (
+    ChannelBits,
+    CommChannel,
+    FedWireChannel,
+    LocalVmapChannel,
+    ShardedGspmdChannel,
+    resolve_cached,
+)
+from repro.core.ledger import BandwidthLedger, RoundRecord
 from repro.core.baselines import dgc_policy
 from repro.core.codec import Codec, available_codecs, make_codec
 from repro.core.golomb import (
@@ -30,8 +40,15 @@ from repro.core.stages import available_stages, decompress_leaf
 from repro.core.wire import LeafSpec, Wire, wire_for
 
 __all__ = [
+    "BandwidthLedger",
+    "ChannelBits",
     "Codec",
+    "CommChannel",
     "CompressionPolicy",
+    "FedWireChannel",
+    "LocalVmapChannel",
+    "RoundRecord",
+    "ShardedGspmdChannel",
     "Compressor",
     "CompressorState",
     "LeafCompressed",
@@ -54,6 +71,8 @@ __all__ = [
     "get_compressor",
     "golomb_bstar",
     "make_codec",
+    "make_compressor",
     "preset",
+    "resolve_cached",
     "wire_for",
 ]

@@ -22,6 +22,7 @@ compression of paper Alg. 1 lines 10-14.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
@@ -45,6 +46,7 @@ __all__ = [
     "LeafCompressed",
     "register",
     "get_compressor",
+    "make_compressor",
     "available",
     "k_for",
 ]
@@ -170,10 +172,30 @@ def register(name: str) -> Callable:
     return deco
 
 
-def get_compressor(name: str, **kwargs: Any) -> Compressor:
+def make_compressor(name: str, **kwargs: Any) -> Compressor:
+    """Instantiate a registered compressor by name (the registry lookup
+    behind ``RunSpec.compressor`` / ``--compressor``)."""
     if name not in _REGISTRY:
         raise KeyError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
     return _REGISTRY[name](**kwargs)
+
+
+def get_compressor(name: str, **kwargs: Any) -> Compressor:
+    """Legacy name for :func:`make_compressor` (the seed API surface).
+
+    Survives as a documented shim — same registry, same Compressor,
+    bit-identical behavior — but new code should either name the
+    compressor in a :class:`~repro.run.RunSpec` or call
+    :func:`make_compressor`.
+    """
+    warnings.warn(
+        "get_compressor() is the legacy seed surface; name the compressor "
+        "in a repro.run.RunSpec (spec.compressor) or call "
+        "repro.core.api.make_compressor() (same registry, bit-identical)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return make_compressor(name, **kwargs)
 
 
 def available() -> list:

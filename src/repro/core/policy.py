@@ -206,8 +206,25 @@ class ResolvedPolicy:
     def rates(
         self, global_rate: float, round_idx: int = 0
     ) -> Tuple[float, ...]:
-        """Per-leaf sparsity rates for this round (static, hashable)."""
-        return tuple(p.rate(global_rate, round_idx) for p in self.plans)
+        """Per-leaf sparsity rates for this round (static, hashable).
+
+        Memoized: schedule-free policies resolve to the same tuple every
+        round, so callers that rebuild the tuple per round (wire caches,
+        the fed server's per-upload decode contract) hit a dict instead of
+        re-walking the plans — part of the resolve-once-per-topology
+        contract of :func:`repro.core.channel.resolve_cached`.
+        """
+        scheduled = any(p.schedule is not None for p in self.plans)
+        key = (float(global_rate), round_idx if scheduled else 0)
+        cache = getattr(self, "_rates_cache", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_rates_cache", cache)
+        got = cache.get(key)
+        if got is None:
+            got = tuple(p.rate(global_rate, round_idx) for p in self.plans)
+            cache[key] = got
+        return got
 
     # ----------------------------------------------------------- lifecycle
 

@@ -107,7 +107,10 @@ class ClientPool:
 
     def resolved(self, params: PyTree) -> ResolvedPolicy:
         if self._resolved is None:
-            self._resolved = self.policy.resolve(params)
+            # shared with the server via the once-per-topology cache
+            from repro.core.channel import resolve_cached
+
+            self._resolved = resolve_cached(self.policy, params)
         return self._resolved
 
     def init(self, params: PyTree, rng: Optional[jax.Array] = None) -> None:

@@ -1,103 +1,9 @@
-"""Per-round bandwidth ledger — bidirectional byte accounting (DESIGN.md §9).
-
-Every round the :class:`~repro.fed.scheduler.RoundScheduler` records, for
-each direction of the wire,
-
-  * ``bytes``      — framed SBW1 buffer sizes that actually crossed the
-                     "network" (transport view),
-  * ``bits_measured`` — exact payload bits off the buffers, pre byte-padding
-                     (what :meth:`repro.core.wire.Wire.measured_bits` meters),
-  * ``bits_analytic`` — the Eq. 1 sum of per-leaf ``nbits`` from the codecs
-                     (Golomb positions priced by Eq. 5's expectation).
-
-``reconcile`` asserts measured ≈ analytic on every round in both
-directions: Eq. 5 is the expectation over geometric position gaps while the
-bitstream is one draw, so they agree only within Golomb rounding — the same
-tolerance :mod:`tests.test_codec_pipeline` uses for the upstream wire.
+"""Back-compat re-export: the bandwidth ledger moved into the channel
+protocol layer (:mod:`repro.core.ledger`, DESIGN.md §12) so measured-vs-
+analytic Eq. 1/Eq. 5 accounting is uniform across the local, GSPMD, and
+federated backends — not a fed-only feature.  Existing
+``repro.fed.ledger`` imports keep working unchanged.
 """
-from __future__ import annotations
+from repro.core.ledger import BandwidthLedger, RoundRecord
 
-import dataclasses
-from typing import List, Tuple
-
-
-@dataclasses.dataclass(frozen=True)
-class RoundRecord:
-    """One communication round's traffic, both directions.
-
-    Upstream numbers are summed over the sampled cohort; downstream numbers
-    are per-recipient (one broadcast buffer) times ``down_recipients``.
-    """
-
-    round: int
-    cohort: Tuple[int, ...]
-    up_bytes: int
-    up_bits_measured: float
-    up_bits_analytic: float
-    down_bytes: int
-    down_bits_measured: float
-    down_bits_analytic: float
-    down_recipients: int
-
-    @property
-    def total_bytes(self) -> int:
-        return self.up_bytes + self.down_bytes
-
-
-class BandwidthLedger:
-    """Accumulates :class:`RoundRecord` rows and reconciles them with the
-    analytic Eq. 1/Eq. 5 prediction."""
-
-    def __init__(self) -> None:
-        self.records: List[RoundRecord] = []
-
-    def record(self, rec: RoundRecord) -> None:
-        self.records.append(rec)
-
-    # ------------------------------------------------------------- queries
-
-    def totals(self) -> dict:
-        """Summed traffic over all recorded rounds."""
-        out = {
-            "rounds": len(self.records),
-            "up_bytes": sum(r.up_bytes for r in self.records),
-            "down_bytes": sum(r.down_bytes for r in self.records),
-            "up_bits_measured": sum(r.up_bits_measured for r in self.records),
-            "up_bits_analytic": sum(r.up_bits_analytic for r in self.records),
-            "down_bits_measured": sum(r.down_bits_measured for r in self.records),
-            "down_bits_analytic": sum(r.down_bits_analytic for r in self.records),
-        }
-        out["total_bytes"] = out["up_bytes"] + out["down_bytes"]
-        return out
-
-    def reconcile(self, rel: float = 0.1) -> None:
-        """Assert measured-vs-analytic parity per round, both directions.
-
-        ``rel`` bounds |measured − analytic| / analytic; Golomb position
-        streams are one geometric draw against Eq. 5's expectation, so a few
-        percent of slack is expected at paper-scale tensors and more on tiny
-        test leaves.  Zero-traffic directions (e.g. dense-free skip rounds)
-        reconcile trivially.
-        """
-        for r in self.records:
-            for side in ("up", "down"):
-                measured = getattr(r, f"{side}_bits_measured")
-                analytic = getattr(r, f"{side}_bits_analytic")
-                if analytic == 0 and measured == 0:
-                    continue
-                err = abs(measured - analytic) / max(abs(analytic), 1e-9)
-                if err > rel:
-                    raise AssertionError(
-                        f"round {r.round} {side}stream: measured "
-                        f"{measured:.0f} bits vs analytic {analytic:.0f} "
-                        f"(rel err {err:.3f} > {rel})"
-                    )
-
-    def history(self) -> dict:
-        """Column-major view for JSON dumps / plotting."""
-        cols = ("up_bytes", "down_bytes", "up_bits_measured",
-                "up_bits_analytic", "down_bits_measured", "down_bits_analytic")
-        out = {c: [getattr(r, c) for r in self.records] for c in cols}
-        out["round"] = [r.round for r in self.records]
-        out["cohort_size"] = [len(r.cohort) for r in self.records]
-        return out
+__all__ = ["BandwidthLedger", "RoundRecord"]

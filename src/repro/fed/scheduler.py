@@ -1,8 +1,11 @@
 """Round scheduling: sync and async/stale federated rounds (DESIGN.md §9).
 
 A :class:`RoundScheduler` wires a :class:`~repro.fed.server.ParameterServer`
-to a :class:`~repro.fed.clients.ClientPool` and drives communication
-rounds:
+to a :class:`~repro.fed.clients.ClientPool` through a
+:class:`~repro.core.channel.FedWireChannel` (DESIGN.md §12 — the channel
+owns the compress → pack → decode → aggregate → broadcast → meter loop;
+the scheduler owns *time*: cohort sampling and replica staleness) and
+drives communication rounds:
 
   sync    every cohort member trains from the CURRENT broadcast replica Ŵ
           (it "downloads" the newest model when sampled); the server
@@ -14,8 +17,8 @@ rounds:
           gradients are discounted by the closed form
           :func:`repro.fed.server.staleness_weights`.
 
-Every round is metered both directions in a
-:class:`~repro.fed.ledger.BandwidthLedger`: framed bytes, measured payload
+Every round is metered both directions in the channel's
+:class:`~repro.core.ledger.BandwidthLedger`: framed bytes, measured payload
 bits, and the analytic Eq. 1/Eq. 5 prediction, upstream (summed over the
 cohort) and downstream (per recipient × cohort size).
 """
@@ -29,9 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.channel import FedWireChannel
 from repro.fed.clients import ClientPool
-from repro.fed.ledger import BandwidthLedger, RoundRecord
-from repro.fed.server import ClientUpdate, ParameterServer
+from repro.fed.server import ParameterServer
 
 PyTree = Any
 
@@ -50,15 +53,22 @@ class RoundScheduler:
             raise ValueError(f"mode must be 'sync' or 'async', got {self.mode!r}")
         if self.mode == "sync":
             self.max_staleness = 0
-        self.ledger = BandwidthLedger()
+        self.channel = FedWireChannel(server=self.server, pool=self.pool)
         # ring of past replicas Ŵ_{r−s}; entries are immutable pytree refs
         self._snapshots: deque = deque(maxlen=self.max_staleness + 1)
-        self.pool.init(self.server.estimate)
+        self.channel.init_state()
+
+    @property
+    def ledger(self):
+        """The channel's bandwidth ledger (back-compat alias)."""
+        return self.channel.ledger
 
     # ------------------------------------------------------------ one round
 
     def step(self, round_idx: int) -> dict:
-        """Sample a cohort, run it, aggregate, broadcast, meter the wire."""
+        """Sample a cohort, pick (possibly stale) starts, and hand the
+        round to the wire channel (run + pack + aggregate + broadcast +
+        meter)."""
         self._snapshots.appendleft(self.server.estimate)
         cohort = self.pool.sample_cohort(round_idx, self.cohort_size)
         staleness = self._draw_staleness(round_idx, cohort.size)
@@ -71,45 +81,7 @@ class RoundScheduler:
                 *[self._snapshots[s] for s in staleness],
             )
 
-        result = self.pool.run_cohort(round_idx, cohort, start)
-
-        uploads, up_bytes = [], 0
-        for i, cid in enumerate(result.client_ids):
-            wire = self.server.up_wire(result.rates[i], round_idx)
-            blob = wire.pack(result.ctrees[i])
-            up_bytes += len(blob)
-            uploads.append(
-                ClientUpdate(
-                    client_id=cid, blob=blob, rate=result.rates[i],
-                    weight=result.weights[i], staleness=int(staleness[i]),
-                )
-            )
-        info = self.server.receive(uploads, round_idx)
-        bc = self.server.broadcast(round_idx)
-
-        recipients = len(cohort)
-        self.ledger.record(
-            RoundRecord(
-                round=round_idx,
-                cohort=tuple(int(c) for c in cohort),
-                up_bytes=up_bytes,
-                up_bits_measured=info["up_bits_measured"],
-                up_bits_analytic=float(np.sum(result.bits_analytic)),
-                down_bytes=len(bc.blob) * recipients,
-                down_bits_measured=bc.bits_measured * recipients,
-                down_bits_analytic=bc.bits_analytic * recipients,
-                down_recipients=recipients,
-            )
-        )
-        return {
-            "round": round_idx,
-            "loss": float(np.mean(result.losses)),
-            "update_norm": info["update_norm"],
-            "staleness": [int(s) for s in staleness],
-            "weights": [float(w) for w in info["weights"]],
-            "up_bytes": up_bytes,
-            "down_bytes": len(bc.blob) * recipients,
-        }
+        return self.channel.round_exchange(round_idx, cohort, start, staleness)
 
     # ------------------------------------------------------------- full run
 

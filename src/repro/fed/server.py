@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.channel import resolve_cached
 from repro.core.policy import (
     CompressionPolicy,
     CompressorState,
@@ -128,8 +129,15 @@ class ParameterServer:
                 )
             else:
                 self.down_policy = self.up_policy
-        self._up_resolved: ResolvedPolicy = self.up_policy.resolve(self.params)
-        self._down_resolved: ResolvedPolicy = self.down_policy.resolve(self.params)
+        # resolved ONCE per (policy, topology) — server rebuilds on profile
+        # changes share the bound engine (and its flat spaces / jit caches)
+        # with the client pool instead of re-resolving every time
+        self._up_resolved: ResolvedPolicy = resolve_cached(
+            self.up_policy, self.params
+        )
+        self._down_resolved: ResolvedPolicy = resolve_cached(
+            self.down_policy, self.params
+        )
         f32 = jax.tree.map(lambda x: x.astype(jnp.float32), self.params)
         self._down_state: CompressorState = self._down_resolved.init_state(f32)
         # the clients' replica Ŵ — advanced ONLY by broadcast wire content

@@ -30,13 +30,25 @@ Design (DESIGN.md §4):
   / skip) with its own sparsity rate, so DGC-style "dense biases + 0.1%
   matrices" recipes lower to a mixed collective schedule.
 
+The compress → exchange → aggregate → account loop itself lives in
+:class:`repro.core.channel.ShardedGspmdChannel` (DESIGN.md §12): this
+module owns the *mesh* — model/param shardings, client topology, batch
+specs — derives the channel's mesh-free per-leaf plan from the
+PartitionSpecs, and wraps the channel's shard_map bodies with the right
+in/out specs.  ``build_dist_train`` is the canonical builder (what
+``repro.run.build_run(RunSpec(backend="gspmd"))`` calls);
+``make_dist_train`` survives as a deprecated bit-identical shim.
+
 Bit accounting is static (shapes and per-leaf rates are compile-time): per
 sparse leaf, ``L·S_shards·(k_loc·b̄_pos(p_leaf) + 32)`` wire bits per client
-per round; dense leaves count 32 bits/entry; skipped leaves count 0.
+per round; dense leaves count 32 bits/entry; skipped leaves count 0
+(``channel.bits()``), and ``measure=True`` Golomb-encodes client 0's real
+per-shard position streams into the channel ledger next to it.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -44,23 +56,16 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-try:  # jax >= 0.7 moved shard_map to the top level
-    from jax import shard_map as _shard_map
-
-    def shard_map(f, *, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                          check_vma=False)
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    def shard_map(f, *, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                          check_rep=False)
-
 from repro.configs.base import ModelConfig
+from repro.core.channel import (  # noqa: F401  (re-exported shard_map kernels)
+    GspmdLeaf,
+    ShardedGspmdChannel,
+    _dense_local,
+    _sbc_local,
+    shard_map,
+)
 from repro.core.codec import Codec, make_codec
 from repro.core.flat import ShardedFlatParamSpace
-from repro.core.golomb import expected_position_bits
 from repro.core.policy import CompressionPolicy, path_str
 from repro.models import hints
 from repro.models.model import Model, build_model
@@ -111,95 +116,37 @@ def opt_state_specs(opt_name: str, param_specs: PyTree, client_axes) -> PyTree:
     raise ValueError(opt_name)
 
 
+def _axes_of(entry) -> tuple:
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
 def _shards_of(spec: P, mesh_sizes: dict[str, int]) -> int:
     total = 1
     for entry in spec:
-        if entry is None:
-            continue
-        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+        for ax in _axes_of(entry):
             total *= mesh_sizes.get(ax, 1)
     return total
 
 
-# ----------------------------------------------- shard-wise compress+exchange
-
-
-def _sbc_local(acc_flat: jax.Array, p: float, client_axes, n_clients: int,
-               out_dtype=jnp.float32):
-    """Inside shard_map: exact per-shard SBC (paper Alg. 2) + sparse exchange.
-
-    acc_flat: (L, n_loc) — residual-accumulated ΔW, THIS device's shard
-    (any float dtype; per-layer math runs in f32).
-    Returns (mean_delta (L, n_loc), own_delta_star (L, n_loc)) in out_dtype.
-
-    Layers are processed through a lax.scan so only ONE layer's f32
-    working set is live at a time (§Perf lowmem iteration — the vmap
-    formulation materialized 3 full-leaf f32 buffers).
-    """
-    L, n_loc = acc_flat.shape
-    k = max(1, min(n_loc, int(round(p * n_loc))))
-
-    def one_layer(_, x_row):
-        x = x_row.astype(jnp.float32)
-        val_pos, idx_pos = jax.lax.top_k(x, k)
-        val_neg, idx_neg = jax.lax.top_k(-x, k)
-        mu_pos, mu_neg = jnp.mean(val_pos), jnp.mean(val_neg)
-        pos_wins = mu_pos > mu_neg
-        idx = jnp.where(pos_wins, idx_pos, idx_neg).astype(jnp.int32)
-        mu = jnp.where(pos_wins, mu_pos, -mu_neg).astype(jnp.float32)
-        own_row = jnp.zeros((n_loc,), out_dtype).at[idx].set(mu.astype(out_dtype))
-        return None, (idx, mu, own_row)
-
-    _, (idx, mu, own) = jax.lax.scan(one_layer, None, acc_flat)
-
-    if client_axes and n_clients > 1:
-        # THE exchange: tiny (idx, μ) tensors cross the client axes.
-        gidx, gmu = idx, mu
-        for ax in client_axes:
-            gidx = jax.lax.all_gather(gidx, ax)
-            gmu = jax.lax.all_gather(gmu, ax)
-        gidx = gidx.reshape(n_clients, L, k)
-        gmu = gmu.reshape(n_clients, L)
-
-        def dense_layer(_, args):
-            rows_i, mus_i = args  # (C, k), (C,)
-            row = jnp.zeros((n_loc,), jnp.float32)
-
-            def add(acc, ci):
-                return acc.at[rows_i[ci]].add(mus_i[ci] / n_clients), None
-
-            row, _ = jax.lax.scan(add, row, jnp.arange(n_clients))
-            return None, row.astype(out_dtype)
-
-        _, dense = jax.lax.scan(
-            dense_layer, None, (gidx.transpose(1, 0, 2), gmu.transpose(1, 0))
-        )
-    else:
-        dense = own
-    return dense, own
-
-
-def _dense_local(acc_flat, client_axes, n_clients):
-    """Dense baseline: pmean over clients == all-reduce of the full ΔW."""
-    out = acc_flat
-    for ax in client_axes:
-        out = jax.lax.pmean(out, ax)
-    return out, acc_flat
-
-
-# ------------------------------------------------- sharded flat param space
+def _shard_grid(shape, spec: P, mesh_sizes: dict[str, int]) -> tuple[int, ...]:
+    """Per-dim shard counts of a leaf under ``spec`` (GSPMD equal blocks)."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    return tuple(
+        math.prod(mesh_sizes.get(a, 1) for a in _axes_of(entry))
+        for entry in entries
+    )
 
 
 def _local_shape(shape, spec: P, mesh_sizes: dict[str, int]) -> tuple[int, ...]:
     """One shard's shape of a leaf under ``spec`` (GSPMD equal blocks)."""
-    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
-    local = []
-    for dim, entry in zip(shape, entries):
-        axes = () if entry is None else (
-            entry if isinstance(entry, tuple) else (entry,)
-        )
-        local.append(dim // math.prod(mesh_sizes.get(a, 1) for a in axes))
-    return tuple(local)
+    return tuple(
+        dim // g for dim, g in zip(shape, _shard_grid(shape, spec, mesh_sizes))
+    )
+
+
+# ------------------------------------------------- sharded flat param space
 
 
 def _sharded_flat_space(
@@ -264,6 +211,7 @@ class DistTrainFns(NamedTuple):
     # §11 sharded flat fast path (None when the per-leaf exchange runs):
     flat_space: Any = None  # ShardedFlatParamSpace bound to (cfg, mesh)
     residual_to_tree: Optional[Callable] = None  # flat residual → pytree
+    channel: Any = None  # the ShardedGspmdChannel driving the exchange
 
 
 def _dist_leaf_mode(codec: Codec) -> str:
@@ -297,6 +245,39 @@ def make_dist_train(
     fast: Optional[bool] = None,
     flat_engine: str = "exact",
 ) -> DistTrainFns:
+    """Legacy name for :func:`build_dist_train` (the seed API surface).
+
+    Survives as a documented bit-identical shim; new code should build the
+    backend declaratively via ``repro.run.build_run(RunSpec(
+    backend="gspmd", ...))`` or call :func:`build_dist_train`.
+    """
+    warnings.warn(
+        "make_dist_train() is the legacy GSPMD surface; build it "
+        "declaratively via repro.run.build_run(RunSpec(backend='gspmd', "
+        "...)) or call repro.launch.dist.build_dist_train() (same "
+        "lowering, bit-identical)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return build_dist_train(
+        cfg, mesh, compressor=compressor, sparsity=sparsity, policy=policy,
+        model=model, opts=opts, fast=fast, flat_engine=flat_engine,
+    )
+
+
+def build_dist_train(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    compressor: str = "sbc",
+    sparsity: float = 0.001,
+    policy: Optional[CompressionPolicy] = None,
+    model: Optional[Model] = None,
+    opts: frozenset = frozenset(),
+    fast: Optional[bool] = None,
+    flat_engine: str = "exact",
+    measure: bool = False,
+) -> DistTrainFns:
     """Build the sharded DSGD train_step for (cfg, mesh).
 
     State = {'params', 'opt', 'residual'}; batch has a leading client axis
@@ -322,6 +303,10 @@ def make_dist_train(
     'hist' (the segment-aware Pallas passes, approximate survivor
     counts, dense pmean exchange); 'hist' needs an all-SBC policy and an
     active fast path.
+
+    ``measure`` — every round, additionally emit client 0's transmitted
+    ΔW* (``metrics['own0']``) so the channel ledger can Golomb-encode the
+    real per-shard position streams next to the analytic Eq. 1 bits.
 
     ``opts`` — §Perf beyond-baseline toggles (baseline = empty set):
       'expert_parallel'  experts shard over 'data', dispatch follows
@@ -362,17 +347,16 @@ def make_dist_train(
     scheduled = [pl.path for pl in plans if pl.schedule is not None]
     if scheduled:
         raise NotImplementedError(
-            "make_dist_train compiles per-leaf sparsity rates statically; "
+            "the GSPMD backend compiles per-leaf sparsity rates statically; "
             f"policy rules attach per-round schedules to {scheduled[:3]}… — "
-            "rebuild the train fns when the rate changes, or pin a fixed "
-            "per-leaf `sparsity` in the rule"
+            "rebuild the train fns when the rate changes, or use the local "
+            "backend instead"
         )
     modes = [_dist_leaf_mode(pl.codec) for pl in plans]
     leaf_rates = [pl.rate(sparsity, 0) for pl in plans]
 
-    # ---- §11 sharded flat fast path (None → per-leaf exchange)
-    if flat_engine not in ("exact", "hist"):
-        raise ValueError(f"unknown flat_engine {flat_engine!r}")
+    # ---- the channel: §11 sharded flat fast path when it applies, the
+    # per-leaf exchange otherwise (the dispatch ladder lives in core now)
     want_fast = policy.fast if fast is None else bool(fast)
     space = None
     if want_fast:
@@ -380,11 +364,28 @@ def make_dist_train(
             cfg, mesh, flat_p, flat_specs, scanned, modes, leaf_rates,
             client_axes, n_clients,
         )
-    if flat_engine == "hist" and space is None:
-        raise ValueError(
-            "flat_engine='hist' needs the sharded flat fast path "
-            "(fast=True with all-f32 leaves and an f32 residual_dtype)"
-        )
+    channel = ShardedGspmdChannel(
+        leaves=tuple(
+            GspmdLeaf(
+                path=path_str(path),
+                global_shape=tuple(leaf.shape),
+                dtype=leaf.dtype,
+                scanned=is_scan,
+                mode=mode,
+                rate=p_leaf,
+                n_shards=_shards_of(spec, mesh_sizes),
+                shard_grid=_shard_grid(leaf.shape, spec, mesh_sizes),
+            )
+            for (path, leaf), spec, is_scan, mode, p_leaf in zip(
+                flat_p, flat_specs, scanned, modes, leaf_rates
+            )
+        ),
+        client_axes=client_axes,
+        n_clients=n_clients,
+        residual_dtype=cfg.residual_dtype,
+        flat_space=space,
+        flat_engine=flat_engine,
+    )
     shard_axes = tuple(a for a in mesh.axis_names if a not in client_axes)
     res_spec = P(lead, _lead_spec(shard_axes), None)
 
@@ -395,16 +396,11 @@ def make_dist_train(
 
     def init_state(rng):
         params = model.init(rng)
-        if space is not None:
-            # §11: the error-feedback residual lives as ONE flat sharded
-            # f32 buffer — never round-trips through the per-leaf pytree
-            residual = space.zeros_residual()
-        else:
-            residual = jax.tree.map(
-                lambda x: jnp.zeros((n_clients,) + x.shape, cfg.residual_dtype),
-                params,
-            )
-        return {"params": params, "opt": stack_c(opt.init(params)), "residual": residual}
+        return {
+            "params": params,
+            "opt": stack_c(opt.init(params)),
+            "residual": channel.init_state(params),
+        }
 
     a_state = jax.eval_shape(init_state, jax.random.PRNGKey(0))
     state_specs = {
@@ -417,25 +413,8 @@ def make_dist_train(
     ns = lambda spec: NamedSharding(mesh, spec)
     state_shardings = jax.tree.map(ns, state_specs, is_leaf=lambda s: isinstance(s, P))
 
-    # ---- static Eq. 1 bit accounting per round per client (per-leaf codec)
-    bits_policy = bits_dense = 0.0
-    for (path, leaf), spec, is_scan, mode, p_leaf in zip(
-        flat_p, flat_specs, scanned, modes, leaf_rates
-    ):
-        L = leaf.shape[0] if is_scan and leaf.ndim > 1 else 1
-        shards = _shards_of(spec, mesh_sizes)
-        n_loc = max(1, leaf.size // (L * shards))
-        if mode == "sparse":
-            k_loc = max(1, min(n_loc, int(round(p_leaf * n_loc))))
-            bits_policy += L * shards * (
-                k_loc * expected_position_bits(p_leaf) + 32.0
-            )
-        elif mode == "dense":
-            bits_policy += 32.0 * leaf.size
-        bits_dense += 32.0 * leaf.size
-    if space is not None:
-        # same totals, summed from the per-(segment, shard) table (§11)
-        bits_policy = space.bits_per_client()
+    # ---- static Eq. 1 bit accounting per round per client (channel-owned)
+    bits = channel.bits()
 
     # ---- batch shardings
     inner = "data" if cfg.client_mode == "pod" else None
@@ -447,6 +426,9 @@ def make_dist_train(
         return jax.tree.map(one, batch_tree)
 
     # ---- the step
+    need_mask = cfg.local_opt != "sgd"  # momentum masking needs ΔW*_i
+    need_own = need_mask or measure
+
     def train_step(state, batch):
         params = state["params"]
 
@@ -464,89 +446,12 @@ def make_dist_train(
 
         deltas, opt_states, losses = jax.vmap(local)(state["opt"], batch)
 
-        in_specs = tuple(flat_r_specs)
-        need_mask = cfg.local_opt != "sgd"  # momentum masking needs ΔW*_i
-        own_specs = in_specs if need_mask else tuple(P() for _ in flat_r_specs)
-
-        if space is not None:
-            # §11 sharded flat exchange: residual add + compression + the
-            # packed (positions, μ) collective all run on ONE flat buffer
-            # per device, one launch per pass.
-            delta_leaves, acc_def = jax.tree.flatten(deltas)
-
-            def exchange_flat(res, *leaves):
-                bodies = [leaf[0] for leaf in leaves]
-                fn = (space.exchange_local if flat_engine == "exact"
-                      else space.exchange_local_hist)
-                mean_f, own_f, new_res_f = fn(bodies, res[0, 0])
-                means = tuple(
-                    m.astype(leaf.dtype)[None] for m, leaf in
-                    zip(space.unflatten_local(mean_f), leaves)
-                )
-                if need_mask:
-                    owns = tuple(
-                        o.astype(leaf.dtype)[None] for o, leaf in
-                        zip(space.unflatten_local(own_f), leaves)
-                    )
-                else:
-                    owns = tuple(
-                        jnp.zeros((1,) * leaf.ndim, leaf.dtype)
-                        for leaf in leaves
-                    )
-                return means, new_res_f[None, None], owns
-
-            mean_leaves, new_residual, own_leaves = shard_map(
-                exchange_flat, mesh=mesh, in_specs=(res_spec,) + in_specs,
-                out_specs=(in_specs, res_spec, own_specs),
-            )(state["residual"], *delta_leaves)
-            mean_tree = jax.tree.unflatten(acc_def, mean_leaves)
-        else:
-            # residual add (Alg. 1 l.10): acc = R + ΔW
-            acc = jax.tree.map(
-                lambda r, d: (r.astype(jnp.float32) + d.astype(jnp.float32)).astype(
-                    cfg.residual_dtype
-                ),
-                state["residual"],
-                deltas,
-            )
-            acc_leaves, acc_def = jax.tree.flatten(acc)
-
-            def exchange(*leaves):
-                """Per-leaf: compress own shard with the LEAF'S codec, exchange,
-                and emit (mean ΔW, NEW residual = acc − own) — own itself never
-                leaves the shard_map unless momentum masking needs it (§Perf B9)."""
-                means, residuals, owns = [], [], []
-                for leaf, is_scan, mode, p_leaf in zip(
-                    leaves, scanned, modes, leaf_rates
-                ):
-                    body = leaf[0]  # client dim is locally 1 (sharded over clients)
-                    L = body.shape[0] if is_scan and body.ndim > 1 else 1
-                    flat = body.reshape(L, -1)
-                    if mode == "sparse":
-                        dense, own = _sbc_local(flat, p_leaf, client_axes, n_clients,
-                                                out_dtype=leaf.dtype)
-                    elif mode == "dense":
-                        dense, own = _dense_local(flat.astype(jnp.float32),
-                                                  client_axes, n_clients)
-                    else:  # skip: no traffic; the residual keeps the full update
-                        dense = jnp.zeros_like(flat, dtype=leaf.dtype)
-                        own = dense
-                    new_res = (flat.astype(jnp.float32) - own.astype(jnp.float32)).astype(
-                        cfg.residual_dtype
-                    )
-                    means.append(dense.reshape(body.shape).astype(leaf.dtype)[None])
-                    residuals.append(new_res.reshape(body.shape).astype(leaf.dtype)[None])
-                    owns.append(own.reshape(body.shape).astype(leaf.dtype)[None]
-                                if need_mask else jnp.zeros((1,) * leaf.ndim, leaf.dtype))
-                return tuple(means), tuple(residuals), tuple(owns)
-
-            mean_leaves, res_leaves, own_leaves = shard_map(
-                exchange, mesh=mesh, in_specs=in_specs,
-                out_specs=(in_specs, in_specs, own_specs),
-            )(*acc_leaves)
-
-            mean_tree = jax.tree.unflatten(acc_def, mean_leaves)
-            new_residual = jax.tree.unflatten(acc_def, res_leaves)
+        # ---- compress + exchange + residual, one channel call (§12)
+        mean_tree, new_residual, own_tree = channel.round_exchange(
+            state["residual"], deltas,
+            mesh=mesh, in_specs=tuple(flat_r_specs), res_spec=res_spec,
+            need_own=need_own,
+        )
 
         # every client reconstructs the identical mean update; take client 0
         mean_delta = jax.tree.map(lambda m: m[0], mean_tree)
@@ -558,11 +463,13 @@ def make_dist_train(
         )
         # momentum masking (supplement A) at transmitted coordinates
         if need_mask:
-            own_tree = jax.tree.unflatten(acc_def, own_leaves)
             transmitted = jax.tree.map(lambda o: (o != 0).astype(jnp.float32), own_tree)
             opt_states = jax.vmap(opt.mask)(opt_states, transmitted)
 
         metrics = {"loss": jnp.mean(losses)}
+        if measure:
+            # client 0's transmitted ΔW*, for host-side wire metering
+            metrics["own0"] = jax.tree.map(lambda o: o[0], own_tree)
         return (
             {"params": new_params, "opt": opt_states, "residual": new_residual},
             metrics,
@@ -604,10 +511,11 @@ def make_dist_train(
 
     return DistTrainFns(
         jitted, init_state, state_shardings, batch_shardings, a_state,
-        bits_per_client=bits_policy,
-        bits_dense=bits_dense,
+        bits_per_client=bits.per_client,
+        bits_dense=bits.dense,
         flat_space=space,
         residual_to_tree=residual_to_tree,
+        channel=channel,
     )
 
 
@@ -737,3 +645,58 @@ def make_dist_prefill(
 
     jitted = jax.jit(pre, in_shardings=(p_shard, None))
     return DistPrefillFns(jitted, p_shard, batch_shardings)
+
+
+# -------------------------------------------------------------- launcher
+
+
+def build_parser():
+    """Thin parser over the shared RunSpec surface, pinned to gspmd."""
+    import argparse
+
+    from repro.run.flags import add_run_flags
+
+    ap = argparse.ArgumentParser(
+        description="GSPMD sharded DSGD launcher (one client per mesh "
+        "data coordinate; run under XLA_FLAGS=--xla_force_host_platform_"
+        "device_count=N to fan out on CPU)"
+    )
+    add_run_flags(ap, backend="gspmd", preset="tiny", rounds=10, log_every=5)
+    return ap
+
+
+def main(argv=None):
+    from repro.run.build import build_run
+    from repro.run.flags import spec_from_args
+
+    args = build_parser().parse_args(argv)
+    spec = spec_from_args(args, backend="gspmd")
+    run = build_run(spec)
+    print(
+        f"gspmd: {run.n_clients} clients over {run.mesh.devices.size} "
+        f"device(s), p={spec.sparsity}, fast={spec.fast}, "
+        f"bits/client/round={run.fns.bits_per_client:.3e} "
+        f"(dense {run.fns.bits_dense:.3e})"
+    )
+    state, hist = run.run(log_every=args.log_every)
+    print(f"loss {hist['loss'][0]:.4f} → {hist['loss'][-1]:.4f}  "
+          f"compression ×{hist['compression_rate']:.0f}")
+    if spec.measure_wire:
+        run.ledger.reconcile(rel=0.1)
+        t = run.ledger.totals()
+        print(
+            f"wire: up {t['up_bytes']/1e3:.1f} kB (measured/analytic "
+            f"×{t['up_bits_measured']/max(t['up_bits_analytic'],1):.3f})"
+        )
+    if args.history:
+        import json
+        import os
+
+        os.makedirs(os.path.dirname(os.path.abspath(args.history)), exist_ok=True)
+        with open(args.history, "w") as f:
+            json.dump(hist, f, default=float)
+    return hist
+
+
+if __name__ == "__main__":
+    main()

@@ -30,12 +30,13 @@ import jax
 from repro.configs.base import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, input_specs
 from repro.launch import roofline
 from repro.launch.dist import (
+    build_dist_train,
     client_topology,
     make_dist_prefill,
     make_dist_serve,
-    make_dist_train,
 )
 from repro.launch.mesh import make_production_mesh
+from repro.run.flags import add_compression_flags
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
 
@@ -59,8 +60,8 @@ def lower_pair(cfg, shape_name: str, mesh, *, compressor: str = "sbc",
     n_dev = mesh.devices.size
 
     if kind == "train":
-        fns = make_dist_train(cfg, mesh, compressor=compressor, sparsity=sparsity,
-                              opts=opts, fast=True if fast else None)
+        fns = build_dist_train(cfg, mesh, compressor=compressor, sparsity=sparsity,
+                               opts=opts, fast=True if fast else None)
         n_clients, _ = client_topology(cfg, mesh)
         batch_sds = input_specs(cfg, shape_name, n_clients=n_clients)
         # drop the labels/tokens etc already shaped (C, per, ...) — attach shardings
@@ -187,12 +188,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
-    ap.add_argument("--compressor", default="sbc")
-    ap.add_argument("--sparsity", type=float, default=0.001)
     ap.add_argument("--opts", default="", help="comma list: expert_parallel,seq_every2")
-    ap.add_argument("--fast", action="store_true",
-                    help="sharded flat-buffer exchange (DESIGN.md §11)")
     ap.add_argument("--all", action="store_true")
+    # the shared compression surface (only compressor/sparsity/fast bear on
+    # lowering; policy patterns resolve per leaf exactly as in training)
+    add_compression_flags(ap)
     return ap
 
 

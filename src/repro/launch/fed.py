@@ -1,9 +1,13 @@
-"""Federated orchestration launcher (DESIGN.md §9).
+"""Federated orchestration launcher — a thin parser over ``repro.run``.
 
 Drives the paper's §I parameter-server deployment end to end on the
-:mod:`repro.fed` subsystem: M heterogeneous clients, partial participation,
-real packed SBW1 buffers in BOTH directions, pluggable aggregation, and
-per-round bidirectional byte accounting reconciled against Eq. 1/Eq. 5.
+:mod:`repro.fed` subsystem through a
+:class:`~repro.core.channel.FedWireChannel`: M heterogeneous clients,
+partial participation, real packed SBW1 buffers in BOTH directions,
+pluggable aggregation, and per-round bidirectional byte accounting
+reconciled against Eq. 1/Eq. 5.  All flags are the shared
+:func:`repro.run.add_run_flags` surface with this launcher's defaults
+(fed-tiny preset, DGC-style dense-small policy rule) pinned on top.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.fed --rounds 2 --clients 4 --cohort 2
@@ -26,139 +30,52 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
-from repro.core.api import CompressionPolicy, PolicyRule, get_compressor
 from repro.core.policy import DENSE_SMALL_PATTERN
-from repro.data import make_lm_task, make_non_iid_lm_task
-from repro.fed import ClientPool, ClientProfile, ParameterServer, RoundScheduler
-from repro.models.model import build_model
-from repro.optim import get_optimizer
-
-
-def fed_tiny_config() -> ModelConfig:
-    """The reduced federated preset — small enough for CI smoke rounds."""
-    return ModelConfig(
-        name="fed-tiny", family="decoder", n_layers=2, d_model=128, n_heads=4,
-        n_kv_heads=2, d_ff=256, vocab_size=256, dtype=jnp.float32,
-    )
-
-
-def parse_profiles(spec: str, default_delay: int, default_p: float):
-    """"d:p[:w],d:p[:w],..." → tuple of ClientProfile; empty → one default."""
-    if not spec:
-        return (ClientProfile(delay=default_delay, sparsity=default_p),)
-    out = []
-    for part in spec.split(","):
-        fields = part.split(":")
-        if len(fields) not in (2, 3):
-            raise ValueError(f"bad profile {part!r}; want delay:sparsity[:weight]")
-        delay, p = int(fields[0]), float(fields[1])
-        w = float(fields[2]) if len(fields) == 3 else 1.0
-        out.append(ClientProfile(delay=delay, sparsity=p, weight=w))
-    return tuple(out)
-
-
-def build_policy(compressor: str, fast: bool = False) -> CompressionPolicy:
-    """The DGC-style recipe: tiny leaves ride dense, matrices get the
-    chosen codec (see DESIGN.md §3).  ``fast=True`` opts client uploads AND
-    the server's per-round broadcast re-compression into the flat-buffer
-    fast path (DESIGN.md §10)."""
-    comp = get_compressor(compressor)
-    return CompressionPolicy(
-        default=comp.codec,
-        rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),) + comp.policy.rules,
-        name=f"{compressor}+dense-small",
-        fast=fast,
-    )
+from repro.run.build import build_run
+from repro.run.flags import add_run_flags, spec_from_args
+from repro.run.presets import fed_tiny_config  # noqa: F401 (re-export)
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--clients", type=int, default=16)
-    ap.add_argument("--cohort", type=int, default=None,
-                    help="sampled clients per round (default: all)")
-    ap.add_argument("--rounds", type=int, default=20)
-    ap.add_argument("--delay", type=int, default=3,
-                    help="local steps per round (temporal sparsity)")
-    ap.add_argument("--sparsity", type=float, default=0.01,
-                    help="upstream gradient sparsity")
-    ap.add_argument("--down-sparsity", type=float, default=1.0,
-                    help="broadcast sparsity (1.0 = dense downstream)")
-    ap.add_argument("--compressor", default="sbc")
-    ap.add_argument("--agg", default=None,
-                    choices=["mean", "weighted", "staleness"],
-                    help="aggregation (default: mean sync / staleness async)")
-    ap.add_argument("--async", dest="async_mode", action="store_true",
-                    help="async rounds with stale client starts")
-    ap.add_argument("--max-staleness", type=int, default=4)
-    ap.add_argument("--staleness-beta", type=float, default=0.5)
-    ap.add_argument("--non-iid", action="store_true",
-                    help="per-client Markov chains instead of IID shards")
-    ap.add_argument("--skew", type=float, default=2.0,
-                    help="non-IID interpolation strength")
-    ap.add_argument("--profiles", default="",
-                    help="heterogeneous clients: 'delay:sparsity[:weight],...'")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq-len", type=int, default=64)
-    ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--log-every", type=int, default=5)
-    ap.add_argument("--history", default=None, help="metrics JSON path")
-    ap.add_argument("--fast", action="store_true",
-                    help="flat-buffer compression fast path (DESIGN.md §10)")
+    add_run_flags(
+        ap,
+        preset="fed-tiny",
+        backend="fed",
+        clients=16,
+        rounds=20,
+        delay=3,
+        sparsity=0.01,
+        lr=0.05,
+        log_every=5,
+        # the DGC-style recipe: tiny leaves (biases, norm scales) ride
+        # dense, matrices get the chosen codec (DESIGN.md §3)
+        dense_pattern=DENSE_SMALL_PATTERN,
+    )
     return ap
 
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
+    spec = spec_from_args(args, backend="fed")
+    run = build_run(spec)
+    sched = run.init()
+    pool, server = sched.pool, sched.server
 
-    cfg = fed_tiny_config()
-    model = build_model(cfg)
-    if args.non_iid:
-        task = make_non_iid_lm_task(
-            vocab=cfg.vocab_size, batch=args.batch, seq_len=args.seq_len,
-            n_clients=args.clients, skew=args.skew, temperature=0.5,
-            seed=args.seed,
-        )
-    else:
-        task = make_lm_task(vocab=cfg.vocab_size, batch=args.batch,
-                            seq_len=args.seq_len, temperature=0.5,
-                            seed=args.seed)
-
-    policy = build_policy(args.compressor, fast=args.fast)
-    profiles = parse_profiles(args.profiles, args.delay, args.sparsity)
-    agg = args.agg or ("staleness" if args.async_mode else "mean")
-
-    params = model.init(jax.random.PRNGKey(args.seed))
-    server = ParameterServer(
-        params=params, up_policy=policy, down_sparsity=args.down_sparsity,
-        aggregator=agg, staleness_beta=args.staleness_beta,
-    )
-    pool = ClientPool(
-        model=model, optimizer=get_optimizer(cfg.local_opt), policy=policy,
-        task=task, n_clients=args.clients, lr=lambda it: args.lr,
-        profiles=profiles, seed=args.seed,
-    )
-    sched = RoundScheduler(
-        server=server, pool=pool,
-        cohort_size=args.cohort or args.clients,
-        mode="async" if args.async_mode else "sync",
-        max_staleness=args.max_staleness, seed=args.seed,
-    )
-
+    params = server.params
     n_params = sum(x.size for x in jax.tree.leaves(params))
+    profiles = pool.profiles
     print(
-        f"fed: {args.clients} clients (cohort {sched.cohort_size}), "
-        f"{len(profiles)} profile(s), agg={agg}, "
-        f"mode={'async' if args.async_mode else 'sync'}, "
-        f"{'non-IID' if args.non_iid else 'IID'}, params={n_params/1e6:.2f}M"
+        f"fed: {spec.clients} clients (cohort {sched.cohort_size}), "
+        f"{len(profiles)} profile(s), agg={server.aggregator}, "
+        f"mode={sched.mode}, "
+        f"{'non-IID' if spec.non_iid else 'IID'}, params={n_params/1e6:.2f}M"
     )
     print(pool.resolved(params).describe())
 
     t0 = time.time()
-    hist = sched.run(args.rounds, log_every=args.log_every)
+    hist = sched.run(spec.rounds, log_every=args.log_every)
     dt = time.time() - t0
     sched.ledger.reconcile(rel=0.1)
     t = sched.ledger.totals()
@@ -170,7 +87,7 @@ def main(argv=None):
         for c in rec.cohort
     )
     print(
-        f"done in {dt:.1f}s ({args.rounds / dt:.2f} rounds/s): "
+        f"done in {dt:.1f}s ({spec.rounds / dt:.2f} rounds/s): "
         f"loss {hist['loss'][0]:.4f} → {hist['loss'][-1]:.4f}"
     )
     print(

@@ -1,19 +1,11 @@
-"""End-to-end DSGD training driver (deliverable (b)'s launcher).
+"""End-to-end DSGD training launcher — a thin parser over ``repro.run``.
 
 Runs the paper's training setting — M clients, communication delay n,
 sparsity p, any registered compressor — on a synthetic-but-learnable task
-sized by ``--preset``:
-
-  paper-lenet    LeNet5 on blob-MNIST (Adam, the paper's smallest task)
-  paper-lstm     CharLSTM on a markov stream
-  lm-100m        ~100M-param decoder LM for a few hundred rounds
-  <arch id>      a reduced config of any assigned architecture
-
-Per-leaf policies (DESIGN.md §3): ``--dense-pattern`` / ``--skip-pattern``
-wrap the chosen compressor in a :class:`CompressionPolicy` so matched
-leaves (by path regex) ride dense / are skipped, and ``--measure-wire``
-packs client 0's update to real bytes every round next to the analytic
-Eq. 1 accounting.
+sized by ``--preset`` (see :mod:`repro.run.presets`).  All flags are the
+shared :func:`repro.run.add_run_flags` surface; this module only pins the
+backend to "local", re-pins a few defaults, and keeps the two
+launcher-specific extras (``--save``, ``--print-policy``).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --preset lm-100m \
@@ -23,7 +15,7 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --preset paper-lstm \
       --compressor sbc --sparsity 0.001 \
       --dense-pattern '(^|/)(bias|scale|norm[^/]*)(/|$)' --measure-wire
-  PYTHONPATH=src python -m repro.launch.train --compressor dgc_policy ...
+  PYTHONPATH=src python -m repro.launch.train --spec-json my_run.json
 """
 from __future__ import annotations
 
@@ -33,160 +25,59 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import save_pytree
-from repro.configs.base import ModelConfig, get_config, reduced
-from repro.core.api import CompressionPolicy, PolicyRule, get_compressor
 from repro.core.baselines import dgc_policy  # noqa: F401 (registration)
-from repro.data import client_batches, make_classification_task, make_lm_task
-from repro.models.model import build_model
-from repro.optim import get_optimizer
-from repro.train import DSGDTrainer
-
-
-def lm_100m_config() -> ModelConfig:
-    """~100M decoder: 12L, d=768, 12H, tied 32k vocab."""
-    return ModelConfig(
-        name="lm-100m", family="decoder", n_layers=12, d_model=768, n_heads=12,
-        n_kv_heads=12, d_ff=3072, vocab_size=32_000, dtype=jnp.float32,
-        local_opt="adam", base_lr=3e-4,
-    )
-
-
-def build_preset(name: str, *, batch: int, seq_len: int):
-    if name == "paper-lenet":
-        cfg = get_config("lenet5")
-        task = make_classification_task(
-            n_classes=10, img_size=28, channels=1, batch=batch
-        )
-        return cfg, task
-    if name == "paper-lstm":
-        cfg = get_config("charlstm")
-        task = make_lm_task(vocab=98, batch=batch, seq_len=seq_len, temperature=0.5)
-        return cfg, task
-    if name == "lm-100m":
-        cfg = lm_100m_config()
-        task = make_lm_task(vocab=cfg.vocab_size, batch=batch, seq_len=seq_len,
-                            temperature=0.5)
-        return cfg, task
-    # reduced assigned arch
-    cfg = reduced(get_config(name))
-    if cfg.family == "encdec":
-        d = cfg.d_model
-
-        def extra(rng):
-            return {"enc_frames": 0.1 * jax.random.normal(rng, (batch, seq_len, d))} \
-                if cfg.modality == "audio" else {}
-
-        task = make_lm_task(vocab=cfg.vocab_size, batch=batch, seq_len=seq_len,
-                            temperature=0.5, extra_fields=extra)
-    elif cfg.modality == "vision":
-        d, npre = cfg.d_model, cfg.n_prefix
-
-        def extra(rng):
-            return {"prefix": 0.1 * jax.random.normal(rng, (batch, npre, d))}
-
-        task = make_lm_task(vocab=cfg.vocab_size, batch=batch, seq_len=seq_len,
-                            temperature=0.5, extra_fields=extra)
-    else:
-        task = make_lm_task(vocab=cfg.vocab_size, batch=batch, seq_len=seq_len,
-                            temperature=0.5)
-    return cfg, task
-
-
-def lr_schedule(base_lr: float, decay_at: tuple[int, ...] = (), factor: float = 0.1):
-    def lr(it):
-        mult = 1.0
-        for d in decay_at:
-            mult = jnp.where(it >= d, mult * factor, mult)
-        return base_lr * mult
-
-    return lr
+from repro.run.build import build_run, lr_schedule  # noqa: F401 (re-export)
+from repro.run.flags import add_run_flags, spec_from_args
+from repro.run.presets import build_preset, lm_100m_config  # noqa: F401
 
 
 def build_parser() -> argparse.ArgumentParser:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--preset", default="lm-100m")
-    ap.add_argument("--compressor", default="sbc")
-    ap.add_argument("--clients", type=int, default=4)
-    ap.add_argument("--delay", type=int, default=1)
-    ap.add_argument("--sparsity", type=float, default=0.001)
-    ap.add_argument("--rounds", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq-len", type=int, default=256)
-    ap.add_argument("--lr", type=float, default=None)
-    ap.add_argument("--log-every", type=int, default=10)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    add_run_flags(
+        ap,
+        preset="lm-100m",
+        backend="local",
+        rounds=200,
+        seq_len=256,
+        log_every=10,
+    )
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
-    ap.add_argument("--history", default=None, help="metrics JSON path")
-    ap.add_argument("--dense-pattern", default=None,
-                    help="path regex: matched leaves ride dense (DGC-style)")
-    ap.add_argument("--skip-pattern", default=None,
-                    help="path regex: matched leaves are never transmitted")
-    ap.add_argument("--measure-wire", action="store_true",
-                    help="pack client 0's update to real bytes every round")
     ap.add_argument("--print-policy", action="store_true",
                     help="print the per-leaf codec resolution and exit")
-    ap.add_argument("--fast", action="store_true",
-                    help="flat-buffer compression fast path (DESIGN.md §10)")
     return ap
 
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
+    spec = spec_from_args(args, backend="local")
+    run = build_run(spec)
 
-    cfg, task = build_preset(args.preset, batch=args.batch, seq_len=args.seq_len)
-    model = build_model(cfg)
-    lr = args.lr if args.lr is not None else cfg.base_lr
-    compressor = get_compressor(args.compressor)
-    if args.dense_pattern or args.skip_pattern:
-        rules = ()
-        if args.skip_pattern:
-            rules += (PolicyRule(args.skip_pattern, codec="skip"),)
-        if args.dense_pattern:
-            rules += (PolicyRule(args.dense_pattern, codec="dense32"),)
-        # CLI rules take precedence but keep any rules the compressor's own
-        # policy already carries (e.g. dgc_policy's warm-up + dense biases)
-        compressor = CompressionPolicy(
-            default=compressor.codec,
-            rules=rules + compressor.policy.rules,
-            name=args.compressor + "+rules",
-        )
-    trainer = DSGDTrainer(
-        model=model,
-        compressor=compressor,
-        optimizer=get_optimizer(cfg.local_opt),
-        n_clients=args.clients,
-        lr=lr_schedule(lr),
-        fast=True if args.fast else None,
-    )
     if args.print_policy:
-        a_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-        print(trainer.resolved(a_params).describe())
+        a_params = jax.eval_shape(run.model.init, jax.random.PRNGKey(0))
+        print(run.trainer.resolved(a_params).describe())
         return {}
-    batch_fn = client_batches(task, args.clients, args.delay)
 
     n_params = sum(
-        x.size for x in jax.tree.leaves(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+        x.size for x in jax.tree.leaves(
+            jax.eval_shape(run.model.init, jax.random.PRNGKey(0))
+        )
     )
     print(
-        f"preset={args.preset} arch={cfg.name} params={n_params/1e6:.1f}M "
-        f"compressor={args.compressor} clients={args.clients} "
-        f"delay={args.delay} p={args.sparsity}"
+        f"preset={spec.preset} arch={run.cfg.name} params={n_params/1e6:.1f}M "
+        f"compressor={spec.compressor} clients={spec.clients} "
+        f"delay={spec.delay} p={spec.sparsity}"
     )
     t0 = time.time()
-    state, hist = trainer.fit(
-        jax.random.PRNGKey(0), batch_fn, n_rounds=args.rounds,
-        n_delay=args.delay, sparsity=args.sparsity, log_every=args.log_every,
-        measure_wire=args.measure_wire,
-    )
+    state, hist = run.run(log_every=args.log_every)
     dt = time.time() - t0
     print(
         f"done in {dt:.1f}s: loss {hist['loss'][0]:.4f} → {hist['loss'][-1]:.4f}  "
         f"upload {hist['total_upload_bits']/8e6:.2f} MB/client  "
         f"compression ×{hist['compression_rate']:.0f}"
     )
-    if args.measure_wire:
+    if spec.measure_wire:
         print(
             f"measured wire: {hist['measured_total_bits']/8e6:.2f} MB/client "
             f"(analytic {hist['total_upload_bits']/8e6:.2f} MB)"

@@ -1,0 +1,35 @@
+"""One declarative run surface over the local, GSPMD, and federated
+backends (DESIGN.md §12).
+
+  >>> from repro.run import RunSpec, build_run
+  >>> run = build_run(RunSpec(preset="lenet5", backend="local",
+  ...                         sparsity=0.01, rounds=10))
+  >>> state, hist = run.run()
+
+The spec is frozen, hashable, and JSON round-trippable; ``build_run``
+dispatches it to one :class:`~repro.core.channel.CommChannel` backend with
+bit-identical compression semantics across all three.  CLI:
+``python -m repro.run --preset lenet5 --backend {local,gspmd,fed}``.
+"""
+from repro.run.build import Run, build_run, policy_from_spec
+from repro.run.flags import (
+    add_compression_flags,
+    add_run_flags,
+    build_parser,
+    spec_from_args,
+)
+from repro.run.presets import build_preset
+from repro.run.spec import BACKENDS, RunSpec
+
+__all__ = [
+    "BACKENDS",
+    "Run",
+    "RunSpec",
+    "add_compression_flags",
+    "add_run_flags",
+    "build_parser",
+    "build_preset",
+    "build_run",
+    "policy_from_spec",
+    "spec_from_args",
+]

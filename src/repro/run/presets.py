@@ -1,0 +1,93 @@
+"""Named presets: one string → (ModelConfig, synthetic Task).
+
+The preset registry every backend shares (``RunSpec.preset``).  Moved out
+of ``repro.launch.train`` so the local, GSPMD, and federated launchers
+resolve sizes through ONE function instead of three:
+
+  lenet5 / paper-lenet   LeNet5 on blob-MNIST (Adam, the paper's smallest)
+  charlstm / paper-lstm  CharLSTM on a markov stream
+  lm-100m                ~100M-param decoder LM
+  fed-tiny               2-layer decoder sized for CI smoke rounds
+  tiny                   2-layer d=64 decoder (test/parity-matrix scale)
+  <arch id>              a reduced config of any assigned architecture
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config, reduced
+from repro.data import make_classification_task, make_lm_task
+
+
+def lm_100m_config() -> ModelConfig:
+    """~100M decoder: 12L, d=768, 12H, tied 32k vocab."""
+    return ModelConfig(
+        name="lm-100m", family="decoder", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=12, d_ff=3072, vocab_size=32_000, dtype=jnp.float32,
+        local_opt="adam", base_lr=3e-4,
+    )
+
+
+def fed_tiny_config() -> ModelConfig:
+    """The reduced federated preset — small enough for CI smoke rounds."""
+    return ModelConfig(
+        name="fed-tiny", family="decoder", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=256, vocab_size=256, dtype=jnp.float32,
+    )
+
+
+def tiny_config() -> ModelConfig:
+    """Sub-CI decoder for parity matrices and unit tests."""
+    return ModelConfig(
+        name="tiny", family="decoder", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=97, dtype=jnp.float32,
+    )
+
+
+def build_preset(name: str, *, batch: int, seq_len: int, seed: int = 0):
+    """Resolve a preset name to ``(cfg, task)``."""
+    if name in ("paper-lenet", "lenet5"):
+        cfg = get_config("lenet5")
+        task = make_classification_task(
+            n_classes=10, img_size=28, channels=1, batch=batch
+        )
+        return cfg, task
+    if name in ("paper-lstm", "charlstm"):
+        cfg = get_config("charlstm")
+        task = make_lm_task(vocab=98, batch=batch, seq_len=seq_len,
+                            temperature=0.5, seed=seed)
+        return cfg, task
+    if name == "lm-100m":
+        cfg = lm_100m_config()
+        task = make_lm_task(vocab=cfg.vocab_size, batch=batch, seq_len=seq_len,
+                            temperature=0.5, seed=seed)
+        return cfg, task
+    if name in ("fed-tiny", "tiny"):
+        cfg = fed_tiny_config() if name == "fed-tiny" else tiny_config()
+        task = make_lm_task(vocab=cfg.vocab_size, batch=batch, seq_len=seq_len,
+                            temperature=0.5, seed=seed)
+        return cfg, task
+    # reduced assigned arch
+    cfg = reduced(get_config(name))
+    if cfg.family == "encdec":
+        d = cfg.d_model
+
+        def extra(rng):
+            return {"enc_frames": 0.1 * jax.random.normal(rng, (batch, seq_len, d))} \
+                if cfg.modality == "audio" else {}
+
+        task = make_lm_task(vocab=cfg.vocab_size, batch=batch, seq_len=seq_len,
+                            temperature=0.5, extra_fields=extra, seed=seed)
+    elif cfg.modality == "vision":
+        d, npre = cfg.d_model, cfg.n_prefix
+
+        def extra(rng):
+            return {"prefix": 0.1 * jax.random.normal(rng, (batch, npre, d))}
+
+        task = make_lm_task(vocab=cfg.vocab_size, batch=batch, seq_len=seq_len,
+                            temperature=0.5, extra_fields=extra, seed=seed)
+    else:
+        task = make_lm_task(vocab=cfg.vocab_size, batch=batch, seq_len=seq_len,
+                            temperature=0.5, seed=seed)
+    return cfg, task

@@ -12,30 +12,32 @@ One *communication round* (the jit unit):
   5. momentum masking (supplement A): client momentum zeroed at transmitted
      coordinates.
 
-Compression is a :class:`~repro.core.api.Compressor` (single codec) or a
-:class:`~repro.core.policy.CompressionPolicy` (per-leaf codecs + schedules
-by path regex — dense biases, warm-up matrices, skipped leaves).  Per-leaf
-sparsity rates are resolved OUTSIDE jit each round and enter ``round_step``
-as a static tuple, so shapes stay fixed; passing a plain float keeps the
-seed behavior (one global rate, rule overrides win).
+Steps 3-4 plus all bit accounting are one
+:class:`~repro.core.channel.LocalVmapChannel` call (``round_exchange``,
+DESIGN.md §12): clients are a leading vmap axis, so per-client
+weight-updates exist as real tensors *before* any reduction — the thing
+that makes per-client compression expressible at all (DESIGN.md §4).
 
-Clients are a leading vmap axis, so per-client weight-updates exist as real
-tensors *before* any reduction — the thing that makes per-client compression
-expressible at all (DESIGN.md §4).  The same round function drives the
-CPU-scale paper reproduction and, wrapped in shardings by
-``repro.launch.train``, the production mesh.
+``DSGDTrainer`` itself is the **legacy entry point** for this backend: it
+predates the declarative run surface and survives as a documented shim —
+``repro.run.build_run(RunSpec(backend="local", ...))`` constructs the same
+trainer (bit-identical states; ``tests/test_legacy_api.py`` holds it to
+that) and adds the uniform ledger/checkpoint surface on top.  Direct
+construction emits a :class:`DeprecationWarning` pointing there.
 
 Bit accounting: ``metrics['bits_per_client']`` is the analytic wire size
 (Eq. 1 with Golomb position bits for SBC) of one client's upload this round;
 ``bits_dense`` is the 32-bit dense equivalent, so compression rate =
 ``delay · bits_dense / bits_per_client`` cumulated over rounds.  With
 ``fit(..., measure_wire=True)`` client 0's update is additionally packed to
-real bytes every round (:mod:`repro.core.wire`) and the *measured* sizes are
-recorded next to the analytic ones.
+real bytes every round (:mod:`repro.core.wire`), the *measured* sizes are
+recorded next to the analytic ones, and the channel's
+:class:`~repro.core.ledger.BandwidthLedger` gets one row per round.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
 
@@ -43,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import Compressor, CompressorState
+from repro.core.channel import LocalVmapChannel
 from repro.core.policy import CompressionPolicy, ResolvedPolicy
 from repro.models.model import Model
 from repro.optim.optimizers import Optimizer
@@ -70,8 +73,20 @@ class DSGDTrainer:
     # per-client error-feedback residual is stored as ONE flat f32 buffer
     # per client instead of a per-leaf pytree.
     fast: Optional[bool] = None
+    # construction provenance: repro.run builds this trainer internally and
+    # suppresses the legacy-surface warning
+    _from_run: dataclasses.InitVar[bool] = False
 
-    def __post_init__(self) -> None:
+    def __post_init__(self, _from_run: bool = False) -> None:
+        if not _from_run:
+            warnings.warn(
+                "constructing DSGDTrainer directly is the legacy local-"
+                "backend surface; build it declaratively via "
+                "repro.run.build_run(RunSpec(backend='local', ...)) "
+                "(bit-identical states, uniform ledger/checkpoint API)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         if isinstance(self.compressor, CompressionPolicy):
             self.compressor = Compressor.from_policy(
                 self.compressor.name, self.compressor
@@ -81,13 +96,21 @@ class DSGDTrainer:
                 self.compressor.name,
                 dataclasses.replace(self.compressor.policy, fast=self.fast),
             )
-        self._resolved: Optional[ResolvedPolicy] = None
+        self.channel = LocalVmapChannel(
+            compressor=self.compressor,
+            n_clients=self.n_clients,
+            residual_dtype=self.residual_dtype,
+        )
+
+    @property
+    def ledger(self):
+        """The channel's bandwidth ledger (rows recorded by
+        ``fit(measure_wire=True)`` / the run API)."""
+        return self.channel.ledger
 
     def resolved(self, params: PyTree) -> ResolvedPolicy:
         """The compressor's policy bound to this model's param structure."""
-        if self._resolved is None:
-            self._resolved = self.compressor.resolve(params)
-        return self._resolved
+        return self.channel.resolved(params)
 
     # ------------------------------------------------------------------ init
 
@@ -101,14 +124,7 @@ class DSGDTrainer:
             )
 
         opt_states = stack_c(self.optimizer.init(params))
-        comp = self.compressor.init_state(
-            jax.tree.map(lambda x: x.astype(self.residual_dtype), params)
-        )
-        comp_state = CompressorState(
-            residual=stack_c(comp.residual),
-            rng=jax.random.split(c_rng, self.n_clients),
-            step=jnp.zeros((self.n_clients,), jnp.int32),
-        )
+        comp_state = self.channel.init_state(params, c_rng)
         return TrainState(params, opt_states, comp_state, jnp.zeros((), jnp.int32))
 
     # ------------------------------------------------------------- one round
@@ -152,42 +168,36 @@ class DSGDTrainer:
 
         deltas, opt_states, losses = jax.vmap(local_update)(state.opt_states, batch)
 
-        # ---- per-client compression with error feedback (Alg. 1 l.11-12)
-        def compress_one(delta, comp_state):
-            ctree, dense, new_state = self.compressor.compress(
-                delta, comp_state, sparsity
-            )
-            bits = self.compressor.total_bits(ctree)
-            return ctree, dense, new_state, bits
-
-        ctrees, dense, comp_state, bits = jax.vmap(compress_one)(
-            deltas, state.comp_state
+        # ---- per-client compression + exchange (Alg. 1 l.11-17), one
+        # channel call (compress with error feedback, mean over clients,
+        # Eq. 1 accounting — DESIGN.md §12)
+        ex = self.channel.round_exchange(
+            deltas, state.comp_state, sparsity,
+            return_compressed=return_compressed,
         )
-
-        # ---- exchange + server update (Alg. 1 l.17-19)
-        mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), dense)
         new_params = jax.tree.map(
             lambda p, d: (p.astype(jnp.float32) + d.astype(jnp.float32)).astype(p.dtype),
             params,
-            mean_delta,
+            ex.mean_delta,
         )
 
         # ---- momentum masking at transmitted coordinates (supplement A)
-        transmitted = jax.tree.map(lambda d: (d != 0).astype(jnp.float32), dense)
+        transmitted = jax.tree.map(
+            lambda d: (d != 0).astype(jnp.float32), ex.transmitted
+        )
         opt_states = jax.vmap(self.optimizer.mask)(opt_states, transmitted)
 
         n_params = sum(x.size for x in jax.tree.leaves(params))
         metrics = {
             "loss": jnp.mean(losses),
-            "bits_per_client": jnp.mean(bits),
+            "bits_per_client": ex.bits_per_client,
             "bits_dense": jnp.asarray(32.0 * n_params * n_delay, jnp.float32),
-            "update_norm": _tree_norm(mean_delta),
+            "update_norm": _tree_norm(ex.mean_delta),
         }
-        new_state = TrainState(new_params, opt_states, comp_state, state.round + 1)
+        new_state = TrainState(new_params, opt_states, ex.state, state.round + 1)
         if return_compressed:
             # client 0's compressed tree, for host-side wire measurement
-            comp0 = jax.tree.map(lambda x: x[0], ctrees)
-            return new_state, metrics, comp0
+            return new_state, metrics, ex.compressed0
         return new_state, metrics
 
     # --------------------------------------------------------------- fitting
@@ -210,8 +220,6 @@ class DSGDTrainer:
         resolved = self.resolved(state.params)
         hist: dict = {"round": [], "loss": [], "bits_per_client": [], "eval": []}
         if measure_wire:
-            from repro.core.wire import wire_for
-
             hist["measured_bits_per_client"] = []
         total_bits = 0.0
         for r in range(n_rounds):
@@ -222,10 +230,11 @@ class DSGDTrainer:
             )
             if measure_wire:
                 state, m, comp0 = step_out
-                w = wire_for(resolved, state.params, sparsity, r)
-                hist["measured_bits_per_client"].append(
-                    float(w.measured_bits(comp0))
+                measured = self.channel.record_round(
+                    r, params=state.params, compressed0=comp0, rate=sparsity,
+                    bits_analytic_per_client=float(m["bits_per_client"]),
                 )
+                hist["measured_bits_per_client"].append(measured)
             else:
                 state, m = step_out
             total_bits += float(m["bits_per_client"])

@@ -18,7 +18,9 @@ DOC_FILES = [REPO / "README.md", REPO / "DESIGN.md",
 
 # launcher + harness modules that expose build_parser()
 PARSER_MODULES = [
+    "repro.run",
     "repro.launch.train",
+    "repro.launch.dist",
     "repro.launch.fed",
     "repro.launch.serve",
     "repro.launch.dryrun",
@@ -62,6 +64,28 @@ def test_documented_cli_flags_exist():
     known = all_parser_flags()
     unknown = documented - known
     assert not unknown, f"docs mention nonexistent CLI flags: {sorted(unknown)}"
+
+
+def test_shared_run_flags_are_documented():
+    """Completeness: every flag on the SHARED add_run_flags parser (the
+    surface every launcher builds on) must appear in README's CLI table —
+    a new run flag cannot ship undocumented."""
+    import argparse
+
+    from repro.run.flags import add_run_flags
+
+    ap = add_run_flags(argparse.ArgumentParser())
+    flags = {
+        o for action in ap._actions for o in action.option_strings
+        if o.startswith("--") and o != "--help"
+    }
+    assert flags, "shared parser exposes no flags?"
+    documented = set(re.findall(r"`(--[a-z][a-z0-9-]*)`", doc_text()))
+    missing = flags - documented
+    assert not missing, (
+        f"shared add_run_flags() flags missing from the docs: "
+        f"{sorted(missing)} — document them in README's CLI table"
+    )
 
 
 def test_registered_stage_and_codec_names_are_documented():

@@ -1,0 +1,112 @@
+"""Deprecation shims (ISSUE 5 satellite): every legacy entry point
+survives as a documented shim over the channel/RunSpec API — one
+``DeprecationWarning`` each, bit-identical behavior.
+
+The heavyweight bitwise parity matrix lives in
+``tests/test_channel_parity.py``; this file pins the *shim contract*:
+the warning fires exactly at the legacy surface, the non-deprecated
+replacement is silent, and the two produce the same objects/states.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.api import get_compressor, make_compressor
+from repro.optim import get_optimizer
+from repro.run import RunSpec, build_run
+from repro.run.build import lr_schedule
+from repro.run.presets import build_preset
+
+from test_channel_parity import assert_trees_equal, tiny_setup
+
+BATCH, SEQ = 4, 16
+
+
+def _no_deprecation(record) -> None:
+    deps = [w for w in record if issubclass(w.category, DeprecationWarning)
+            and "repro" in str(w.message)]
+    assert not deps, f"replacement surface warned: {deps[0].message}"
+
+
+# ------------------------------------------------------------ get_compressor
+
+
+class TestGetCompressorShim:
+    def test_warns_once_and_matches_make_compressor(self):
+        with pytest.warns(DeprecationWarning, match="make_compressor"):
+            legacy = get_compressor("sbc")
+        with warnings.catch_warnings(record=True) as record:
+            warnings.simplefilter("always")
+            new = make_compressor("sbc")
+        _no_deprecation(record)
+        assert legacy.name == new.name
+        assert legacy.policy == new.policy
+
+    def test_bit_identical_compression(self, rng):
+        with pytest.warns(DeprecationWarning):
+            legacy = get_compressor("sbc")
+        new = make_compressor("sbc")
+        x = jax.random.normal(rng, (512,))
+        a = legacy.compress_leaf(x, 0.05, rng)
+        b = new.compress_leaf(x, 0.05, rng)
+        np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
+        np.testing.assert_array_equal(np.asarray(a.mean), np.asarray(b.mean))
+        assert float(a.nbits) == float(b.nbits)
+
+
+# -------------------------------------------------------------- DSGDTrainer
+
+
+class TestDSGDTrainerShim:
+    def test_warns_and_matches_runspec(self):
+        from repro.data import client_batches
+        from repro.train import DSGDTrainer
+
+        spec = RunSpec(preset="tiny", backend="local", rounds=1,
+                       batch=BATCH, seq_len=SEQ, clients=2, delay=1,
+                       sparsity=0.05)
+        cfg, model, task = tiny_setup()
+        with pytest.warns(DeprecationWarning, match="build_run"):
+            trainer = DSGDTrainer(
+                model=model, compressor=make_compressor("sbc"),
+                optimizer=get_optimizer(cfg.local_opt), n_clients=2,
+                lr=lr_schedule(cfg.base_lr),
+            )
+        legacy_state, _ = trainer.fit(
+            jax.random.PRNGKey(0), client_batches(task, 2, 1),
+            n_rounds=1, n_delay=1, sparsity=0.05,
+        )
+        with warnings.catch_warnings(record=True) as record:
+            warnings.simplefilter("always")
+            run = build_run(spec)
+        _no_deprecation(record)
+        state, _ = run.run()
+        assert_trees_equal(state.params, legacy_state.params, "params")
+        assert_trees_equal(state.comp_state.residual,
+                           legacy_state.comp_state.residual, "residuals")
+
+
+# ------------------------------------------------------------ make_dist_train
+
+
+class TestMakeDistTrainShim:
+    def test_warns_and_matches_build_dist_train(self):
+        from jax.sharding import Mesh
+
+        from repro.launch.dist import build_dist_train, make_dist_train
+
+        cfg, _ = build_preset("tiny", batch=BATCH, seq_len=SEQ)
+        mesh = Mesh(np.asarray(jax.devices()).reshape(-1, 1),
+                    ("data", "model"))
+        with pytest.warns(DeprecationWarning, match="build_dist_train"):
+            legacy = make_dist_train(cfg, mesh, sparsity=0.05)
+        with warnings.catch_warnings(record=True) as record:
+            warnings.simplefilter("always")
+            new = build_dist_train(cfg, mesh, sparsity=0.05)
+        _no_deprecation(record)
+        assert legacy.bits_per_client == new.bits_per_client
+        assert legacy.bits_dense == new.bits_dense
+        assert [gl for gl in legacy.channel.leaves] == \
+            [gl for gl in new.channel.leaves]
