@@ -1,0 +1,89 @@
+"""Delta-broadcast fan-out: bytes/subscriber/round at 10k+ subscribers.
+
+Drives the production broadcast path (``ParameterServer`` with a
+``DeltaLog`` attached — DESIGN.md §13) on the fed-micro transformer and
+fans every round out to a :class:`~repro.serve.broadcast.SubscriberPool`
+with heterogeneous sync periods, so the planner prices real replay /
+stacked / full catch-ups for every lag class.
+
+The byte fields are deterministic (threefry updates, fixed seed), so the
+committed JSON doubles as a cross-machine regression baseline
+(``benchmarks/check_regression.py``); only the rounds/sec fields vary.
+``--smoke`` runs the IDENTICAL configuration — the whole benchmark is
+CI-sized (one encode per round is the point) — and exists so the CI
+invocation matches the other benchmarks' calling convention.
+
+  PYTHONPATH=src python -m benchmarks.broadcast_fanout
+  PYTHONPATH=src python -m benchmarks.broadcast_fanout --smoke
+
+Acceptance gates (raise on violation):
+  * every lag k <= horizon: chosen plan strictly cheaper than full resync
+  * stacked application bit-identical to sequential replay (live-verified)
+  * the SubscriberPool's BandwidthLedger reconciles (Eq. 1/Eq. 5)
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import save_json
+from benchmarks.fed_round import _setup
+from repro.serve.broadcast import simulate_fanout
+
+N_SUBSCRIBERS = 10_000
+ROUNDS = 16
+HORIZON = 8
+DOWN_SPARSITY = 0.02
+PERIODS = (1, 2, 4, 8)
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    # quick/smoke accepted for harness uniformity; the configuration is
+    # identical in every mode (see docstring)
+    _, model, _, policy = _setup()
+    params = model.init(jax.random.PRNGKey(0))
+    out = simulate_fanout(
+        params,
+        n_subscribers=N_SUBSCRIBERS,
+        rounds=ROUNDS,
+        horizon=HORIZON,
+        down_sparsity=DOWN_SPARSITY,
+        periods=PERIODS,
+        seed=0,
+        verify_classes=3,
+        policy=policy,
+    )
+    print(f"{out['n_subscribers']} subscribers x {out['timed_rounds']} rounds "
+          f"(horizon {out['horizon']}, p_down={out['down_sparsity']}, "
+          f"{out['n_params']} params)")
+    print(f"  {out['bytes_per_subscriber_per_round']:8.1f} B/subscriber/round "
+          f"(full resync would be {out['full_resync_bytes']} B)")
+    print(f"  {out['bytes_saving_vs_full_resync']:8.1f}x saving vs "
+          f"full-resync-every-sync")
+    print(f"  {out['rounds_per_sec']:8.2f} rounds/s  "
+          f"{out['subscriber_syncs_per_sec']:8.0f} subscriber syncs/s")
+    for lag, rec in out["plan_by_lag"].items():
+        print(f"  lag {lag}: {rec['kind']:7s} {rec['nbytes']:6d} B  "
+              f"{rec['candidates']}")
+    if not out["catchup_beats_full_all_lags"]:
+        raise AssertionError(
+            "a lag <= horizon chose a plan >= full resync cost"
+        )
+    if not out["stack_bit_exact"]:
+        raise AssertionError("catch-up application diverged from the replica")
+    path = save_json("broadcast_fanout", out)
+    print(f"wrote {path}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI run (identical configuration; see docstring)")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -43,7 +43,18 @@ RULES = {
     "fed_round_smoke": {
         "exact": ("n_clients", "delay", "timed_rounds"),
         "true": ("ledger_reconciles",),
-        "rel": ("up_bytes_per_round", "up_bytes_per_round_legacy"),
+        "rel": ("up_bytes_per_round", "up_bytes_per_round_legacy",
+                "down_bytes_per_round"),
+    },
+    # §13 delta-broadcast fan-out: byte fields are threefry-deterministic,
+    # so structural equality holds cross-machine; only throughput floats
+    "broadcast_fanout": {
+        "exact": ("n_subscribers", "timed_rounds", "horizon", "n_params",
+                  "full_resync_bytes"),
+        "true": ("catchup_beats_full_all_lags", "stack_bit_exact",
+                 "ledger_reconciles"),
+        "rel": ("bytes_per_subscriber_per_round",),
+        "ratio_min": ("bytes_saving_vs_full_resync",),
     },
     "dist_flat": {
         "exact": ("n_devices", "n_clients", "n_params"),

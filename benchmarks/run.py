@@ -15,6 +15,8 @@
                                on 8 forced host devices (DESIGN.md §11)
   run_api_overhead    §12      Run/channel driver overhead vs the direct
                                trainer loop (<5% gate, DESIGN.md §12)
+  broadcast_fanout    §13      delta-broadcast fan-out: bytes/subscriber/
+                               round at 10k subscribers (DESIGN.md §13)
 
 ``--smoke`` runs only the fast, training-free benchmarks (what CI runs;
 CI additionally smoke-runs ``fed_round --smoke`` and the fed launcher,
@@ -44,8 +46,8 @@ def main(argv=None):
     args = build_parser().parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (compress_e2e, dist_flat, fed_round,
-                            fig3_sparsity_grid, fig4_stagewise,
+    from benchmarks import (broadcast_fanout, compress_e2e, dist_flat,
+                            fed_round, fig3_sparsity_grid, fig4_stagewise,
                             fig5_convergence, roofline_table,
                             run_api_overhead, table1_rates,
                             table2_accuracy, wire_throughput)
@@ -62,6 +64,7 @@ def main(argv=None):
         "fed_round": fed_round.run,
         "dist_flat": dist_flat.run,
         "run_api_overhead": run_api_overhead.run,
+        "broadcast_fanout": broadcast_fanout.run,
     }
     names = [args.only] if args.only else list(SMOKE) if args.smoke else list(suite)
     failures = []

@@ -618,6 +618,10 @@ class FedWireChannel:
 
     def __post_init__(self) -> None:
         self.ledger = BandwidthLedger()
+        # DeltaLog-backed downstream (server.delta_horizon set): per-client
+        # last-synced round + one CatchupPlanner over the server's log
+        self._last_sync: Dict[int, int] = {}
+        self._planner: Any = None
 
     # ------------------------------------------------------------- protocol
 
@@ -641,6 +645,33 @@ class FedWireChannel:
 
         if staleness is None:
             staleness = np.zeros((len(cohort),), np.int64)
+
+        log = getattr(self.server, "delta_log", None)
+        catchup = None
+        if log is not None:
+            # the broadcast rides the DeltaLog: each cohort member PULLS
+            # the cheapest catch-up (replay / stacked / full) from its
+            # last-synced round up to the current head before training —
+            # one plan/encode per distinct lag class, bytes shared within
+            # the class — instead of paying a fresh per-member broadcast
+            from repro.serve.broadcast import CatchupPlanner
+
+            if self._planner is None or self._planner.log is not log:
+                self._planner = CatchupPlanner(log)
+            plans: Dict[int, Any] = {}
+            down_bytes = 0
+            down_m = down_a = 0.0
+            for cid in cohort:
+                frm = self._last_sync.get(int(cid), -1)
+                plan = plans.get(frm)
+                if plan is None:
+                    plan = plans[frm] = self._planner.plan(frm)
+                down_bytes += plan.nbytes
+                down_m += plan.bits_measured
+                down_a += plan.bits_analytic
+                self._last_sync[int(cid)] = log.head
+            catchup = (down_bytes, down_m, down_a)
+
         result = self.pool.run_cohort(round_idx, cohort, start_params)
 
         uploads, up_bytes = [], 0
@@ -658,6 +689,12 @@ class FedWireChannel:
         bc = self.server.broadcast(round_idx)
 
         recipients = len(cohort)
+        if catchup is None:
+            down_bytes = len(bc.blob) * recipients
+            down_m = bc.bits_measured * recipients
+            down_a = bc.bits_analytic * recipients
+        else:
+            down_bytes, down_m, down_a = catchup
         self.ledger.record(
             RoundRecord(
                 round=round_idx,
@@ -665,9 +702,9 @@ class FedWireChannel:
                 up_bytes=up_bytes,
                 up_bits_measured=info["up_bits_measured"],
                 up_bits_analytic=float(np.sum(result.bits_analytic)),
-                down_bytes=len(bc.blob) * recipients,
-                down_bits_measured=bc.bits_measured * recipients,
-                down_bits_analytic=bc.bits_analytic * recipients,
+                down_bytes=down_bytes,
+                down_bits_measured=down_m,
+                down_bits_analytic=down_a,
                 down_recipients=recipients,
             )
         )
@@ -678,7 +715,7 @@ class FedWireChannel:
             "staleness": [int(s) for s in staleness],
             "weights": [float(w) for w in info["weights"]],
             "up_bytes": up_bytes,
-            "down_bytes": len(bc.blob) * recipients,
+            "down_bytes": down_bytes,
         }
 
     def bits(self, rate: Optional[float] = None,

@@ -114,6 +114,7 @@ class ParameterServer:
     down_sparsity: float = 1.0
     aggregator: str = "mean"
     staleness_beta: float = 0.5
+    delta_horizon: Optional[int] = None  # rounds kept in the DeltaLog
 
     def __post_init__(self) -> None:
         if self.aggregator not in AGGREGATORS:
@@ -143,6 +144,14 @@ class ParameterServer:
         # the clients' replica Ŵ — advanced ONLY by broadcast wire content
         self.estimate: PyTree = f32
         self._wires: Dict[Tuple[Tuple[float, ...], bool], Wire] = {}
+        # optional round-indexed broadcast log (serve/deltalog.py): every
+        # broadcast is appended so receivers lagging k rounds can pull a
+        # stacked catch-up instead of k re-broadcasts or a full resync
+        self.delta_log = None
+        if self.delta_horizon is not None:
+            from repro.serve.deltalog import DeltaLog
+
+            self.delta_log = DeltaLog(f32, horizon=int(self.delta_horizon))
 
     # ------------------------------------------------------------- wiring
 
@@ -237,10 +246,15 @@ class ParameterServer:
         wire = self.down_wire(round_idx)
         blob, bits = wire.pack_with_bits(ctree)
         self.estimate = jax.tree.map(jnp.add, self.estimate, dense)
+        analytic = float(self._down_resolved.total_bits(ctree))
+        if self.delta_log is not None:
+            # the log decodes the blob through the same wire a receiver
+            # uses, so its replica trajectory is the receivers', bit-exact
+            self.delta_log.append(round_idx, blob, wire, bits_analytic=analytic)
         return Broadcast(
             blob=blob,
             dense=dense,
-            bits_analytic=float(self._down_resolved.total_bits(ctree)),
+            bits_analytic=analytic,
             bits_measured=float(bits),
         )
 

@@ -5,6 +5,14 @@ dry-run exercise the same ``serve_step`` at production scale).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
       --batch 4 --prompt-len 64 --new-tokens 32
+
+``--subscribers N`` additionally runs the delta-broadcast fan-out on the
+same architecture's parameters: a DeltaLog-backed server broadcasting
+compressed deltas to N subscribers with heterogeneous sync periods
+(docs/broadcast.md).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
+      --subscribers 10000 --broadcast-rounds 12
 """
 from __future__ import annotations
 
@@ -27,6 +35,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--full-size", action="store_true",
                     help="use the full config (default: reduced smoke variant)")
+    g = ap.add_argument_group("delta broadcast (docs/broadcast.md)")
+    g.add_argument("--subscribers", type=int, default=0,
+                   help="also fan the model's deltas out to N subscribers "
+                        "through a DeltaLog (0 = skip)")
+    g.add_argument("--broadcast-rounds", type=int, default=12,
+                   help="broadcast rounds to simulate")
+    g.add_argument("--broadcast-sparsity", type=float, default=0.02,
+                   help="downstream sparsity of the logged broadcasts")
+    g.add_argument("--delta-horizon", type=int, default=8,
+                   help="rounds the DeltaLog keeps before forcing full resync")
     return ap
 
 
@@ -67,6 +85,25 @@ def main(argv=None):
     print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
           f"({total/dt:.1f} tok/s incl. compile)")
     print("sample token ids:", out[0, :16].tolist())
+
+    if args.subscribers > 0:
+        from repro.serve import simulate_fanout
+
+        m = simulate_fanout(
+            params,
+            n_subscribers=args.subscribers,
+            rounds=args.broadcast_rounds,
+            horizon=args.delta_horizon,
+            down_sparsity=args.broadcast_sparsity,
+            seed=0,
+        )
+        print(
+            f"broadcast: {m['n_subscribers']} subscribers x "
+            f"{m['timed_rounds']} rounds  "
+            f"{m['bytes_per_subscriber_per_round']:.1f} B/sub/round  "
+            f"{m['bytes_saving_vs_full_resync']:.1f}x vs full resync  "
+            f"{m['rounds_per_sec']:.2f} rounds/s"
+        )
     return out
 
 

@@ -336,6 +336,7 @@ class FedRun(Run):
         server = ParameterServer(
             params=params, up_policy=policy, down_sparsity=spec.down_sparsity,
             aggregator=agg, staleness_beta=spec.staleness_beta,
+            delta_horizon=spec.delta_horizon if spec.broadcast_log else None,
         )
         pool = ClientPool(
             model=self.model, optimizer=get_optimizer(self.cfg.local_opt),

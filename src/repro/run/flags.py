@@ -75,6 +75,11 @@ def add_run_flags(ap: argparse.ArgumentParser, **defaults) -> argparse.ArgumentP
                    help="per-client Markov chains instead of IID shards")
     g.add_argument("--skew", type=float, default=2.0,
                    help="non-IID interpolation strength")
+    g.add_argument("--broadcast-log", action="store_true",
+                   help="downstream rides a round-indexed DeltaLog: lagging "
+                        "cohort members pull stacked/replay catch-ups")
+    g.add_argument("--delta-horizon", type=int, default=16,
+                   help="rounds the DeltaLog keeps before forcing full resync")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--history", default=None, help="metrics JSON path")
     ap.add_argument("--spec-json", default=None,
@@ -157,4 +162,6 @@ def spec_from_args(args: argparse.Namespace,
         staleness_beta=args.staleness_beta,
         non_iid=args.non_iid,
         skew=args.skew,
+        broadcast_log=args.broadcast_log,
+        delta_horizon=args.delta_horizon,
     )

@@ -64,6 +64,8 @@ class RunSpec:
     staleness_beta: float = 0.5
     non_iid: bool = False
     skew: float = 2.0
+    broadcast_log: bool = False  # downstream rides a serve/ DeltaLog
+    delta_horizon: int = 16  # rounds the DeltaLog keeps for catch-ups
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:

@@ -1,3 +1,25 @@
+from repro.serve.broadcast import (
+    CatchupPlan,
+    CatchupPlanner,
+    SubscriberPool,
+    simulate_fanout,
+)
+from repro.serve.deltalog import (
+    CatchupMessage,
+    DeltaLog,
+    apply_catchup,
+    apply_catchup_flat,
+)
 from repro.serve.engine import ServeEngine
 
-__all__ = ["ServeEngine"]
+__all__ = [
+    "CatchupMessage",
+    "CatchupPlan",
+    "CatchupPlanner",
+    "DeltaLog",
+    "ServeEngine",
+    "SubscriberPool",
+    "apply_catchup",
+    "apply_catchup_flat",
+    "simulate_fanout",
+]

@@ -1,0 +1,378 @@
+"""Delta-broadcast fan-out: one encode per round, shared by 10k+ subscribers.
+
+Three layers over :class:`~repro.serve.deltalog.DeltaLog` (DESIGN.md §13):
+
+  :class:`CatchupPlanner`   prices the three catch-up forms for a receiver
+                            lagging k rounds — replay (the k stored SBW1
+                            blobs), stacked (one SBD1 union message), full
+                            (dense resync) — and picks the fewest bytes;
+                            lag past the horizon forces full.
+  :class:`SubscriberPool`   10k–100k simulated subscribers as bulk (S,)
+                            arrays (the tiled per-member-state pattern of
+                            ``fed/clients.py`` at fan-out scale).  Each
+                            round costs one plan/encode per DISTINCT lag
+                            class — every subscriber in a class shares the
+                            same bytes — and the per-subscriber state
+                            advance is a single jitted gather/scatter.
+  :func:`simulate_fanout`   drives the production broadcast path
+                            (:class:`~repro.fed.server.ParameterServer`
+                            with a log attached) with synthetic updates
+                            and fans it out; ``launch/serve.py`` and
+                            ``benchmarks/broadcast_fanout.py`` both call
+                            this.
+
+Every chosen plan is metered through the core
+:class:`~repro.core.ledger.BandwidthLedger` (measured AND analytic bits),
+so ``reconcile()`` holds on the broadcast path exactly as it does for the
+upstream wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ledger import BandwidthLedger, RoundRecord
+from repro.serve.deltalog import DeltaLog, apply_catchup_flat
+
+PyTree = Any
+
+
+class CatchupPlan(NamedTuple):
+    """One receiver class's chosen catch-up: what crosses and what it costs."""
+
+    kind: str  # "none" | "replay" | "stacked" | "full"
+    from_round: int
+    to_round: int
+    nbytes: int
+    bits_measured: float
+    bits_analytic: float
+    blobs: Tuple[bytes, ...]  # k SBW1 blobs (replay) or one SBD1 message
+    candidates: Tuple[Tuple[str, int], ...]  # every (kind, nbytes) priced
+
+
+@dataclasses.dataclass(eq=False)
+class CatchupPlanner:
+    """Min-byte catch-up choice against one :class:`DeltaLog`.
+
+    The full-resync candidate is priced arithmetically
+    (:meth:`DeltaLog.full_nbytes`) and only materialized when chosen;
+    replay is priced off the stored blob lengths; stacked must be encoded
+    to be priced (the union's density is data-dependent), and the encoding
+    IS the payload when it wins.
+    """
+
+    log: DeltaLog
+
+    def plan(self, from_round: int) -> CatchupPlan:
+        head = self.log.head
+        if from_round >= head:
+            return CatchupPlan("none", from_round, head, 0, 0.0, 0.0, (), ())
+        costs: Dict[str, int] = {"full": self.log.full_nbytes()}
+        stacked = None
+        if self.log.can_stack(from_round):
+            ents = self.log.entries_since(from_round)
+            costs["replay"] = sum(e.nbytes for e in ents)
+            stacked = self.log.encode_stacked(from_round)
+            costs["stacked"] = stacked.nbytes
+        order = ("stacked", "replay", "full")  # tie-break: fewest messages
+        kind = min(costs, key=lambda c: (costs[c], order.index(c)))
+        candidates = tuple(sorted(costs.items()))
+        if kind == "replay":
+            return CatchupPlan(
+                "replay", from_round, head, costs["replay"],
+                sum(e.bits_measured for e in ents),
+                sum(e.bits_analytic for e in ents),
+                tuple(e.blob for e in ents), candidates,
+            )
+        if kind == "stacked":
+            return CatchupPlan(
+                "stacked", from_round, head, stacked.nbytes,
+                stacked.bits_measured, stacked.bits_analytic,
+                (stacked.blob,), candidates,
+            )
+        full = self.log.encode_full()
+        return CatchupPlan(
+            "full", from_round, head, full.nbytes,
+            full.bits_measured, full.bits_analytic,
+            (full.blob,), candidates,
+        )
+
+
+@dataclasses.dataclass(eq=False)
+class SubscriberPool:
+    """Per-subscriber lag state at fan-out scale.
+
+    Subscriber s syncs at rounds where ``round % period[s] == phase[s]``
+    (period from ``periods`` round-robin, phase ``s % period``) — a
+    deterministic wake pattern that produces a stable spectrum of lag
+    classes.  State is three (S,) arrays; the per-round advance is one
+    jitted call, so 100k subscribers are a ~400 KB working set.
+
+    ``verify_classes`` > 0 maintains a real replica for the first V
+    (period, phase) classes and applies each chosen plan to it, asserting
+    bit-identity with the log's replica — the bit-exactness contract
+    checked live at fan-out scale (per class, not per subscriber).
+    """
+
+    log: DeltaLog
+    n_subscribers: int
+    periods: Tuple[int, ...] = (1,)
+    verify_classes: int = 0
+
+    def __post_init__(self) -> None:
+        if self.n_subscribers < 1:
+            raise ValueError("need at least one subscriber")
+        if not self.periods or any(int(p) < 1 for p in self.periods):
+            raise ValueError(f"periods must be >= 1, got {self.periods}")
+        self.periods = tuple(int(p) for p in self.periods)
+        self.planner = CatchupPlanner(self.log)
+        self.ledger = BandwidthLedger()
+        s = np.arange(self.n_subscribers)
+        period = np.asarray(
+            [self.periods[i % len(self.periods)] for i in range(self.n_subscribers)],
+            np.int32,
+        )
+        self._period = jnp.asarray(period)
+        self._phase = jnp.asarray((s % period).astype(np.int32))
+        start = int(self.log.head)
+        self._synced = jnp.full((self.n_subscribers,), start, jnp.int32)
+        # exact byte totals live in the ledger (host ints); the per-
+        # subscriber counter is for distribution stats at int32 range
+        self._bytes = jnp.zeros((self.n_subscribers,), jnp.int32)
+        self._syncs = jnp.zeros((self.n_subscribers,), jnp.int32)
+        self.down_bytes_full_equiv = 0  # if every sync were a full resync
+        self._verify: Dict[Tuple[int, int], dict] = {}
+        classes = sorted({(int(p), int(ph)) for p, ph in
+                          zip(period.tolist(), (s % period).tolist())})
+        for p, ph in classes[: max(0, int(self.verify_classes))]:
+            self._verify[(p, ph)] = {
+                "flats": self.log.replica_flat(),
+                "synced": start,
+            }
+        self._verify_failures = 0
+        self.verified_syncs = 0
+
+    # ------------------------------------------------------------- advance
+
+    @partial(jax.jit, static_argnames=("self",))
+    def _advance(self, synced, bytes_down, syncs, round_idx, byte_table):
+        """Tiled bulk state update: who wakes, what their class's plan
+        costs (lag-indexed table built host-side), advance to head."""
+        awake = (round_idx % self._period) == self._phase
+        lag = jnp.clip(round_idx - synced, 0, byte_table.shape[0] - 1)
+        add = jnp.where(awake, byte_table[lag], 0)
+        return (
+            jnp.where(awake, round_idx, synced),
+            bytes_down + add,
+            syncs + awake.astype(jnp.int32),
+        )
+
+    def sync_round(self, round_idx: int) -> dict:
+        """Fan this round out: one plan per distinct lag class, bytes
+        shared across the class, everything metered into the ledger.
+
+        Call AFTER the round's broadcast was appended (head == round_idx).
+        """
+        if round_idx != self.log.head:
+            raise ValueError(
+                f"sync_round({round_idx}) but log head is {self.log.head}; "
+                "append the round's broadcast first"
+            )
+        synced = np.asarray(self._synced)
+        period = np.asarray(self._period)
+        phase = np.asarray(self._phase)
+        awake = (round_idx % period) == phase
+        n_awake = int(awake.sum())
+        uniq, counts = np.unique(synced[awake], return_counts=True)
+
+        plans: Dict[int, CatchupPlan] = {}
+        down_bytes = 0
+        bits_m = bits_a = 0.0
+        max_lag = int(round_idx - uniq.min()) if uniq.size else 0
+        table = np.zeros((max_lag + 1,), np.int64)
+        for frm, cnt in zip(uniq.tolist(), counts.tolist()):
+            plan = self.planner.plan(int(frm))
+            plans[int(frm)] = plan
+            down_bytes += plan.nbytes * int(cnt)
+            bits_m += plan.bits_measured * int(cnt)
+            bits_a += plan.bits_analytic * int(cnt)
+            table[round_idx - int(frm)] = plan.nbytes
+        self.down_bytes_full_equiv += n_awake * self.log.full_nbytes()
+
+        self._synced, self._bytes, self._syncs = self._advance(
+            self._synced, self._bytes, self._syncs,
+            jnp.int32(round_idx), jnp.asarray(np.clip(table, 0, 2**31 - 1),
+                                              jnp.int32),
+        )
+        self.ledger.record(RoundRecord(
+            round=round_idx, cohort=(), up_bytes=0,
+            up_bits_measured=0.0, up_bits_analytic=0.0,
+            down_bytes=int(down_bytes), down_bits_measured=bits_m,
+            down_bits_analytic=bits_a, down_recipients=n_awake,
+        ))
+        self._verify_round(round_idx, plans)
+        return {
+            "round": round_idx,
+            "awake": n_awake,
+            "classes": {round_idx - f: p.kind for f, p in plans.items()},
+            "down_bytes": int(down_bytes),
+        }
+
+    # ---------------------------------------------------------- verification
+
+    def _apply_plan(self, flats: List[np.ndarray], plan: CatchupPlan):
+        if plan.kind == "replay":
+            for e in self.log.entries_since(plan.from_round):
+                flats = [f + d for f, d in zip(flats, e.dense)]
+            return flats
+        if plan.kind in ("stacked", "full"):
+            out, _, _ = apply_catchup_flat(flats, plan.blobs[0])
+            return out
+        return flats
+
+    def _verify_round(self, round_idx: int, plans: Dict[int, CatchupPlan]):
+        for (p, ph), state in self._verify.items():
+            if round_idx % p != ph:
+                continue
+            plan = plans.get(state["synced"])
+            if plan is None:  # class empty this round (shouldn't happen)
+                continue
+            state["flats"] = self._apply_plan(state["flats"], plan)
+            state["synced"] = round_idx
+            self.verified_syncs += 1
+            for got, want in zip(state["flats"], self.log._replica):
+                if not np.array_equal(
+                    got.view(np.uint32), want.view(np.uint32)
+                ):
+                    self._verify_failures += 1
+                    break
+
+    @property
+    def verify_ok(self) -> bool:
+        """True iff every verified class sync was bit-identical to the
+        log replica (trivially True with verify_classes=0)."""
+        return self._verify_failures == 0
+
+    # -------------------------------------------------------------- queries
+
+    @property
+    def synced_round(self) -> np.ndarray:
+        return np.asarray(self._synced)
+
+    @property
+    def bytes_down(self) -> np.ndarray:
+        return np.asarray(self._bytes)
+
+    def totals(self) -> dict:
+        t = self.ledger.totals()
+        rounds = max(1, t["rounds"])
+        t["bytes_per_subscriber_per_round"] = (
+            t["down_bytes"] / (self.n_subscribers * rounds)
+        )
+        t["down_bytes_full_equiv"] = self.down_bytes_full_equiv
+        t["bytes_saving_vs_full_resync"] = (
+            self.down_bytes_full_equiv / max(1, t["down_bytes"])
+        )
+        t["syncs"] = int(np.asarray(self._syncs).sum())
+        return t
+
+
+# ------------------------------------------------------------- simulation
+
+
+def simulate_fanout(
+    params: PyTree,
+    *,
+    n_subscribers: int,
+    rounds: int,
+    horizon: int = 8,
+    down_sparsity: float = 0.02,
+    periods: Tuple[int, ...] = (1, 2, 4, 8),
+    seed: int = 0,
+    update_scale: float = 1e-2,
+    verify_classes: int = 3,
+    policy: Optional[Any] = None,
+) -> dict:
+    """Drive the PRODUCTION broadcast path at fan-out scale.
+
+    Each round applies a synthetic deterministic update to a
+    :class:`~repro.fed.server.ParameterServer` carrying a
+    :class:`DeltaLog`, broadcasts (one encode), and fans the log out to
+    ``n_subscribers`` through a :class:`SubscriberPool`.  Returns the
+    byte/throughput metrics ``benchmarks/broadcast_fanout.py`` gates.
+    """
+    from repro.core.api import CompressionPolicy, PolicyRule
+    from repro.core.codec import make_codec
+    from repro.core.policy import DENSE_SMALL_PATTERN
+    from repro.fed.server import ParameterServer
+
+    if policy is None:
+        policy = CompressionPolicy(
+            default=make_codec("sbc"),
+            rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),),
+            name="sbc+dense-small",
+        )
+    f32 = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
+    server = ParameterServer(
+        params=f32, up_policy=policy, down_sparsity=down_sparsity,
+        delta_horizon=horizon,
+    )
+    pool = SubscriberPool(
+        log=server.delta_log, n_subscribers=n_subscribers,
+        periods=periods, verify_classes=verify_classes,
+    )
+    leaves, treedef = jax.tree.flatten(server.params)
+    rng = jax.random.PRNGKey(seed)
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        rng, sub = jax.random.split(rng)
+        keys = jax.random.split(sub, len(leaves))
+        leaves = [
+            x + update_scale * jax.random.normal(k, np.shape(x), x.dtype)
+            for x, k in zip(leaves, keys)
+        ]
+        server.params = jax.tree.unflatten(treedef, leaves)
+        server.broadcast(r)
+        pool.sync_round(r)
+    dt = time.perf_counter() - t0
+
+    log = server.delta_log
+    planner = pool.planner
+    full_cost = log.full_nbytes()
+    lag_report = {}
+    beats_full = True
+    for lag in range(1, min(horizon, log.head + 1) + 1):
+        plan = planner.plan(log.head - lag)
+        lag_report[str(lag)] = {
+            "kind": plan.kind,
+            "nbytes": plan.nbytes,
+            "candidates": dict(plan.candidates),
+        }
+        beats_full &= plan.nbytes < full_cost
+    pool.ledger.reconcile(rel=0.1)
+
+    t = pool.totals()
+    return {
+        "n_subscribers": n_subscribers,
+        "timed_rounds": rounds,
+        "horizon": horizon,
+        "n_params": log.n_params,
+        "down_sparsity": down_sparsity,
+        "periods": list(periods),
+        "bytes_per_subscriber_per_round": t["bytes_per_subscriber_per_round"],
+        "full_resync_bytes": full_cost,
+        "bytes_saving_vs_full_resync": t["bytes_saving_vs_full_resync"],
+        "down_bytes_total": t["down_bytes"],
+        "catchup_beats_full_all_lags": bool(beats_full),
+        "stack_bit_exact": bool(pool.verify_ok and pool.verified_syncs > 0),
+        "ledger_reconciles": True,  # reconcile(rel=0.1) raised otherwise
+        "plan_by_lag": lag_report,
+        "rounds_per_sec": rounds / dt,
+        "subscriber_syncs_per_sec": t["syncs"] / dt,
+    }

@@ -62,7 +62,10 @@ class ServeEngine:
 
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         toks = []
-        tok = pick(logits, rng)
+        # split BEFORE the first sample: consuming the caller's key raw
+        # would correlate the first decode step with any other use of it
+        rng, r = jax.random.split(rng)
+        tok = pick(logits, r)
         toks.append(tok)
         for i in range(1, max_new_tokens):
             rng, r = jax.random.split(rng)

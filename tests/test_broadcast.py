@@ -1,0 +1,156 @@
+"""Delta-broadcast subsystem: SubscriberPool fan-out + fed-backend wiring.
+
+Covers the §13 serving layers end-to-end: the per-lag-class plan/encode
+sharing, the live bit-exactness verification, the BandwidthLedger
+reconciliation on the broadcast path, the planner's byte-minimizing
+choice (including the horizon-evicted full fallback), and the RunSpec /
+FedWireChannel integration that lets the fed backend's downstream ride
+the log instead of per-client re-compression.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import CompressionPolicy
+from repro.fed.server import ParameterServer
+from repro.serve.broadcast import CatchupPlanner, SubscriberPool, simulate_fanout
+
+
+def small_server(horizon=4, down_sparsity=0.05):
+    rng = np.random.default_rng(42)
+    params = {
+        "w": jnp.asarray(rng.normal(size=(2000,)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(50,)), jnp.float32),
+    }
+    return ParameterServer(
+        params=params,
+        up_policy=CompressionPolicy.single("sbc"),
+        down_sparsity=down_sparsity,
+        delta_horizon=horizon,
+    )
+
+
+def drive(server, pool, rounds, scale=1e-2, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    infos = []
+    for r in range(int(server.delta_log.head) + 1,
+                   int(server.delta_log.head) + 1 + rounds):
+        rng, sub = jax.random.split(rng)
+        keys = jax.random.split(sub, 2)
+        leaves, treedef = jax.tree.flatten(server.params)
+        leaves = [
+            x + scale * jax.random.normal(k, np.shape(x), x.dtype)
+            for x, k in zip(leaves, keys)
+        ]
+        server.params = jax.tree.unflatten(treedef, leaves)
+        server.broadcast(r)
+        infos.append(pool.sync_round(r))
+    return infos
+
+
+class TestSubscriberPool:
+    def test_fanout_reconciles_and_verifies(self):
+        server = small_server(horizon=4)
+        pool = SubscriberPool(
+            log=server.delta_log, n_subscribers=500,
+            periods=(1, 2, 6), verify_classes=4,
+        )
+        infos = drive(server, pool, rounds=12)
+        pool.ledger.reconcile(rel=0.1)
+        assert pool.verify_ok and pool.verified_syncs > 0
+        # period-1 subscribers woke every round; period-6 only twice
+        assert sum(i["awake"] for i in infos) > 12 * 500 / 3
+        # lag-6 syncs exceeded horizon 4 — the evicted window forces full
+        kinds = {k for i in infos for k in i["classes"].values()}
+        assert "full" in kinds
+        assert kinds & {"replay", "stacked"}  # in-horizon lags stay cheap
+
+    def test_chosen_plan_beats_full_within_horizon(self):
+        server = small_server(horizon=6)
+        pool = SubscriberPool(log=server.delta_log, n_subscribers=10)
+        drive(server, pool, rounds=8)
+        planner = CatchupPlanner(server.delta_log)
+        full = server.delta_log.full_nbytes()
+        head = server.delta_log.head
+        for lag in range(1, 7):
+            plan = planner.plan(head - lag)
+            assert plan.nbytes < full, f"lag {lag}: {plan.candidates}"
+
+    def test_round_ordering_contract(self):
+        server = small_server()
+        pool = SubscriberPool(log=server.delta_log, n_subscribers=5)
+        with pytest.raises(ValueError, match="append"):
+            pool.sync_round(0)  # broadcast 0 not appended yet
+
+    def test_pool_validation(self):
+        server = small_server()
+        with pytest.raises(ValueError, match="subscriber"):
+            SubscriberPool(log=server.delta_log, n_subscribers=0)
+        with pytest.raises(ValueError, match="periods"):
+            SubscriberPool(log=server.delta_log, n_subscribers=4, periods=(0,))
+
+    def test_simulate_fanout_metrics(self):
+        rng = np.random.default_rng(1)
+        params = {
+            "w": jnp.asarray(rng.normal(size=(3000,)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(40,)), jnp.float32),
+        }
+        m = simulate_fanout(params, n_subscribers=300, rounds=8, horizon=4,
+                            down_sparsity=0.02, periods=(1, 2, 4), seed=0)
+        assert m["ledger_reconciles"] and m["stack_bit_exact"]
+        assert m["catchup_beats_full_all_lags"]
+        assert m["bytes_saving_vs_full_resync"] > 1.0
+        assert m["bytes_per_subscriber_per_round"] > 0
+        assert set(m["plan_by_lag"]) == {"1", "2", "3", "4"}
+
+
+class TestFedIntegration:
+    def test_broadcast_log_rides_the_channel(self):
+        """The fed backend with --broadcast-log meters per-member catch-up
+        plans instead of a per-member re-broadcast."""
+        from repro.run.build import build_run
+        from repro.run.spec import RunSpec
+
+        spec = RunSpec(preset="lenet5", backend="fed", rounds=3, clients=4,
+                       cohort=2, batch=4, seq_len=16, sparsity=0.01,
+                       down_sparsity=0.05, broadcast_log=True, delta_horizon=4)
+        run = build_run(spec)
+        state = run.init()
+        infos = [run.step(state, r)[1] for r in range(3)]
+        # round 0: head is -1 before the first broadcast — nothing to pull
+        assert infos[0]["down_bytes"] == 0
+        assert infos[1]["down_bytes"] > 0
+        log = run.channel.server.delta_log
+        assert log is not None and log.head == 2
+        recs = run.channel.ledger.records
+        assert all(r.down_recipients == 2 for r in recs)
+        # downstream measured-vs-analytic parity on the catch-up path
+        for r in recs:
+            if r.down_bits_analytic > 0:
+                rel = abs(r.down_bits_measured - r.down_bits_analytic)
+                assert rel <= 0.15 * r.down_bits_analytic
+
+    def test_log_disabled_by_default(self):
+        from repro.run.build import build_run
+        from repro.run.spec import RunSpec
+
+        spec = RunSpec(preset="lenet5", backend="fed", rounds=1, clients=2,
+                       batch=4, seq_len=16)
+        run = build_run(spec)
+        run.init()
+        assert run.channel.server.delta_log is None
+
+    def test_spec_json_roundtrip_and_flags(self):
+        from repro.run.flags import build_parser, spec_from_args
+        from repro.run.spec import RunSpec
+
+        spec = RunSpec(backend="fed", broadcast_log=True, delta_horizon=9)
+        back = RunSpec.from_json(spec.to_json())
+        assert back.broadcast_log is True and back.delta_horizon == 9
+        args = build_parser().parse_args(
+            ["--backend", "fed", "--broadcast-log", "--delta-horizon", "7"]
+        )
+        got = spec_from_args(args)
+        assert got.broadcast_log is True and got.delta_horizon == 7
+        assert spec_from_args(build_parser().parse_args([])).broadcast_log is False

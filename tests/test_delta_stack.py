@@ -1,0 +1,276 @@
+"""Stacked catch-up exactness: composing k SBW1 deltas == applying them
+sequentially, to the BIT (DESIGN.md §13).
+
+The contract under test: for any window (a, b] of logged broadcasts, the
+one SBD1 message ``DeltaLog.encode_stacked(a)`` moves a replica at round a
+to the byte-identical state that applying the k stored broadcasts in
+order produces — across sparse, dense, and skip leaf paths, including the
+residual-carrying codecs and the ±0.0 sign-bit edge cases.  Buffers are
+fuzzed with the same truncation/corruption harness as
+``tests/test_wire_fuzz.py``: malformed SBD1 bytes must raise a clean
+``ValueError``, never another exception.
+"""
+import random
+import struct
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.codec import make_codec
+from repro.core.policy import CompressionPolicy, PolicyRule
+from repro.core.wire import wire_for
+from repro.serve.broadcast import CatchupPlanner
+from repro.serve.deltalog import (
+    CATCHUP_MAGIC,
+    DeltaLog,
+    apply_catchup,
+    apply_catchup_flat,
+)
+
+CODECS = ["sbc", "topk", "signsgd", "qsgd", "none"]
+
+
+def rate_of(name: str) -> float:
+    return 0.01 if name in ("sbc", "topk") else 1.0
+
+
+def drive_log(name: str, p: float, rounds: int = 6, horizon: int = 16):
+    """Log ``rounds`` real compressed broadcasts; returns (log, snapshots)
+    where snapshots[r] is the replica AFTER round r (r=-1: initial)."""
+    comp = api.make_compressor(name)
+    key = jax.random.PRNGKey(11)
+    params = {
+        "w": jax.random.normal(key, (3000,)) * 0.01,
+        "b": jax.random.normal(jax.random.PRNGKey(12), (61,)),
+    }
+    log = DeltaLog(params, horizon=horizon)
+    state = comp.init_state(params)
+    wire = wire_for(comp.resolve(params), params, p)
+    snaps = {-1: log.replica_flat()}
+    for r in range(rounds):
+        key, k1, k2 = jax.random.split(key, 3)
+        delta = {
+            "w": 0.01 * jax.random.normal(k1, (3000,)),
+            "b": 0.1 * jax.random.normal(k2, (61,)),
+        }
+        ctree, _, state = comp.compress(delta, state, p)
+        log.append(r, wire.pack(jax.tree.map(np.asarray, ctree)), wire)
+        snaps[r] = log.replica_flat()
+    return log, snaps
+
+
+def assert_bits_equal(got, want, ctx=""):
+    for i, (a, b) in enumerate(zip(got, want)):
+        np.testing.assert_array_equal(
+            a.view(np.uint32), b.view(np.uint32),
+            err_msg=f"leaf {i} not bit-identical {ctx}",
+        )
+
+
+@pytest.mark.parametrize("name", CODECS)
+def test_stacked_equals_sequential_every_lag(name):
+    """From every held round: stacked-apply == sequential replay == the
+    log's replica, compared on raw u32 bit patterns."""
+    log, snaps = drive_log(name, rate_of(name))
+    final = log.replica_flat()
+    for frm in range(-1, log.head):
+        seq = [f.copy() for f in snaps[frm]]
+        for e in log.entries_since(frm):
+            seq = [f + d for f, d in zip(seq, e.dense)]
+        msg = log.encode_stacked(frm)
+        stk, f0, t0 = apply_catchup_flat(snaps[frm], msg.blob)
+        assert (f0, t0) == (frm, log.head)
+        assert_bits_equal(stk, seq, f"(stacked vs sequential, from {frm})")
+        assert_bits_equal(stk, final, f"(stacked vs replica, from {frm})")
+
+
+def test_skip_and_sparse_leaves_compose():
+    """A policy mixing a skipped leaf with a sparse one: the skipped leaf
+    rides MODE_EMPTY yet still normalizes like a sequential receiver."""
+    policy = CompressionPolicy(
+        default=make_codec("sbc"),
+        rules=(PolicyRule("b", codec="skip"),),
+        name="sbc+skip-b",
+    )
+    params = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (2000,)) * 0.01,
+        "b": np.float32([1.0, -0.0, 2.0, 0.0, -3.0]),
+    }
+    resolved = policy.resolve(params)
+    state = resolved.init_state(params)
+    log = DeltaLog(params, horizon=8)
+    wire = wire_for(resolved, params, 0.02)
+    snap0 = log.replica_flat()
+    key = jax.random.PRNGKey(5)
+    for r in range(4):
+        key, k1 = jax.random.split(key)
+        delta = {
+            "w": 0.01 * jax.random.normal(k1, (2000,)),
+            "b": np.float32([0.5] * 5),  # never transmitted
+        }
+        ctree, _, state = resolved.compress(
+            delta, state, resolved.rates(0.02, r)
+        )
+        log.append(r, wire.pack(jax.tree.map(np.asarray, ctree)), wire)
+    seq = [f.copy() for f in snap0]
+    for e in log.entries_since(-1):
+        seq = [f + d for f, d in zip(seq, e.dense)]
+    msg = log.encode_stacked(-1)
+    stk, _, _ = apply_catchup_flat(snap0, msg.blob)
+    assert_bits_equal(stk, seq)
+    assert_bits_equal(stk, log.replica_flat())
+    # the skipped leaf kept its values — but its −0.0 flipped to +0.0,
+    # exactly as k dense adds of 0.0 flip it on a sequential receiver
+    b = stk[0] if stk[0].size == 5 else stk[1]
+    assert b[0] == 1.0 and b[2] == 2.0
+    assert not np.signbit(b[1])
+
+
+def test_minus_zero_transmitted_position_flips_sign():
+    """A transmitted +0.0 landing on a stored −0.0 flips the sign bit while
+    staying 'zero' — the union MUST come from the transmitted index sets
+    (``nonzero(dense)`` would drop the position and keep −0.0)."""
+    from repro.core.stages import LeafCompressed
+
+    params = {"w": np.float32([0, 0, -0.0, 0, 0, -0.0, 0, 0])}
+    assert np.signbit(params["w"][2]) and np.signbit(params["w"][5])
+    comp = api.make_compressor("topk")
+    wire = wire_for(comp.resolve(params), params, 0.125)  # k_for(8,.125)=1
+    log = DeltaLog(params, horizon=4)
+    snap0 = log.replica_flat()
+    ctree = {
+        "w": LeafCompressed(
+            idx=np.int32([5]),
+            vals=np.float32([0.0]),  # transmitted value: +0.0
+            mean=np.zeros((), np.float32),
+            dense=np.zeros((0,), np.float32),
+            nbits=np.zeros((), np.float32),
+        )
+    }
+    log.append(0, wire.pack(ctree), wire)
+    # sequential: −0.0 + 0.0 = +0.0 at BOTH the transmitted position and
+    # the untransmitted one (the dense add covers every position)
+    assert not np.signbit(log._replica[0][5])
+    assert not np.signbit(log._replica[0][2])
+    msg = log.encode_stacked(-1)
+    stk, _, _ = apply_catchup_flat(snap0, msg.blob)
+    assert_bits_equal(stk, log.replica_flat())
+
+
+def test_residual_codec_window_interior():
+    """sbc carries a residual: values transmitted late in the window
+    depend on what earlier rounds dropped.  Stacking from a mid-window
+    round must still reproduce the replica exactly."""
+    log, snaps = drive_log("sbc", 0.01, rounds=8)
+    for frm in (2, 4, 6):
+        msg = log.encode_stacked(frm)
+        stk, _, _ = apply_catchup_flat(snaps[frm], msg.blob)
+        assert_bits_equal(stk, log.replica_flat(), f"(from {frm})")
+
+
+def test_stacked_wins_for_dense_broadcasts():
+    """Dense rounds make replay pay 4N bytes per round; the stacked union
+    collapses the window to one dense message (== one resync)."""
+    log, snaps = drive_log("none", 1.0, rounds=5)
+    planner = CatchupPlanner(log)
+    plan = planner.plan(log.head - 3)
+    costs = dict(plan.candidates)
+    assert plan.kind == "stacked"
+    assert plan.nbytes < costs["replay"]
+    stk, _, _ = apply_catchup_flat(snaps[log.head - 3], plan.blobs[0])
+    assert_bits_equal(stk, log.replica_flat())
+
+
+def test_full_resync_applies_from_anywhere():
+    """After eviction the planner falls back to full, which restores even
+    a garbage replica to the exact head state."""
+    log, _ = drive_log("sbc", 0.01, rounds=8, horizon=3)
+    assert log.oldest == 5  # holds the horizon's 3 rounds: 5, 6, 7
+    planner = CatchupPlanner(log)
+    plan = planner.plan(0)  # lag 7 > horizon — window evicted
+    assert plan.kind == "full"
+    garbage = [np.full((3000,), 9.9, np.float32),
+               np.full((61,), -7.7, np.float32)]
+    leaves = garbage if garbage[0].size == log._replica[0].size else garbage[::-1]
+    got, frm, to = apply_catchup_flat(leaves, plan.blobs[0])
+    assert to == log.head
+    assert_bits_equal(got, log.replica_flat())
+
+
+def test_apply_catchup_pytree_roundtrip():
+    log, snaps = drive_log("topk", 0.01, rounds=4)
+    replica = log.treedef.unflatten(
+        [f.copy() for f in snaps[1]]
+    )
+    msg = log.encode_stacked(1)
+    tree, frm, to = apply_catchup(replica, msg.blob)
+    assert (frm, to) == (1, log.head)
+    got = [np.asarray(x).reshape(-1) for x in jax.tree.leaves(tree)]
+    assert_bits_equal(got, log.replica_flat())
+
+
+# ------------------------------------------------------------- fuzz/harden
+
+
+def _stacked_blob():
+    log, snaps = drive_log("sbc", 0.01, rounds=5)
+    return log, snaps[-1], log.encode_stacked(-1).blob
+
+
+def test_truncation_sweep():
+    """Every prefix either applies or raises ValueError (never IndexError,
+    struct.error, or a giant allocation)."""
+    log, flats, blob = _stacked_blob()
+    step = max(1, len(blob) // 80)
+    for cut in list(range(0, len(blob), step)) + [len(blob) - 1]:
+        try:
+            apply_catchup_flat(flats, blob[:cut])
+        except ValueError:
+            pass
+
+
+def test_random_corruption():
+    log, flats, blob = _stacked_blob()
+    rng = random.Random(99)
+    for _ in range(200):
+        b = bytearray(blob)
+        for _ in range(rng.randint(1, 8)):
+            b[rng.randrange(len(b))] = rng.randrange(256)
+        try:
+            apply_catchup_flat(flats, bytes(b))
+        except ValueError:
+            pass
+
+
+def test_bad_magic_kind_and_leaf_count():
+    log, flats, blob = _stacked_blob()
+    with pytest.raises(ValueError, match="magic"):
+        apply_catchup_flat(flats, b"XXXX" + blob[4:])
+    b = bytearray(blob)
+    b[4] = 77  # kind byte
+    with pytest.raises(ValueError, match="kind"):
+        apply_catchup_flat(flats, bytes(b))
+    b = bytearray(blob)
+    struct.pack_into("<I", b, 4 + 9, 1000)  # n_leaves field
+    with pytest.raises(ValueError, match="leaves"):
+        apply_catchup_flat(flats, bytes(b))
+    with pytest.raises(ValueError, match="truncated"):
+        apply_catchup_flat(flats, blob[:8])
+    assert blob[:4] == CATCHUP_MAGIC
+
+
+def test_log_contract_errors():
+    params = {"w": np.zeros((64,), np.float32)}
+    with pytest.raises(ValueError, match="horizon"):
+        DeltaLog(params, horizon=0)
+    log = DeltaLog(params, horizon=4)
+    with pytest.raises(ValueError, match="contiguous"):
+        comp = api.make_compressor("topk")
+        wire = wire_for(comp.resolve(params), params, 0.1)
+        state = comp.init_state(params)
+        ctree, _, _ = comp.compress({"w": np.ones((64,), np.float32)}, state, 0.1)
+        log.append(3, wire.pack(jax.tree.map(np.asarray, ctree)), wire)
+    with pytest.raises(ValueError, match="stack"):
+        log.encode_stacked(-1)  # nothing appended yet

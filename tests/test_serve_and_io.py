@@ -59,6 +59,26 @@ class TestServeEngine:
         assert out.shape == (3, 5)
         assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
 
+    def test_first_token_uses_split_key(self, rng):
+        """The first sample must consume a SPLIT of the caller's key, not
+        the key itself — reusing it raw would correlate the first decode
+        step with any other use of the same key."""
+        cfg = tiny_decoder()
+        model = build_model(cfg)
+        params = model.init(rng)
+        engine = ServeEngine(model)
+        batch = {"tokens": jnp.ones((4, 8), jnp.int32)}
+        key = jax.random.PRNGKey(123)
+        out = engine.generate(
+            params, batch, max_new_tokens=1, temperature=1.0, rng=key
+        )
+        logits, _ = engine.prefill(params, batch)
+        _, r = jax.random.split(key)
+        want = jax.random.categorical(r, logits[:, -1, :] / 1.0)
+        np.testing.assert_array_equal(np.asarray(out[:, 0]), np.asarray(want))
+        raw = jax.random.categorical(key, logits[:, -1, :] / 1.0)
+        assert not np.array_equal(np.asarray(out[:, 0]), np.asarray(raw))
+
 
 class TestCheckpoint:
     def test_roundtrip_with_bf16(self, tmp_path, rng):
