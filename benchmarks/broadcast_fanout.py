@@ -27,8 +27,9 @@ import argparse
 
 import jax
 
-from benchmarks.common import save_json
+from benchmarks.common import save_json, save_telemetry
 from benchmarks.fed_round import _setup
+from repro.obs import make_telemetry, render_table
 from repro.serve.broadcast import simulate_fanout
 
 N_SUBSCRIBERS = 10_000
@@ -43,6 +44,7 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
     # identical in every mode (see docstring)
     _, model, _, policy = _setup()
     params = model.init(jax.random.PRNGKey(0))
+    telemetry = make_telemetry()
     out = simulate_fanout(
         params,
         n_subscribers=N_SUBSCRIBERS,
@@ -53,6 +55,7 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
         seed=0,
         verify_classes=3,
         policy=policy,
+        telemetry=telemetry,
     )
     print(f"{out['n_subscribers']} subscribers x {out['timed_rounds']} rounds "
           f"(horizon {out['horizon']}, p_down={out['down_sparsity']}, "
@@ -63,9 +66,17 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
           f"full-resync-every-sync")
     print(f"  {out['rounds_per_sec']:8.2f} rounds/s  "
           f"{out['subscriber_syncs_per_sec']:8.0f} subscriber syncs/s")
-    for lag, rec in out["plan_by_lag"].items():
-        print(f"  lag {lag}: {rec['kind']:7s} {rec['nbytes']:6d} B  "
-              f"{rec['candidates']}")
+    print(render_table(
+        ["lag", "plan", "bytes", "candidates"],
+        [
+            (lag, rec["kind"], rec["nbytes"],
+             "  ".join(f"{k}={v}" for k, v in rec["candidates"].items()))
+            for lag, rec in sorted(
+                out["plan_by_lag"].items(), key=lambda kv: int(kv[0])
+            )
+        ],
+        title="catch-up plan by lag class",
+    ))
     if not out["catchup_beats_full_all_lags"]:
         raise AssertionError(
             "a lag <= horizon chose a plan >= full resync cost"
@@ -74,6 +85,9 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
         raise AssertionError("catch-up application diverged from the replica")
     path = save_json("broadcast_fanout", out)
     print(f"wrote {path}")
+    save_telemetry("broadcast_fanout", telemetry,
+                   meta={"benchmark": "broadcast_fanout",
+                         "n_subscribers": N_SUBSCRIBERS, "rounds": ROUNDS})
     return out
 
 

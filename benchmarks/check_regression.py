@@ -66,8 +66,9 @@ RULES = {
     # <5% bound is computed by the benchmark itself (interleaved medians),
     # so the gate only needs the boolean + stable structural fields
     "run_api_overhead": {
-        "exact": ("preset", "n_clients", "timed_rounds", "bound"),
-        "true": ("overhead_within_bound",),
+        "exact": ("preset", "n_clients", "timed_rounds", "bound",
+                  "telemetry_bound"),
+        "true": ("overhead_within_bound", "telemetry_disabled_within_bound"),
     },
 }
 

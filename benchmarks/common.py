@@ -28,6 +28,24 @@ def save_json(name: str, payload) -> str:
     return path
 
 
+def save_telemetry(name: str, telemetry, meta=None) -> dict:
+    """Export a benchmark's repro.obs bundle as ``<name>.trace.json`` +
+    ``<name>.metrics.jsonl`` next to its JSON record (CI uploads both and
+    runs ``repro.obs.view --check`` over them).  No-op when disabled."""
+    if not getattr(telemetry, "enabled", False):
+        return {}
+    from repro.obs import finish_run
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return finish_run(
+        telemetry,
+        trace=os.path.join(OUT_DIR, f"{name}.trace.json"),
+        metrics_out=os.path.join(OUT_DIR, f"{name}.metrics.jsonl"),
+        meta=meta,
+        print_summary=False,
+    )
+
+
 # ------------------------------------------------------- benchmark tasks
 # The paper's 5 tasks map to synthetic stand-ins of 3 model families
 # (offline container — DESIGN.md §8): conv / recurrent / transformer.

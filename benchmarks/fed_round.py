@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import save_json
+from benchmarks.common import save_json, save_telemetry
 from repro.configs.base import ModelConfig
 from repro.core.api import CompressionPolicy, PolicyRule
 from repro.core.codec import make_codec
@@ -108,8 +108,12 @@ def legacy_loop(model, task, policy, *, n_clients, delay, sparsity, rounds):
     return times, losses, up_bytes / rounds
 
 
-def fed_subsystem(model, task, policy, *, n_clients, delay, sparsity, rounds):
+def fed_subsystem(model, task, policy, *, n_clients, delay, sparsity, rounds,
+                  telemetry=None):
     """The same workload through ParameterServer/ClientPool/RoundScheduler."""
+    from repro.obs import NULL_TELEMETRY
+
+    tel = NULL_TELEMETRY if telemetry is None else telemetry
     server = ParameterServer(params=model.init(jax.random.PRNGKey(0)),
                              up_policy=policy, down_sparsity=1.0)
     pool = ClientPool(
@@ -118,14 +122,18 @@ def fed_subsystem(model, task, policy, *, n_clients, delay, sparsity, rounds):
         profiles=(ClientProfile(delay=delay, sparsity=sparsity),),
     )
     sched = RoundScheduler(server=server, pool=pool, cohort_size=n_clients)
+    sched.channel.telemetry = tel
+    server.telemetry = tel
     times, losses = [], []
     for r in range(rounds):
         t0 = time.perf_counter()
-        m = sched.step(r)
-        jax.block_until_ready(server.params)
+        with tel.span("round", round=r):
+            m = sched.step(r)
+            jax.block_until_ready(server.params)
         times.append(time.perf_counter() - t0)
         losses.append(m["loss"])
     sched.ledger.reconcile(rel=0.1)  # Eq. 1/Eq. 5 parity, every round
+    tel.metrics.ingest_ledger(sched.ledger)
     t = sched.ledger.totals()
     return times, losses, t["up_bytes"] / rounds, t["down_bytes"] / rounds
 
@@ -137,9 +145,12 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
     sparsity = 0.01
     _, model, task, policy = _setup()
 
+    from repro.obs import make_telemetry
+
+    telemetry = make_telemetry()
     t_new, loss_new, up_new, down_new = fed_subsystem(
         model, task, policy, n_clients=n_clients, delay=delay,
-        sparsity=sparsity, rounds=rounds + 1,
+        sparsity=sparsity, rounds=rounds + 1, telemetry=telemetry,
     )
     t_old, loss_old, up_old = legacy_loop(
         model, task, policy, n_clients=n_clients, delay=delay,
@@ -171,8 +182,12 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
           f"(×{out['speedup']:.1f})")
     print(f"  wire: up {up_new/1e3:.1f} kB/round, down {down_new/1e3:.1f} "
           f"kB/round — ledger reconciles with Eq. 1/Eq. 5 every round")
-    path = save_json("fed_round_smoke" if smoke else "fed_round", out)
+    name = "fed_round_smoke" if smoke else "fed_round"
+    path = save_json(name, out)
     print(f"wrote {path}")
+    save_telemetry(name, telemetry,
+                   meta={"benchmark": name, "n_clients": n_clients,
+                         "rounds": rounds + 1})
     if not smoke and out["speedup"] < 3.0:
         raise AssertionError(
             f"vmapped cohort runner only ×{out['speedup']:.2f} over the "

@@ -10,10 +10,19 @@ indirection, metrics dict plumbing.  This benchmark measures it directly:
            loop with precomputed static rates (what PR 4 timed),
   run_api  the same rounds through ``build_run(spec)`` → ``Run.step``.
 
-Both run the SAME compiled computation (one warm-up round each), sampled
-in interleaved round-robin so CI-runner drift hits both equally; we
-report per-round medians and gate ``overhead_frac < 0.05`` in
-``benchmarks/check_regression.py``.
+A third interleaved path, ``traced``, runs the same rounds with an
+ENABLED ``repro.obs`` telemetry bundle attached (spans + fence +
+metrics).  The instrumented-but-disabled path is ``run_api`` itself —
+every ``Run.step`` already holds the ``NULL_TELEMETRY`` no-ops — so the
+telemetry layer's zero-overhead-by-default claim is gated as
+``telemetry_disabled_overhead_frac < 0.01`` (run_api vs direct), while
+the enabled cost is reported informationally (its per-round fence is a
+deliberate ``block_until_ready``).
+
+All paths run the SAME compiled computation (one warm-up round each),
+sampled in interleaved round-robin so CI-runner drift hits each equally;
+we report per-round medians and gate ``overhead_frac < 0.05`` plus the
+telemetry bound in ``benchmarks/check_regression.py``.
 
   PYTHONPATH=src python -m benchmarks.run_api_overhead [--smoke]
 """
@@ -31,6 +40,7 @@ from repro.run import RunSpec, build_run
 PRESET = "lenet5"
 ROUNDS_TIMED = 30
 BOUND = 0.05  # the <5% acceptance bound
+TELEMETRY_BOUND = 0.01  # disabled telemetry must stay under 1%
 
 
 def _spec(rounds: int) -> RunSpec:
@@ -41,11 +51,15 @@ def _spec(rounds: int) -> RunSpec:
 def bench(timed_rounds: int = ROUNDS_TIMED) -> dict:
     spec = _spec(timed_rounds)
     run = build_run(spec)
+    # build_run attaches an enabled make_telemetry() when the spec asks
+    run_traced = build_run(spec.replace(telemetry=True))
+    assert run_traced.telemetry.enabled
     trainer, batch_fn = run.trainer, run.batch_fn
 
-    # two independent states so neither path aliases the other's buffers
+    # independent states so no path aliases another's buffers
     state_direct = trainer.init(jax.random.PRNGKey(0))
     state_run = trainer.init(jax.random.PRNGKey(0))
+    state_traced = run_traced.trainer.init(jax.random.PRNGKey(0))
     rates = trainer.resolved(state_direct.params).rates(spec.sparsity, 0)
 
     def step_direct(state, r):
@@ -57,9 +71,13 @@ def bench(timed_rounds: int = ROUNDS_TIMED) -> dict:
     def step_run(state, r):
         return run.step(state, r)
 
-    # warm-up: one compile each (identical jit cache key → second is a hit)
+    def step_traced(state, r):
+        return run_traced.step(state, r)
+
+    # warm-up: one compile each (identical jit cache key → rest are hits)
     state_direct, _ = step_direct(state_direct, 0)
     state_run, _ = step_run(state_run, 0)
+    state_traced, _ = step_traced(state_traced, 0)
 
     def timed(fn, state, r, sink):
         t0 = time.perf_counter()
@@ -68,19 +86,21 @@ def bench(timed_rounds: int = ROUNDS_TIMED) -> dict:
         sink.append(1e3 * (time.perf_counter() - t0))
         return state
 
-    direct_ms, run_ms = [], []
+    paths = [
+        (step_direct, state_direct, direct_ms := []),
+        (step_run, state_run, run_ms := []),
+        (step_traced, state_traced, traced_ms := []),
+    ]
     for r in range(1, timed_rounds + 1):
-        # alternate which path goes first so runner drift and cache warmth
-        # bias neither side
-        if r % 2:
-            state_direct = timed(step_direct, state_direct, r, direct_ms)
-            state_run = timed(step_run, state_run, r, run_ms)
-        else:
-            state_run = timed(step_run, state_run, r, run_ms)
-            state_direct = timed(step_direct, state_direct, r, direct_ms)
+        # rotate which path goes first so runner drift and cache warmth
+        # bias none of them
+        for i in range(len(paths)):
+            fn, state, sink = paths[(r + i) % len(paths)]
+            paths[(r + i) % len(paths)] = (fn, timed(fn, state, r, sink), sink)
 
     direct = statistics.median(direct_ms)
     run_api = statistics.median(run_ms)
+    traced = statistics.median(traced_ms)
     overhead = (run_api - direct) / direct
     return {
         "preset": PRESET,
@@ -88,9 +108,16 @@ def bench(timed_rounds: int = ROUNDS_TIMED) -> dict:
         "timed_rounds": timed_rounds,
         "direct_step_ms": direct,
         "run_api_step_ms": run_api,
+        "traced_step_ms": traced,
         "overhead_frac": overhead,
         "overhead_within_bound": bool(overhead < BOUND),
         "bound": BOUND,
+        # run_api IS the instrumented-with-no-ops path: its delta over the
+        # bare loop bounds what disabled telemetry costs per round
+        "telemetry_disabled_overhead_frac": overhead,
+        "telemetry_disabled_within_bound": bool(overhead < TELEMETRY_BOUND),
+        "telemetry_enabled_overhead_frac": (traced - direct) / direct,
+        "telemetry_bound": TELEMETRY_BOUND,
     }
 
 
@@ -104,7 +131,10 @@ def main(argv=None) -> dict:
     print(
         f"run_api_overhead: direct {rec['direct_step_ms']:.2f} ms/round, "
         f"run-api {rec['run_api_step_ms']:.2f} ms/round "
-        f"({100 * rec['overhead_frac']:+.1f}%, bound {100 * BOUND:.0f}%) "
+        f"({100 * rec['overhead_frac']:+.1f}%, bound {100 * BOUND:.0f}%; "
+        f"telemetry bound {100 * TELEMETRY_BOUND:.0f}%), "
+        f"traced {rec['traced_step_ms']:.2f} ms/round "
+        f"({100 * rec['telemetry_enabled_overhead_frac']:+.1f}%) "
         f"→ {path}"
     )
     return rec

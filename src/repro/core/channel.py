@@ -59,6 +59,7 @@ import numpy as np
 from repro.core.api import Compressor
 from repro.core.golomb import encode_positions, expected_position_bits
 from repro.core.ledger import BandwidthLedger, RoundRecord
+from repro.obs import NULL_TELEMETRY
 from repro.core.policy import CompressionPolicy, CompressorState, ResolvedPolicy
 from repro.core.wire import Wire, wire_for
 
@@ -208,6 +209,7 @@ class LocalVmapChannel:
 
     def __post_init__(self) -> None:
         self.ledger = BandwidthLedger()
+        self.telemetry = NULL_TELEMETRY  # build_run swaps in an enabled one
         self._resolved: Optional[ResolvedPolicy] = None
         self._wires: Dict[tuple, Wire] = {}
 
@@ -292,8 +294,9 @@ class LocalVmapChannel:
         """Meter client 0's real packed upload and extrapolate ×C into the
         ledger (every client's analytic size is identical; measured sizes
         are one geometric draw each).  Returns client 0's measured bits."""
-        w = self.wire(params, rate, round_idx)
-        blob, bits = w.pack_with_bits(compressed0)
+        with self.telemetry.span("encode", round=round_idx, client=0):
+            w = self.wire(params, rate, round_idx)
+            blob, bits = w.pack_with_bits(compressed0)
         measured = float(bits)
         up_bytes = len(blob) * self.n_clients
         self.ledger.record_up(
@@ -424,6 +427,7 @@ class ShardedGspmdChannel:
                 "(fast=True with all-f32 leaves and an f32 residual_dtype)"
             )
         self.ledger = BandwidthLedger()
+        self.telemetry = NULL_TELEMETRY  # build_run swaps in an enabled one
 
     # ------------------------------------------------------------- protocol
 
@@ -582,10 +586,21 @@ class ShardedGspmdChannel:
                     total += float(encode_positions(pos, gl.rate).size) + 32.0
         return total
 
-    def record_round(self, round_idx: int, *, own0: PyTree) -> float:
-        """Meter client 0's upload and extrapolate ×C (see ledger docs)."""
-        measured = self.measured_bits(own0)
+    def record_round(self, round_idx: int, *, own_client0: PyTree) -> float:
+        """Meter CLIENT 0's upload and extrapolate ×C (see ledger docs).
+
+        The metric is explicitly named ``own_client0``: only client 0's
+        per-shard Golomb streams are host-encoded (one geometric draw);
+        the ledger row is that sample ×C, not a cohort sum — see the
+        sampling caveat in docs/wire-format.md.
+        """
+        with self.telemetry.span("encode", round=round_idx, client=0):
+            measured = self.measured_bits(own_client0)
         analytic = self.bits().per_client
+        self.telemetry.metrics.gauge(
+            "wire/own_client0_bits_measured", measured,
+            round=round_idx, client=0,
+        )
         self.ledger.record_up(
             round_idx,
             clients=tuple(range(self.n_clients)),
@@ -618,6 +633,7 @@ class FedWireChannel:
 
     def __post_init__(self) -> None:
         self.ledger = BandwidthLedger()
+        self.telemetry = NULL_TELEMETRY  # build_run swaps in an enabled one
         # DeltaLog-backed downstream (server.delta_horizon set): per-client
         # last-synced round + one CatchupPlanner over the server's log
         self._last_sync: Dict[int, int] = {}
@@ -657,7 +673,7 @@ class FedWireChannel:
             from repro.serve.broadcast import CatchupPlanner
 
             if self._planner is None or self._planner.log is not log:
-                self._planner = CatchupPlanner(log)
+                self._planner = CatchupPlanner(log, telemetry=self.telemetry)
             plans: Dict[int, Any] = {}
             down_bytes = 0
             down_m = down_a = 0.0
@@ -672,19 +688,24 @@ class FedWireChannel:
                 self._last_sync[int(cid)] = log.head
             catchup = (down_bytes, down_m, down_a)
 
-        result = self.pool.run_cohort(round_idx, cohort, start_params)
+        tel = self.telemetry
+        tel.metrics.gauge("fed/cohort_size", len(cohort), round=round_idx)
+        with tel.span("select_quantize", round=round_idx, cohort=len(cohort)):
+            result = self.pool.run_cohort(round_idx, cohort, start_params)
+            tel.fence(result.losses if hasattr(result, "losses") else None)
 
         uploads, up_bytes = [], 0
-        for i, cid in enumerate(result.client_ids):
-            wire = self.server.up_wire(result.rates[i], round_idx)
-            blob = wire.pack(result.ctrees[i])
-            up_bytes += len(blob)
-            uploads.append(
-                ClientUpdate(
-                    client_id=cid, blob=blob, rate=result.rates[i],
-                    weight=result.weights[i], staleness=int(staleness[i]),
+        with tel.span("encode", round=round_idx, cohort=len(cohort)):
+            for i, cid in enumerate(result.client_ids):
+                wire = self.server.up_wire(result.rates[i], round_idx)
+                blob = wire.pack(result.ctrees[i])
+                up_bytes += len(blob)
+                uploads.append(
+                    ClientUpdate(
+                        client_id=cid, blob=blob, rate=result.rates[i],
+                        weight=result.weights[i], staleness=int(staleness[i]),
+                    )
                 )
-            )
         info = self.server.receive(uploads, round_idx)
         bc = self.server.broadcast(round_idx)
 

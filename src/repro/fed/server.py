@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.channel import resolve_cached
+from repro.obs import NULL_TELEMETRY
 from repro.core.policy import (
     CompressionPolicy,
     CompressorState,
@@ -117,6 +118,7 @@ class ParameterServer:
     delta_horizon: Optional[int] = None  # rounds kept in the DeltaLog
 
     def __post_init__(self) -> None:
+        self.telemetry = NULL_TELEMETRY  # the run layer swaps in an enabled one
         if self.aggregator not in AGGREGATORS:
             raise KeyError(
                 f"unknown aggregator {self.aggregator!r}; have {sorted(AGGREGATORS)}"
@@ -182,22 +184,26 @@ class ParameterServer:
         weights = AGGREGATORS[self.aggregator](uploads, self.staleness_beta)
         measured = 0.0
         agg: Optional[PyTree] = None
-        for u, w in zip(uploads, weights):
-            wire = self.up_wire(u.rate, round_idx)
-            comps = wire.unpack_compressed(u.blob)
-            measured += sum(
-                float(l.nbits)
-                for l in jax.tree.leaves(
-                    comps, is_leaf=lambda x: isinstance(x, LeafCompressed)
+        tel = self.telemetry
+        with tel.span("decode", round=round_idx, uploads=len(uploads)):
+            for u, w in zip(uploads, weights):
+                wire = self.up_wire(u.rate, round_idx)
+                comps = wire.unpack_compressed(u.blob)
+                measured += sum(
+                    float(l.nbits)
+                    for l in jax.tree.leaves(
+                        comps, is_leaf=lambda x: isinstance(x, LeafCompressed)
+                    )
                 )
+                update = wire.dense_of(comps)
+                scaled = jax.tree.map(lambda x: float(w) * np.asarray(x, np.float64), update)
+                agg = scaled if agg is None else jax.tree.map(np.add, agg, scaled)
+        with tel.span("apply", round=round_idx):
+            self.params = jax.tree.map(
+                lambda p, u: (p.astype(jnp.float32) + jnp.asarray(u, jnp.float32)).astype(p.dtype),
+                self.params, agg,
             )
-            update = wire.dense_of(comps)
-            scaled = jax.tree.map(lambda x: float(w) * np.asarray(x, np.float64), update)
-            agg = scaled if agg is None else jax.tree.map(np.add, agg, scaled)
-        self.params = jax.tree.map(
-            lambda p, u: (p.astype(jnp.float32) + jnp.asarray(u, jnp.float32)).astype(p.dtype),
-            self.params, agg,
-        )
+            tel.fence(self.params)
         norm = float(
             np.sqrt(sum(float(np.sum(np.square(x))) for x in jax.tree.leaves(agg)))
         )
@@ -240,11 +246,14 @@ class ParameterServer:
         else:
             delta = gap
         rates = self._down_resolved.rates(self.down_sparsity, round_idx)
-        ctree, dense, self._down_state = self._down_resolved.compress(
-            delta, self._down_state, rates
-        )
-        wire = self.down_wire(round_idx)
-        blob, bits = wire.pack_with_bits(ctree)
+        with self.telemetry.span("select_quantize", round=round_idx, side="down"):
+            ctree, dense, self._down_state = self._down_resolved.compress(
+                delta, self._down_state, rates
+            )
+            self.telemetry.fence(dense)
+        with self.telemetry.span("encode", round=round_idx, side="down"):
+            wire = self.down_wire(round_idx)
+            blob, bits = wire.pack_with_bits(ctree)
         self.estimate = jax.tree.map(jnp.add, self.estimate, dense)
         analytic = float(self._down_resolved.total_bits(ctree))
         if self.delta_log is not None:

@@ -305,7 +305,9 @@ def build_dist_train(
     active fast path.
 
     ``measure`` — every round, additionally emit client 0's transmitted
-    ΔW* (``metrics['own0']``) so the channel ledger can Golomb-encode the
+    ΔW* (``metrics['own_client0']`` — explicitly a CLIENT-0 SAMPLE, not
+    a cohort sum; see docs/wire-format.md) so the channel ledger can
+    Golomb-encode the
     real per-shard position streams next to the analytic Eq. 1 bits.
 
     ``opts`` — §Perf beyond-baseline toggles (baseline = empty set):
@@ -469,7 +471,7 @@ def build_dist_train(
         metrics = {"loss": jnp.mean(losses)}
         if measure:
             # client 0's transmitted ΔW*, for host-side wire metering
-            metrics["own0"] = jax.tree.map(lambda o: o[0], own_tree)
+            metrics["own_client0"] = jax.tree.map(lambda o: o[0], own_tree)
         return (
             {"params": new_params, "opt": opt_states, "residual": new_residual},
             metrics,
@@ -687,6 +689,14 @@ def main(argv=None):
         print(
             f"wire: up {t['up_bytes']/1e3:.1f} kB (measured/analytic "
             f"×{t['up_bits_measured']/max(t['up_bits_analytic'],1):.3f})"
+        )
+    if spec.telemetry:
+        from repro.obs import finish_run
+
+        finish_run(
+            run.telemetry, trace=args.trace, metrics_out=args.metrics_out,
+            meta={"backend": "gspmd", "preset": spec.preset,
+                  "rounds": spec.rounds},
         )
     if args.history:
         import json

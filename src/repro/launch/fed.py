@@ -75,7 +75,12 @@ def main(argv=None):
     print(pool.resolved(params).describe())
 
     t0 = time.time()
-    hist = sched.run(spec.rounds, log_every=args.log_every)
+    if spec.telemetry:
+        # route through Run.run so the traced loop wraps every round in a
+        # span and ingests the ledger into round-tagged gauges at the end
+        _, hist = run.run(spec.rounds, log_every=args.log_every)
+    else:
+        hist = sched.run(spec.rounds, log_every=args.log_every)
     dt = time.time() - t0
     sched.ledger.reconcile(rel=0.1)
     t = sched.ledger.totals()
@@ -97,6 +102,14 @@ def main(argv=None):
         f"dense up would be {dense_up_bits / 8e6:.1f} MB "
         f"(×{dense_up_bits / max(t['up_bytes'] * 8, 1):.0f})"
     )
+    if spec.telemetry:
+        from repro.obs import finish_run
+
+        finish_run(
+            run.telemetry, trace=args.trace, metrics_out=args.metrics_out,
+            meta={"backend": "fed", "preset": spec.preset,
+                  "rounds": spec.rounds},
+        )
     if args.history:
         os.makedirs(os.path.dirname(os.path.abspath(args.history)), exist_ok=True)
         with open(args.history, "w") as f:

@@ -45,6 +45,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="downstream sparsity of the logged broadcasts")
     g.add_argument("--delta-horizon", type=int, default=8,
                    help="rounds the DeltaLog keeps before forcing full resync")
+    from repro.run.flags import add_telemetry_flags
+
+    add_telemetry_flags(ap)
     return ap
 
 
@@ -87,8 +90,11 @@ def main(argv=None):
     print("sample token ids:", out[0, :16].tolist())
 
     if args.subscribers > 0:
+        from repro.obs import NULL_TELEMETRY, finish_run, make_telemetry, render_table
+        from repro.run.flags import telemetry_requested
         from repro.serve import simulate_fanout
 
+        telemetry = make_telemetry() if telemetry_requested(args) else NULL_TELEMETRY
         m = simulate_fanout(
             params,
             n_subscribers=args.subscribers,
@@ -96,6 +102,7 @@ def main(argv=None):
             horizon=args.delta_horizon,
             down_sparsity=args.broadcast_sparsity,
             seed=0,
+            telemetry=telemetry,
         )
         print(
             f"broadcast: {m['n_subscribers']} subscribers x "
@@ -104,6 +111,23 @@ def main(argv=None):
             f"{m['bytes_saving_vs_full_resync']:.1f}x vs full resync  "
             f"{m['rounds_per_sec']:.2f} rounds/s"
         )
+        print(render_table(
+            ["lag", "plan", "bytes", "vs full resync"],
+            [
+                (lag, p["kind"], p["nbytes"],
+                 f"x{m['full_resync_bytes'] / max(p['nbytes'], 1):.1f}")
+                for lag, p in sorted(
+                    m["plan_by_lag"].items(), key=lambda kv: int(kv[0])
+                )
+            ],
+            title="catch-up plan by lag class",
+        ))
+        if telemetry.enabled:
+            finish_run(
+                telemetry, trace=args.trace, metrics_out=args.metrics_out,
+                meta={"backend": "serve", "subscribers": args.subscribers,
+                      "rounds": args.broadcast_rounds},
+            )
     return out
 
 

@@ -82,6 +82,14 @@ def main(argv=None):
             f"measured wire: {hist['measured_total_bits']/8e6:.2f} MB/client "
             f"(analytic {hist['total_upload_bits']/8e6:.2f} MB)"
         )
+    if spec.telemetry:
+        from repro.obs import finish_run
+
+        finish_run(
+            run.telemetry, trace=args.trace, metrics_out=args.metrics_out,
+            meta={"backend": "local", "preset": spec.preset,
+                  "rounds": spec.rounds},
+        )
     if args.save:
         save_pytree(args.save, state.params)
         print(f"saved params to {args.save}")

@@ -54,6 +54,14 @@ def main(argv=None):
             f"(measured/analytic up "
             f"×{t['up_bits_measured']/max(t['up_bits_analytic'],1):.3f})"
         )
+    if spec.telemetry:
+        from repro.obs import finish_run
+
+        finish_run(
+            run.telemetry, trace=args.trace, metrics_out=args.metrics_out,
+            meta={"backend": spec.backend, "preset": spec.preset,
+                  "rounds": spec.rounds},
+        )
     if args.history:
         os.makedirs(os.path.dirname(os.path.abspath(args.history)), exist_ok=True)
         with open(args.history, "w") as f:

@@ -40,6 +40,7 @@ from repro.core.api import (
     PolicyRule,
     make_compressor,
 )
+from repro.obs import NULL_TELEMETRY, Telemetry, make_telemetry
 from repro.run.spec import RunSpec
 
 PyTree = Any
@@ -107,6 +108,7 @@ class Run:
     model: Any
     task: Any
     channel: Any = None  # set by the backend builder
+    telemetry: Telemetry = NULL_TELEMETRY  # enabled iff spec.telemetry
 
     # ------------------------------------------------------------ protocol
 
@@ -142,6 +144,92 @@ class Run:
         """init + step loop with the backend's native history dict."""
         raise NotImplementedError
 
+    # ----------------------------------------------------------- telemetry
+
+    def _init_for_run(self):
+        """The state the traced loop starts from (fed reuses a live
+        scheduler instead of rebuilding)."""
+        return self.init()
+
+    def _leaf_table(self, state) -> list:
+        """Per-leaf static compression plan rows ``(path, n, k, rate)``
+        for the leaf/* gauges; backends override (None-k = dense/skip)."""
+        return []
+
+    def _residual_of(self, state) -> Optional[PyTree]:
+        """The error-feedback residual in pytree/flat form, or None when
+        this backend doesn't expose one."""
+        return None
+
+    def _finalize_hist(self, hist: dict, n_rounds: int) -> dict:
+        """Backend-specific derived history fields (compression totals)."""
+        return hist
+
+    def _record_static_gauges(self, state) -> None:
+        from repro.core.golomb import expected_position_bits
+
+        metrics = self.telemetry.metrics
+        for path, n, k, rate in self._leaf_table(state):
+            metrics.gauge("leaf/n", n, leaf=path)
+            metrics.gauge("leaf/rate", rate, leaf=path)
+            if k is not None:
+                metrics.gauge("leaf/k", k, leaf=path)
+                if 0.0 < rate < 1.0:
+                    metrics.gauge(
+                        "leaf/golomb_bits_pos", expected_position_bits(rate),
+                        leaf=path,
+                    )
+
+    def _traced_run(self, n_rounds: Optional[int] = None,
+                    log_every: int = 0) -> tuple:
+        """The telemetry-instrumented init+step loop: one ``round`` span
+        per round (stage spans open inside the backends/channels), the
+        train/* gauges, and a final bit-exact ledger ingest.
+
+        Replaces the backends' native ``run`` loops when
+        ``spec.telemetry`` is on — same step semantics (it drives the
+        same :meth:`step`), plus :meth:`_finalize_hist` reconstructs each
+        backend's derived history fields.
+        """
+        import time
+
+        tel = self.telemetry
+        n_rounds = self.spec.rounds if n_rounds is None else n_rounds
+        state = self._init_for_run()
+        self._record_static_gauges(state)
+        hist: dict = {"round": [], "loss": [], "bits_per_client": []}
+        for r in range(n_rounds):
+            t0 = time.perf_counter()
+            with tel.span("round", round=r):
+                state, m = self.step(state, r)
+                tel.fence(self.params_of(state))
+            step_ms = (time.perf_counter() - t0) * 1e3
+            tel.metrics.gauge("train/step_ms", step_ms, round=r,
+                              phase="compile" if r == 0 else "steady")
+            tel.metrics.gauge("train/loss", float(m["loss"]), round=r)
+            if "bits_per_client" in m:
+                tel.metrics.gauge("train/bits_per_client",
+                                  float(m["bits_per_client"]), round=r)
+            res = self._residual_of(state)
+            if res is not None:
+                norm = float(jnp.sqrt(sum(
+                    jnp.sum(jnp.square(x.astype(jnp.float32)))
+                    for x in jax.tree.leaves(res)
+                )))
+                tel.metrics.gauge("train/residual_norm", norm, round=r)
+            hist["round"].append(r)
+            hist["loss"].append(float(m["loss"]))
+            hist["bits_per_client"].append(float(m.get("bits_per_client", 0.0)))
+            if "measured_bits_per_client" in m:
+                hist.setdefault("measured_bits_per_client", []).append(
+                    float(m["measured_bits_per_client"])
+                )
+            if log_every and (r + 1) % log_every == 0:
+                print(f"round {r+1:5d}  loss {float(m['loss']):.4f}  "
+                      f"step {step_ms:.1f} ms")
+        tel.metrics.ingest_ledger(self.ledger)
+        return state, self._finalize_hist(hist, n_rounds)
+
 
 # ------------------------------------------------------------ local backend
 
@@ -159,10 +247,14 @@ class LocalRun(Run):
     def step(self, state, round_idx: int) -> tuple:
         resolved = self.trainer.resolved(state.params)
         rates = resolved.rates(self.spec.sparsity, round_idx)
-        out = self.trainer.round_step(
-            state, self.batch_fn(round_idx), n_delay=self.spec.delay,
-            sparsity=rates, return_compressed=self.spec.measure_wire,
-        )
+        # local select/quantize/exchange/apply fuse into ONE jitted round
+        # (docs/observability.md) — honestly traced as one fused exchange
+        with self.telemetry.span("exchange", round=round_idx, fused=True):
+            out = self.trainer.round_step(
+                state, self.batch_fn(round_idx), n_delay=self.spec.delay,
+                sparsity=rates, return_compressed=self.spec.measure_wire,
+            )
+            self.telemetry.fence(out[0].params)
         if self.spec.measure_wire:
             state, m, comp0 = out
             m = dict(m)
@@ -183,7 +275,41 @@ class LocalRun(Run):
     def params_of(self, state) -> PyTree:
         return state.params
 
+    def _leaf_table(self, state) -> list:
+        from repro.core.stages import k_for
+
+        resolved = self.trainer.resolved(state.params)
+        rates = resolved.rates(self.spec.sparsity, 0)
+        rows = []
+        for plan, leaf, p in zip(
+            resolved.plans, resolved._leaves_of(state.params), rates
+        ):
+            n = int(np.prod(np.shape(leaf)) or 1)
+            sparse = not (plan.codec.skip or plan.codec.selector.dense)
+            rows.append((plan.path, n, k_for(n, p) if sparse else None,
+                         float(p)))
+        return rows
+
+    def _residual_of(self, state) -> Optional[PyTree]:
+        return state.comp_state.residual
+
+    def _finalize_hist(self, hist: dict, n_rounds: int) -> dict:
+        total_bits = sum(hist["bits_per_client"])
+        hist["total_upload_bits"] = total_bits
+        n_params = sum(
+            x.size for x in jax.tree.leaves(
+                jax.eval_shape(self.model.init, jax.random.PRNGKey(0))
+            )
+        )
+        hist["dense_total_bits"] = 32.0 * n_params * n_rounds * self.spec.delay
+        hist["compression_rate"] = hist["dense_total_bits"] / max(total_bits, 1.0)
+        if hist.get("measured_bits_per_client"):
+            hist["measured_total_bits"] = sum(hist["measured_bits_per_client"])
+        return hist
+
     def run(self, n_rounds: Optional[int] = None, log_every: int = 0) -> tuple:
+        if self.telemetry.enabled:
+            return self._traced_run(n_rounds, log_every)
         return self.trainer.fit(
             jax.random.PRNGKey(self.spec.seed),
             self.batch_fn,
@@ -244,12 +370,16 @@ class GspmdRun(Run):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
 
     def step(self, state, round_idx: int) -> tuple:
-        state, m = self.fns.train_step(state, self._batch(round_idx))
+        # the shard_map round (compress + collective + apply) is one jitted
+        # fused call — traced as one exchange span (docs/observability.md)
+        with self.telemetry.span("exchange", round=round_idx, fused=True):
+            state, m = self.fns.train_step(state, self._batch(round_idx))
+            self.telemetry.fence(state["params"])
         m = dict(m)
         if self.spec.measure_wire:
-            own0 = m.pop("own0")
+            own_client0 = m.pop("own_client0")
             m["measured_bits_per_client"] = self.channel.record_round(
-                round_idx, own0=own0
+                round_idx, own_client0=own_client0
             )
         m["bits_per_client"] = self.fns.bits_per_client
         m["bits_dense"] = self.fns.bits_dense
@@ -263,7 +393,35 @@ class GspmdRun(Run):
     def params_of(self, state) -> PyTree:
         return state["params"]
 
+    def _leaf_table(self, state) -> list:
+        rows = []
+        for gl in self.channel.leaves:
+            n = int(np.prod(gl.global_shape) or 1)
+            if gl.mode == "sparse":
+                L = (gl.global_shape[0]
+                     if gl.scanned and len(gl.global_shape) > 1 else 1)
+                n_loc = max(1, n // (L * gl.n_shards))
+                k_loc = max(1, min(n_loc, int(round(gl.rate * n_loc))))
+                k = L * gl.n_shards * k_loc
+            else:
+                k = None
+            rows.append((gl.path, n, k, float(gl.rate)))
+        return rows
+
+    def _residual_of(self, state) -> Optional[PyTree]:
+        return state.get("residual")
+
+    def _finalize_hist(self, hist: dict, n_rounds: int) -> dict:
+        hist["total_upload_bits"] = float(self.fns.bits_per_client) * n_rounds
+        hist["dense_total_bits"] = float(self.fns.bits_dense) * n_rounds
+        hist["compression_rate"] = hist["dense_total_bits"] / max(
+            hist["total_upload_bits"], 1.0
+        )
+        return hist
+
     def run(self, n_rounds: Optional[int] = None, log_every: int = 0) -> tuple:
+        if self.telemetry.enabled:
+            return self._traced_run(n_rounds, log_every)
         n_rounds = self.spec.rounds if n_rounds is None else n_rounds
         state = self.init()
         hist: dict = {"round": [], "loss": [], "bits_per_client": []}
@@ -351,6 +509,11 @@ class FedRun(Run):
             max_staleness=spec.max_staleness, seed=spec.seed,
         )
         self.channel = self.scheduler.channel
+        # thread the telemetry handle to the wire endpoints (stage spans:
+        # select_quantize/encode in the channel, decode/apply/encode in
+        # the server)
+        self.channel.telemetry = self.telemetry
+        server.telemetry = self.telemetry
         return self.scheduler
 
     def step(self, state, round_idx: int) -> tuple:
@@ -367,7 +530,33 @@ class FedRun(Run):
     def params_of(self, state) -> PyTree:
         return state.server.params
 
+    def _init_for_run(self):
+        return self.init() if self.scheduler is None else self.scheduler
+
+    def _leaf_table(self, state) -> list:
+        from repro.core.stages import k_for
+
+        resolved = state.server._up_resolved
+        params = state.server.params
+        rates = resolved.rates(self.spec.sparsity, 0)
+        rows = []
+        for plan, leaf, p in zip(
+            resolved.plans, resolved._leaves_of(params), rates
+        ):
+            n = int(np.prod(np.shape(leaf)) or 1)
+            sparse = not (plan.codec.skip or plan.codec.selector.dense)
+            rows.append((plan.path, n, k_for(n, p) if sparse else None,
+                         float(p)))
+        return rows
+
+    def _finalize_hist(self, hist: dict, n_rounds: int) -> dict:
+        hist.update({f"wire_{k}": v for k, v in self.ledger.history().items()})
+        hist.update(self.ledger.totals())
+        return hist
+
     def run(self, n_rounds: Optional[int] = None, log_every: int = 0) -> tuple:
+        if self.telemetry.enabled:
+            return self._traced_run(n_rounds, log_every)
         state = self.init() if self.scheduler is None else self.scheduler
         hist = state.run(
             self.spec.rounds if n_rounds is None else n_rounds,
@@ -407,5 +596,15 @@ _BUILDERS = {
 def build_run(spec: RunSpec, **backend_kw) -> Run:
     """Construct the backend a spec names.  ``backend_kw`` carries the few
     non-declarative objects a backend can accept (e.g. ``mesh=`` for
-    gspmd)."""
-    return _BUILDERS[spec.backend](spec, **backend_kw)
+    gspmd).
+
+    ``spec.telemetry`` attaches one enabled :class:`~repro.obs.Telemetry`
+    bundle to the run AND its channel (disabled runs keep the shared
+    no-op ``NULL_TELEMETRY`` — zero overhead by construction).
+    """
+    run = _BUILDERS[spec.backend](spec, **backend_kw)
+    if spec.telemetry:
+        run.telemetry = make_telemetry()
+        if run.channel is not None:  # fed attaches at init() time
+            run.channel.telemetry = run.telemetry
+    return run

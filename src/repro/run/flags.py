@@ -39,6 +39,21 @@ def add_compression_flags(ap: argparse.ArgumentParser) -> argparse.ArgumentParse
     return ap
 
 
+def add_telemetry_flags(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """The repro.obs export knobs (either flag enables telemetry)."""
+    g = ap.add_argument_group("telemetry (repro.obs; docs/observability.md)")
+    g.add_argument("--trace", default=None, metavar="PATH",
+                   help="write a Perfetto-loadable trace.json of the run")
+    g.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="write the run's metrics as schema-headed JSONL")
+    return ap
+
+
+def telemetry_requested(args: argparse.Namespace) -> bool:
+    return bool(getattr(args, "trace", None) or
+                getattr(args, "metrics_out", None))
+
+
 def add_run_flags(ap: argparse.ArgumentParser, **defaults) -> argparse.ArgumentParser:
     """The full shared RunSpec surface; ``defaults`` re-pins per-launcher
     defaults (e.g. the fed launcher's dense-small pattern) without
@@ -84,6 +99,7 @@ def add_run_flags(ap: argparse.ArgumentParser, **defaults) -> argparse.ArgumentP
     ap.add_argument("--history", default=None, help="metrics JSON path")
     ap.add_argument("--spec-json", default=None,
                     help="load a committed RunSpec JSON (other flags ignored)")
+    add_telemetry_flags(ap)
     if defaults:
         ap.set_defaults(**defaults)
     return ap
@@ -135,7 +151,11 @@ def spec_from_args(args: argparse.Namespace,
     if getattr(args, "spec_json", None):
         with open(args.spec_json) as f:
             spec = RunSpec.from_json(f.read())
-        return spec.replace(backend=backend) if backend else spec
+        if backend:
+            spec = spec.replace(backend=backend)
+        if telemetry_requested(args):
+            spec = spec.replace(telemetry=True)
+        return spec
     return RunSpec(
         preset=args.preset,
         backend=backend or args.backend,
@@ -164,4 +184,5 @@ def spec_from_args(args: argparse.Namespace,
         skew=args.skew,
         broadcast_log=args.broadcast_log,
         delta_horizon=args.delta_horizon,
+        telemetry=telemetry_requested(args),
     )

@@ -49,6 +49,7 @@ class RunSpec:
     fast: bool = False  # §10/§11 flat-buffer fast path
     flat_engine: str = "exact"  # "exact" | "hist" (gspmd fast path)
     measure_wire: bool = False  # meter real bytes into the ledger
+    telemetry: bool = False  # repro.obs tracing + metrics (off = no-ops)
 
     # ---- client topology / schedule
     clients: int = 4

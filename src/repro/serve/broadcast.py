@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ledger import BandwidthLedger, RoundRecord
+from repro.obs import NULL_TELEMETRY
 from repro.serve.deltalog import DeltaLog, apply_catchup_flat
 
 PyTree = Any
@@ -68,8 +69,13 @@ class CatchupPlanner:
     """
 
     log: DeltaLog
+    telemetry: Any = NULL_TELEMETRY
 
     def plan(self, from_round: int) -> CatchupPlan:
+        with self.telemetry.span("plan", from_round=from_round):
+            return self._plan(from_round)
+
+    def _plan(self, from_round: int) -> CatchupPlan:
         head = self.log.head
         if from_round >= head:
             return CatchupPlan("none", from_round, head, 0, 0.0, 0.0, (), ())
@@ -78,7 +84,8 @@ class CatchupPlanner:
         if self.log.can_stack(from_round):
             ents = self.log.entries_since(from_round)
             costs["replay"] = sum(e.nbytes for e in ents)
-            stacked = self.log.encode_stacked(from_round)
+            with self.telemetry.span("encode_stacked", from_round=from_round):
+                stacked = self.log.encode_stacked(from_round)
             costs["stacked"] = stacked.nbytes
         order = ("stacked", "replay", "full")  # tie-break: fewest messages
         kind = min(costs, key=lambda c: (costs[c], order.index(c)))
@@ -124,6 +131,7 @@ class SubscriberPool:
     n_subscribers: int
     periods: Tuple[int, ...] = (1,)
     verify_classes: int = 0
+    telemetry: Any = NULL_TELEMETRY
 
     def __post_init__(self) -> None:
         if self.n_subscribers < 1:
@@ -131,7 +139,7 @@ class SubscriberPool:
         if not self.periods or any(int(p) < 1 for p in self.periods):
             raise ValueError(f"periods must be >= 1, got {self.periods}")
         self.periods = tuple(int(p) for p in self.periods)
-        self.planner = CatchupPlanner(self.log)
+        self.planner = CatchupPlanner(self.log, telemetry=self.telemetry)
         self.ledger = BandwidthLedger()
         s = np.arange(self.n_subscribers)
         period = np.asarray(
@@ -203,6 +211,14 @@ class SubscriberPool:
             bits_m += plan.bits_measured * int(cnt)
             bits_a += plan.bits_analytic * int(cnt)
             table[round_idx - int(frm)] = plan.nbytes
+            lag = round_idx - int(frm)
+            self.telemetry.metrics.gauge(
+                "serve/plan_bytes", plan.nbytes,
+                round=round_idx, lag=lag, kind=plan.kind,
+            )
+            self.telemetry.metrics.hist(
+                "fed/lag_class", lag, round=round_idx, count=int(cnt),
+            )
         self.down_bytes_full_equiv += n_awake * self.log.full_nbytes()
 
         self._synced, self._bytes, self._syncs = self._advance(
@@ -237,21 +253,31 @@ class SubscriberPool:
         return flats
 
     def _verify_round(self, round_idx: int, plans: Dict[int, CatchupPlan]):
-        for (p, ph), state in self._verify.items():
-            if round_idx % p != ph:
-                continue
-            plan = plans.get(state["synced"])
-            if plan is None:  # class empty this round (shouldn't happen)
-                continue
-            state["flats"] = self._apply_plan(state["flats"], plan)
-            state["synced"] = round_idx
-            self.verified_syncs += 1
-            for got, want in zip(state["flats"], self.log._replica):
-                if not np.array_equal(
-                    got.view(np.uint32), want.view(np.uint32)
-                ):
-                    self._verify_failures += 1
-                    break
+        if not self._verify:
+            return
+        with self.telemetry.span("verify", round=round_idx,
+                                 classes=len(self._verify)):
+            for (p, ph), state in self._verify.items():
+                if round_idx % p != ph:
+                    continue
+                plan = plans.get(state["synced"])
+                if plan is None:  # class empty this round (shouldn't happen)
+                    continue
+                state["flats"] = self._apply_plan(state["flats"], plan)
+                state["synced"] = round_idx
+                self.verified_syncs += 1
+                ok = True
+                for got, want in zip(state["flats"], self.log._replica):
+                    if not np.array_equal(
+                        got.view(np.uint32), want.view(np.uint32)
+                    ):
+                        self._verify_failures += 1
+                        ok = False
+                        break
+                if ok:
+                    self.telemetry.metrics.counter(
+                        "serve/verify_ok", 1, round=round_idx, period=p,
+                    )
 
     @property
     def verify_ok(self) -> bool:
@@ -298,6 +324,7 @@ def simulate_fanout(
     update_scale: float = 1e-2,
     verify_classes: int = 3,
     policy: Optional[Any] = None,
+    telemetry: Any = NULL_TELEMETRY,
 ) -> dict:
     """Drive the PRODUCTION broadcast path at fan-out scale.
 
@@ -323,9 +350,11 @@ def simulate_fanout(
         params=f32, up_policy=policy, down_sparsity=down_sparsity,
         delta_horizon=horizon,
     )
+    server.telemetry = telemetry
     pool = SubscriberPool(
         log=server.delta_log, n_subscribers=n_subscribers,
         periods=periods, verify_classes=verify_classes,
+        telemetry=telemetry,
     )
     leaves, treedef = jax.tree.flatten(server.params)
     rng = jax.random.PRNGKey(seed)
@@ -338,8 +367,9 @@ def simulate_fanout(
             for x, k in zip(leaves, keys)
         ]
         server.params = jax.tree.unflatten(treedef, leaves)
-        server.broadcast(r)
-        pool.sync_round(r)
+        with telemetry.span("round", round=r):
+            server.broadcast(r)
+            pool.sync_round(r)
     dt = time.perf_counter() - t0
 
     log = server.delta_log
@@ -356,6 +386,7 @@ def simulate_fanout(
         }
         beats_full &= plan.nbytes < full_cost
     pool.ledger.reconcile(rel=0.1)
+    telemetry.metrics.ingest_ledger(pool.ledger)
 
     t = pool.totals()
     return {

@@ -24,6 +24,7 @@ PARSER_MODULES = [
     "repro.launch.fed",
     "repro.launch.serve",
     "repro.launch.dryrun",
+    "repro.obs.view",
     "benchmarks.run",
 ]
 
@@ -126,6 +127,26 @@ def test_benchmark_files_referenced_in_docs_exist():
     text = doc_text()
     for rel in set(re.findall(r"`((?:benchmarks|docs|experiments)/[\w./-]+)`", text)):
         assert (REPO / rel).exists(), f"docs reference missing file {rel!r}"
+
+
+def test_observability_doc_covers_span_and_metric_registries():
+    """Completeness both ways for the telemetry layer: every span name in
+    SPAN_NAMES and every metric in METRIC_NAMES must appear (backticked)
+    in docs/observability.md — a new instrumentation point cannot ship
+    undocumented, and the doc cannot name spans/metrics that don't
+    exist."""
+    from repro.obs import METRIC_NAMES, SPAN_NAMES
+
+    doc = (REPO / "docs" / "observability.md").read_text()
+    missing = [n for n in SPAN_NAMES if f"`{n}`" not in doc]
+    assert not missing, f"spans undocumented in docs/observability.md: {missing}"
+    missing = [n for n in METRIC_NAMES if f"`{n}`" not in doc]
+    assert not missing, f"metrics undocumented in docs/observability.md: {missing}"
+    # accuracy: backticked span-like tokens in the doc's span table rows
+    # must be registered names
+    documented_spans = set(re.findall(r"^\| `([a-z_]+)` \|", doc, re.M))
+    unknown = documented_spans - set(SPAN_NAMES) - set(METRIC_NAMES)
+    assert not unknown, f"docs/observability.md names unknown spans: {unknown}"
 
 
 def test_design_section_10_documents_flat_path():
