@@ -56,6 +56,23 @@ RULES = {
         "rel": ("bytes_per_subscriber_per_round",),
         "ratio_min": ("bytes_saving_vs_full_resync",),
     },
+    # §14 elastic federation: structural fields are threefry-deterministic;
+    # memory/parity booleans are the acceptance claims, throughput is noise
+    "fed_elastic": {
+        "exact": ("n_clients", "cohort", "cohort_tile", "timed_rounds",
+                  "n_params", "pool_logical_bytes"),
+        "true": ("tile_parity", "memory_bounded", "store_sparse",
+                 "ledger_reconciles"),
+        "rel": ("up_bytes_per_round", "down_bytes_per_round"),
+    },
+    # §14 chaos smoke: the CLI-level dropout/kill/resume contract — every
+    # field that matters is a must-hold boolean
+    "fed_chaos": {
+        "exact": ("rounds", "clients", "cohort"),
+        "true": ("resume_loss_bit_equal", "resume_ledger_equal",
+                 "loss_parity_vs_failure_free", "wasted_bytes_metered",
+                 "ledger_reconciles"),
+    },
     "dist_flat": {
         "exact": ("n_devices", "n_clients", "n_params"),
         "true": ("parity", "bits_equal"),

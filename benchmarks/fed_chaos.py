@@ -1,0 +1,109 @@
+"""Chaos smoke: the fed-tiny CLI run under a seeded fault schedule.
+
+Drives ``repro.launch.fed`` (the full ``RunSpec`` → ``build_run`` →
+``RoundScheduler`` stack, NOT a hand-assembled federation) three times:
+
+  A. faulted + killed: dropouts, a straggler past ``--straggler-timeout``,
+     a corrupt upload, and a mid-round ``kill_server`` — the launcher
+     checkpoints, rebuilds from scratch, restores, and resumes;
+  B. the same faults with the kill removed, never interrupted;
+  C. failure-free.
+
+and then holds the ISSUE 8 CI contract:
+
+  * A's post-resume trajectory lands on B's bytes: final loss and the
+    ENTIRE ledger total row are exactly equal (bit-identical mid-round
+    resume, observed from the CLI surface);
+  * every faulted round still reconciles measured-vs-analytic, with the
+    aborted/rejected bytes metered in ``up_bytes_wasted`` (A > 0, C == 0);
+  * chaos costs convergence only noise: A's final loss stays within a
+    band of C's.
+
+  PYTHONPATH=src python -m benchmarks.fed_chaos
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import save_json
+from repro.fed import FaultSchedule
+from repro.launch.fed import main as fed_main
+
+ROUNDS, CLIENTS, COHORT, DELAY = 5, 8, 4, 2
+
+# targets chosen inside the deterministic seed-0 cohorts of (8 choose 4):
+# r1 ⊇ {4, 6}, r2 ∋ 3, r3 is the killed round
+CHAOS = FaultSchedule(
+    seed=7,
+    drops=((1, 4),),
+    slow=((2, 3, 100.0),),
+    corrupt=((1, 6),),
+    kill_server=((3, "post_aggregate"),),
+)
+NO_KILL = FaultSchedule(seed=7, drops=CHAOS.drops, slow=CHAOS.slow,
+                        corrupt=CHAOS.corrupt)
+
+
+def _run(faults: FaultSchedule | None) -> dict:
+    argv = [
+        "--rounds", str(ROUNDS), "--clients", str(CLIENTS),
+        "--cohort", str(COHORT), "--delay", str(DELAY),
+        "--sparsity", "0.05", "--log-every", "0",
+    ]
+    if faults is not None:
+        argv += ["--faults", faults.to_json(), "--straggler-timeout", "10"]
+    return fed_main(argv)
+
+
+def run() -> dict:
+    print("=== A: faulted + mid-round server kill (checkpoint/resume) ===")
+    a = _run(CHAOS)
+    print("=== B: same faults, never killed ===")
+    b = _run(NO_KILL)
+    print("=== C: failure-free ===")
+    c = _run(None)
+
+    totals_keys = ("rounds", "up_bytes", "down_bytes", "up_bytes_wasted",
+                   "up_bits_measured", "up_bits_analytic",
+                   "down_bits_measured", "down_bits_analytic")
+    resume_ledger_equal = all(a[k] == b[k] for k in totals_keys)
+    resume_loss_bit_equal = a["loss"][-1] == b["loss"][-1]
+    loss_parity = abs(a["loss"][-1] - c["loss"][-1]) <= 0.5 * abs(c["loss"][-1])
+
+    out = {
+        "rounds": ROUNDS,
+        "clients": CLIENTS,
+        "cohort": COHORT,
+        "final_loss_chaos": float(a["loss"][-1]),
+        "final_loss_failure_free": float(c["loss"][-1]),
+        "up_bytes_wasted": int(a["up_bytes_wasted"]),
+        "resume_loss_bit_equal": bool(resume_loss_bit_equal),
+        "resume_ledger_equal": bool(resume_ledger_equal),
+        "loss_parity_vs_failure_free": bool(loss_parity),
+        "wasted_bytes_metered": bool(
+            a["up_bytes_wasted"] > 0 and c["up_bytes_wasted"] == 0
+        ),
+        "ledger_reconciles": True,  # each run reconciled or raised
+    }
+    print(
+        f"chaos loss {out['final_loss_chaos']:.4f} vs failure-free "
+        f"{out['final_loss_failure_free']:.4f}; resume bit-equal: "
+        f"loss={resume_loss_bit_equal} ledger={resume_ledger_equal}; "
+        f"wasted {out['up_bytes_wasted']} B"
+    )
+    path = save_json("fed_chaos", out)
+    print(f"wrote {path}")
+    for flag in ("resume_loss_bit_equal", "resume_ledger_equal",
+                 "loss_parity_vs_failure_free", "wasted_bytes_metered"):
+        if not out[flag]:
+            raise AssertionError(f"fed_chaos acceptance failed: {flag}")
+    return out
+
+
+def main(argv=None):
+    argparse.ArgumentParser(description=__doc__.splitlines()[0]).parse_args(argv)
+    run()
+
+
+if __name__ == "__main__":
+    main()

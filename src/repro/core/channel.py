@@ -638,6 +638,10 @@ class FedWireChannel:
         # last-synced round + one CatchupPlanner over the server's log
         self._last_sync: Dict[int, int] = {}
         self._planner: Any = None
+        # a mid-round kill (ServerKilled at post_aggregate) parks the
+        # aggregated-but-unbroadcast round here; checkpointable, finished
+        # by _finish_round on resume
+        self._pending: Optional[dict] = None
 
     # ------------------------------------------------------------- protocol
 
@@ -653,12 +657,31 @@ class FedWireChannel:
         cohort: Sequence[int],
         start_params: PyTree,
         staleness: Optional[np.ndarray] = None,
+        faults: Any = None,
+        straggler_timeout: Optional[float] = None,
+        kill_step: Optional[str] = None,
     ) -> dict:
         """One federated round: run the cohort, pack real uploads, decode +
         aggregate server-side, compress the broadcast, meter both
-        directions into the ledger."""
+        directions into the ledger.
+
+        Elasticity (DESIGN.md §14): ``faults`` is a
+        :class:`~repro.fed.faults.FaultSchedule` whose slow/corrupt entries
+        apply to this round; ``straggler_timeout`` aborts uploads whose
+        simulated duration ``profile.delay × slowdown`` exceeds it.  A
+        failed participation (straggler abort or decode-rejected corrupt
+        upload) rolls the member's pool state back to its pre-round
+        snapshot and meters the spent bytes as ``up_bytes_wasted``; the
+        ``up_*`` columns cover ACCEPTED uploads only, so partial
+        aggregation reconciles like a survivors-only round.
+        ``kill_step="post_aggregate"`` raises
+        :class:`~repro.fed.faults.ServerKilled` after aggregation with the
+        unfinished round parked in ``self._pending`` (resumed via
+        :meth:`_finish_round`)."""
+        from repro.fed.faults import NO_FAULTS, ServerKilled, straggler_ids
         from repro.fed.server import ClientUpdate
 
+        fsched = faults if faults is not None else NO_FAULTS
         if staleness is None:
             staleness = np.zeros((len(cohort),), np.int64)
 
@@ -688,18 +711,36 @@ class FedWireChannel:
                 self._last_sync[int(cid)] = log.head
             catchup = (down_bytes, down_m, down_a)
 
+        # at-risk members (stragglers to abort, uploads to corrupt) get a
+        # pre-round snapshot: a failed participation must leave residual/
+        # momentum/rng bit-identical to never having run
+        delays = {int(c): self.pool.profile_of(int(c)).delay for c in cohort}
+        stragglers = straggler_ids(
+            fsched, round_idx, cohort, delays, straggler_timeout
+        )
+        corrupts = fsched.corrupts_at(round_idx) & {int(c) for c in cohort}
+        at_risk = sorted(stragglers | corrupts)
+        snap = self.pool.snapshot_clients(at_risk) if at_risk else None
+
         tel = self.telemetry
         tel.metrics.gauge("fed/cohort_size", len(cohort), round=round_idx)
         with tel.span("select_quantize", round=round_idx, cohort=len(cohort)):
             result = self.pool.run_cohort(round_idx, cohort, start_params)
             tel.fence(result.losses if hasattr(result, "losses") else None)
 
-        uploads, up_bytes = [], 0
+        uploads, blob_len, wasted = [], {}, 0
         with tel.span("encode", round=round_idx, cohort=len(cohort)):
             for i, cid in enumerate(result.client_ids):
                 wire = self.server.up_wire(result.rates[i], round_idx)
                 blob = wire.pack(result.ctrees[i])
-                up_bytes += len(blob)
+                if int(cid) in stragglers:
+                    # timed out mid-upload: the work and bytes are spent,
+                    # but the server never sees them
+                    wasted += len(blob)
+                    continue
+                if int(cid) in corrupts:
+                    blob = fsched.corrupt_blob(blob, round_idx, int(cid))
+                blob_len[int(cid)] = len(blob)
                 uploads.append(
                     ClientUpdate(
                         client_id=cid, blob=blob, rate=result.rates[i],
@@ -707,36 +748,82 @@ class FedWireChannel:
                     )
                 )
         info = self.server.receive(uploads, round_idx)
-        bc = self.server.broadcast(round_idx)
+        accepted = [int(c) for c in info["accepted"]]
+        rejected = [int(c) for c in info["rejected"]]
+        up_bytes = sum(blob_len[c] for c in accepted)
+        wasted += sum(blob_len[c] for c in rejected)
+        failed = sorted(stragglers | set(rejected))
+        if snap is not None and failed:
+            self.pool.restore_clients(snap, only=failed)
+        acc_set = set(accepted)
+        acc_pos = [
+            i for i, c in enumerate(result.client_ids) if int(c) in acc_set
+        ]
+        pending = {
+            "round_idx": int(round_idx),
+            "cohort": [int(c) for c in cohort],
+            "accepted": accepted,
+            "rejected": rejected,
+            "stragglers": sorted(stragglers),
+            "up_bytes": int(up_bytes),
+            "up_bytes_wasted": int(wasted),
+            "up_bits_measured": float(info["up_bits_measured"]),
+            "up_bits_analytic": float(
+                np.sum(np.asarray(result.bits_analytic)[acc_pos])
+            ) if acc_pos else 0.0,
+            "loss": float(
+                np.mean(np.asarray(result.losses)[acc_pos])
+            ) if acc_pos else float("nan"),
+            "update_norm": float(info["update_norm"]),
+            "weights": [float(w) for w in info["weights"]],
+            "staleness": [int(s) for s in staleness],
+            "catchup": catchup,
+        }
+        if kill_step == "post_aggregate":
+            self._pending = pending
+            raise ServerKilled(round_idx, "post_aggregate")
+        return self._finish_round(pending)
 
-        recipients = len(cohort)
-        if catchup is None:
+    def _finish_round(self, pending: dict) -> dict:
+        """Broadcast + ledger entry for an aggregated round — the second
+        half of :meth:`round_exchange`, callable on its own to resume a
+        round interrupted by a ``post_aggregate`` server kill."""
+        self._pending = None
+        round_idx = pending["round_idx"]
+        bc = self.server.broadcast(round_idx)
+        recipients = len(pending["cohort"])
+        if pending["catchup"] is None:
             down_bytes = len(bc.blob) * recipients
             down_m = bc.bits_measured * recipients
             down_a = bc.bits_analytic * recipients
         else:
-            down_bytes, down_m, down_a = catchup
+            down_bytes, down_m, down_a = pending["catchup"]
         self.ledger.record(
             RoundRecord(
                 round=round_idx,
-                cohort=tuple(int(c) for c in cohort),
-                up_bytes=up_bytes,
-                up_bits_measured=info["up_bits_measured"],
-                up_bits_analytic=float(np.sum(result.bits_analytic)),
+                cohort=tuple(pending["accepted"]),
+                up_bytes=pending["up_bytes"],
+                up_bits_measured=pending["up_bits_measured"],
+                up_bits_analytic=pending["up_bits_analytic"],
                 down_bytes=down_bytes,
                 down_bits_measured=down_m,
                 down_bits_analytic=down_a,
                 down_recipients=recipients,
+                up_bytes_wasted=pending["up_bytes_wasted"],
             )
         )
         return {
             "round": round_idx,
-            "loss": float(np.mean(result.losses)),
-            "update_norm": info["update_norm"],
-            "staleness": [int(s) for s in staleness],
-            "weights": [float(w) for w in info["weights"]],
-            "up_bytes": up_bytes,
+            "loss": pending["loss"],
+            "update_norm": pending["update_norm"],
+            "staleness": pending["staleness"],
+            "weights": pending["weights"],
+            "up_bytes": pending["up_bytes"],
             "down_bytes": down_bytes,
+            "accepted": pending["accepted"],
+            "rejected": pending["rejected"],
+            "stragglers": pending["stragglers"],
+            "up_bytes_wasted": pending["up_bytes_wasted"],
         }
 
     def bits(self, rate: Optional[float] = None,

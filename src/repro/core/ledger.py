@@ -51,6 +51,12 @@ class RoundRecord:
     down_bits_measured: float
     down_bits_analytic: float
     down_recipients: int
+    # bytes clients sent that the server never aggregated — aborted
+    # (straggler) uploads and corrupt buffers the decode rejected.  Kept
+    # OUT of up_bytes/up_bits_* so measured-vs-Eq.1/Eq.5 reconcile still
+    # balances in rounds with dropouts: the accepted-traffic columns
+    # account only for accepted traffic, and the waste is metered here.
+    up_bytes_wasted: int = 0
 
     @property
     def total_bytes(self) -> int:
@@ -98,6 +104,7 @@ class BandwidthLedger:
             "rounds": len(self.records),
             "up_bytes": sum(r.up_bytes for r in self.records),
             "down_bytes": sum(r.down_bytes for r in self.records),
+            "up_bytes_wasted": sum(r.up_bytes_wasted for r in self.records),
             "up_bits_measured": sum(r.up_bits_measured for r in self.records),
             "up_bits_analytic": sum(r.up_bits_analytic for r in self.records),
             "down_bits_measured": sum(r.down_bits_measured for r in self.records),
@@ -114,6 +121,12 @@ class BandwidthLedger:
         percent of slack is expected at paper-scale tensors and more on tiny
         test leaves.  Zero-traffic directions (e.g. dense-free skip rounds)
         reconcile trivially.
+
+        Rounds with dropouts balance because the ``up_*`` columns meter
+        ACCEPTED uploads only: bytes from clients that missed the straggler
+        deadline or whose buffers failed decode live in ``up_bytes_wasted``
+        and are never compared against the Eq. 1 prediction (which, like
+        the aggregation itself, covers only the survivors).
         """
         for r in self.records:
             for side in ("up", "down"):
@@ -131,8 +144,9 @@ class BandwidthLedger:
 
     def history(self) -> dict:
         """Column-major view for JSON dumps / plotting."""
-        cols = ("up_bytes", "down_bytes", "up_bits_measured",
-                "up_bits_analytic", "down_bits_measured", "down_bits_analytic")
+        cols = ("up_bytes", "down_bytes", "up_bytes_wasted",
+                "up_bits_measured", "up_bits_analytic",
+                "down_bits_measured", "down_bits_analytic")
         out = {c: [getattr(r, c) for r in self.records] for c in cols}
         out["round"] = [r.round for r in self.records]
         out["cohort_size"] = [len(r.cohort) for r in self.records]

@@ -9,14 +9,32 @@ codec/wire stack:
   :mod:`repro.fed.clients`    ClientPool — partial participation over
                               heterogeneous client profiles, each cohort
                               one vmapped/``lax.scan`` step
-  :mod:`repro.fed.scheduler`  RoundScheduler — sync and async/stale rounds
+  :mod:`repro.fed.scheduler`  RoundScheduler — sync and async/stale rounds,
+                              dropout/rejoin + straggler timeouts
+  :mod:`repro.fed.faults`     FaultSchedule — deterministic, seeded fault
+                              injection (drop/slow/corrupt/kill_server)
+  :mod:`repro.fed.checkpoint` save/restore the WHOLE federation state,
+                              bit-identical resume (mid-round included)
   :mod:`repro.fed.ledger`     BandwidthLedger — bidirectional measured vs
                               analytic (Eq. 1/Eq. 5) byte accounting
 
 Entry points: ``python -m repro.launch.fed`` (CLI) and
 ``examples/federated_wire.py`` (minimal script).
 """
-from repro.fed.clients import ClientPool, ClientProfile, CohortResult
+from repro.fed.checkpoint import restore_fed_state, save_fed_state
+from repro.fed.clients import (
+    CLIENT_STORES,
+    ClientPool,
+    ClientProfile,
+    CohortResult,
+    SpilledClientStore,
+)
+from repro.fed.faults import (
+    KILL_STEPS,
+    NO_FAULTS,
+    FaultSchedule,
+    ServerKilled,
+)
 from repro.fed.ledger import BandwidthLedger, RoundRecord
 from repro.fed.scheduler import RoundScheduler
 from repro.fed.server import (
@@ -31,12 +49,19 @@ __all__ = [
     "AGGREGATORS",
     "BandwidthLedger",
     "Broadcast",
+    "CLIENT_STORES",
     "ClientPool",
     "ClientProfile",
     "ClientUpdate",
     "CohortResult",
+    "FaultSchedule",
+    "KILL_STEPS",
+    "NO_FAULTS",
     "ParameterServer",
     "RoundRecord",
     "RoundScheduler",
-    "staleness_weights",
+    "ServerKilled",
+    "SpilledClientStore",
+    "restore_fed_state",
+    "save_fed_state",
 ]

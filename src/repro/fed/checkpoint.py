@@ -1,0 +1,224 @@
+"""Whole-federation checkpointing: kill the server, restart, continue
+bit-identically (DESIGN.md §14).
+
+``repro.checkpoint.io`` snapshots a *trainer* — params plus one replicated
+optimizer/compressor state.  A federated run is a bigger closure: master
+weights W, the replica Ŵ, the server-side downstream residual/rng, the
+DeltaLog (replica + held blob window), every client's optimizer +
+compressor state, the scheduler's staleness snapshot ring and rejoin
+bookkeeping, the channel's per-client sync horizon, the full bandwidth
+ledger, and — for a mid-round kill — the aggregated-but-unbroadcast
+pending round.  :func:`save_fed_state` captures ALL of it into one
+compressed ``.npz``; :func:`restore_fed_state` writes it back into a
+freshly-built scheduler of the same spec, after which
+``resume_pending()`` + ``run(..., start_round=...)`` continues the
+trajectory bit-for-bit (``tests/test_checkpoint_resume.py`` pins this
+against an uninterrupted run, ledger totals and DeltaLog contents
+included).
+
+Array payloads ride the same npz + '/'-joined-path layout as
+``repro.checkpoint.io`` (bfloat16 as uint16 bit patterns); everything
+non-array — round counters, ledger rows, fault bookkeeping, the pending
+round — is one JSON blob under ``__fedmeta__``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import _flatten_with_paths
+from repro.core.ledger import BandwidthLedger, RoundRecord
+from repro.core.policy import CompressorState
+
+PyTree = Any
+
+FORMAT = "fedckpt-v1"
+_BF16_TAG = "__bf16__"
+
+
+def _fixed_tree(sched) -> Dict[str, Any]:
+    """The checkpoint's template-shaped half: every array whose shape is
+    determined by the run spec (so restore can validate against a freshly
+    built scheduler).  Variable-size payloads — snapshot ring, DeltaLog
+    window — are keyed separately."""
+    server = sched.server
+    down = server._down_state
+    return {
+        "server": {"params": server.params, "estimate": server.estimate},
+        "down": {"residual": down.residual, "rng": down.rng, "step": down.step},
+        "pool": sched.pool.export_state(),
+    }
+
+
+def _key_of(pathkeys) -> str:
+    return "/".join(
+        k.key if hasattr(k, "key") else str(getattr(k, "idx", k))
+        for k in pathkeys
+    )
+
+
+def save_fed_state(path: str, sched, rounds_done: Optional[int] = None) -> None:
+    """Checkpoint a :class:`~repro.fed.scheduler.RoundScheduler` (server +
+    pool + channel + log) to ``path``.  ``rounds_done`` records how many
+    rounds completed (a mid-round kill counts its round as NOT done —
+    ``resume_pending`` finishes it after restore)."""
+    arrays: Dict[str, np.ndarray] = {}
+    bf16 = []
+
+    def put(key: str, value) -> None:
+        arr = np.asarray(jax.device_get(value))
+        if arr.dtype == jnp.bfloat16:
+            arrays[key] = arr.view(np.uint16)
+            bf16.append(key)
+        else:
+            arrays[key] = arr
+
+    for k, v in _flatten_with_paths(_fixed_tree(sched)).items():
+        put(f"fixed/{k}", v)
+
+    for k, snap in enumerate(sched._snapshots):
+        for i, leaf in enumerate(jax.tree.leaves(snap)):
+            put(f"snap/{k}/{i}", leaf)
+
+    log = getattr(sched.server, "delta_log", None)
+    log_meta = None
+    if log is not None:
+        st = log.state_dict()
+        for i, rep in enumerate(st["replica"]):
+            put(f"log/replica/{i}", rep)
+        for j, (_, blob, _) in enumerate(st["entries"]):
+            arrays[f"log/blob/{j}"] = np.frombuffer(blob, np.uint8)
+        log_meta = {
+            "head": st["head"],
+            "entry_rounds": [r for r, _, _ in st["entries"]],
+            "entry_bits": [b for _, _, b in st["entries"]],
+        }
+
+    ch = sched.channel
+    meta = {
+        "format": FORMAT,
+        "bf16": bf16,
+        "rounds_done": rounds_done,
+        "n_snapshots": len(sched._snapshots),
+        "last_download": {str(k): int(v) for k, v in sched._last_download.items()},
+        "failed": {str(k): int(v) for k, v in sched._failed.items()},
+        "kills_fired": sorted([int(r), s] for r, s in sched._kills_fired),
+        "last_sync": {str(k): int(v) for k, v in ch._last_sync.items()},
+        "pending": ch._pending,
+        "ledger": [dataclasses.asdict(rec) for rec in ch.ledger.records],
+        "log": log_meta,
+    }
+    arrays["__fedmeta__"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez_compressed(path, **arrays)
+
+
+def restore_fed_state(path: str, sched) -> dict:
+    """Restore :func:`save_fed_state` output into ``sched`` — a freshly
+    built scheduler of the SAME run spec (shapes are validated against its
+    template state).  Returns the checkpoint meta (``rounds_done``,
+    whether a ``pending`` mid-round payload was restored, ...)."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__fedmeta__"]).decode())
+        data = {k: z[k] for k in z.files if k != "__fedmeta__"}
+    if meta.get("format") != FORMAT:
+        raise ValueError(
+            f"{path} is not a {FORMAT} checkpoint (format={meta.get('format')!r})"
+        )
+    bf16 = set(meta.get("bf16", []))
+
+    def get(key: str) -> np.ndarray:
+        if key not in data:
+            raise ValueError(f"checkpoint {path} is missing array {key!r}")
+        arr = data[key]
+        return arr.view(jnp.bfloat16) if key in bf16 else arr
+
+    # -- template-shaped half: restore into the fresh scheduler's structure
+    tmpl = _fixed_tree(sched)
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(tmpl)
+    new_leaves = []
+    for pathkeys, leaf in leaves_paths:
+        key = f"fixed/{_key_of(pathkeys)}"
+        arr = get(key)
+        if tuple(np.shape(arr)) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch at {key}: checkpoint {np.shape(arr)} vs "
+                f"template {np.shape(leaf)}"
+            )
+        new_leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    server = sched.server
+    server.params = jax.tree.map(
+        lambda t, a: jnp.asarray(a, t.dtype),
+        tmpl["server"]["params"], tree["server"]["params"],
+    )
+    server.estimate = jax.tree.map(
+        lambda a: jnp.asarray(a, jnp.float32), tree["server"]["estimate"]
+    )
+    down = tree["down"]
+    server._down_state = CompressorState(
+        residual=jax.tree.map(jnp.asarray, down["residual"]),
+        rng=jnp.asarray(down["rng"]),
+        step=jnp.asarray(down["step"]),
+    )
+    sched.pool.import_state(tree["pool"])
+
+    # -- staleness snapshot ring (saved newest-first, deque iteration order)
+    est_leaves, est_def = jax.tree.flatten(server.estimate)
+    sched._snapshots.clear()
+    for k in range(int(meta["n_snapshots"])):
+        leaves = [
+            jnp.asarray(get(f"snap/{k}/{i}"), jnp.float32)
+            for i in range(len(est_leaves))
+        ]
+        sched._snapshots.append(jax.tree.unflatten(est_def, leaves))
+
+    # -- DeltaLog: replica set directly, window entries re-decoded from
+    #    their stored bytes through the same down-wire contract
+    log = getattr(server, "delta_log", None)
+    if (log is None) != (meta["log"] is None):
+        raise ValueError(
+            "checkpoint and scheduler disagree on delta_horizon "
+            f"(checkpoint log: {meta['log'] is not None}, "
+            f"scheduler log: {log is not None})"
+        )
+    if log is not None:
+        lm = meta["log"]
+        log.restore(
+            {
+                "head": lm["head"],
+                "replica": [
+                    get(f"log/replica/{i}") for i in range(len(log._replica))
+                ],
+                "entries": [
+                    (r, get(f"log/blob/{j}").tobytes(), b)
+                    for j, (r, b) in enumerate(
+                        zip(lm["entry_rounds"], lm["entry_bits"])
+                    )
+                ],
+            },
+            wire_for_round=server.down_wire,
+        )
+
+    # -- bookkeeping: rejoin maps, fired kills, sync horizon, ledger, pending
+    sched._last_download = {
+        int(k): int(v) for k, v in meta["last_download"].items()
+    }
+    sched._failed = {int(k): int(v) for k, v in meta["failed"].items()}
+    sched._kills_fired = {(int(r), str(s)) for r, s in meta["kills_fired"]}
+    ch = sched.channel
+    ch._last_sync = {int(k): int(v) for k, v in meta["last_sync"].items()}
+    ch._pending = meta["pending"]
+    ch.ledger = BandwidthLedger()
+    for rec in meta["ledger"]:
+        rec = dict(rec)
+        rec["cohort"] = tuple(int(c) for c in rec["cohort"])
+        ch.ledger.record(RoundRecord(**rec))
+    return meta

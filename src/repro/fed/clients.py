@@ -24,8 +24,11 @@ its cohort (and nothing else) from ``np.random.default_rng([s, r])``.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import os
+import tempfile
 from functools import partial
-from typing import Any, Callable, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +73,117 @@ def stack_clients(tree: PyTree, k: int) -> PyTree:
     )
 
 
+CLIENT_STORES = ("device", "host", "memmap")
+
+
+class SpilledClientStore:
+    """Per-client pool state spilled OFF the accelerator (DESIGN.md §14).
+
+    ``device`` pools hold every client's optimizer + compressor state as
+    stacked device arrays — O(n_clients · model) device memory, the wall
+    between the 10–100 client regime and the paper's 10k–1M populations.
+    This store keeps the same leading-N layout in plain host numpy
+    (``kind="host"``) or lazily-allocated on-disk ``.npy`` memmaps
+    (``kind="memmap"``): the zero-filled state of never-sampled clients
+    costs no resident pages, and a cohort tile's rows page in/out on
+    gather/scatter.  Zero-initialized leaves (momentum, residual, step)
+    are never written at init, so a fresh 1M-client memmap pool is a
+    handful of sparse files plus the (N, 2) RNG key table.
+    """
+
+    def __init__(
+        self,
+        opt_row: PyTree,
+        comp_row: CompressorState,
+        rng_rows: jax.Array,
+        *,
+        n_clients: int,
+        kind: str = "host",
+        directory: Optional[str] = None,
+    ) -> None:
+        if kind not in ("host", "memmap"):
+            raise ValueError(f"spilled store kind must be host|memmap, got {kind!r}")
+        self.kind = kind
+        self.n_clients = int(n_clients)
+        if kind == "memmap":
+            directory = directory or tempfile.mkdtemp(prefix="repro-clients-")
+            os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self._n_files = itertools.count()
+        self._opt = jax.tree.map(self._alloc, opt_row)
+        self._residual = jax.tree.map(self._alloc, comp_row.residual)
+        rng_np = np.asarray(jax.device_get(rng_rows))
+        self._rng = self._alloc_raw(rng_np.shape, rng_np.dtype)
+        self._rng[:] = rng_np  # the one leaf that is never zero
+        self._step = self._alloc_raw((self.n_clients,), np.int32)
+
+    def _alloc_raw(self, shape, dtype) -> np.ndarray:
+        if self.kind == "host":
+            return np.zeros(shape, dtype)
+        path = os.path.join(self.directory, f"leaf{next(self._n_files)}.npy")
+        return np.lib.format.open_memmap(path, mode="w+", dtype=dtype,
+                                         shape=shape)
+
+    def _alloc(self, row) -> np.ndarray:
+        row = np.asarray(jax.device_get(row))
+        arr = self._alloc_raw((self.n_clients,) + row.shape, row.dtype)
+        if np.any(row):  # nonzero template → must materialize every row
+            arr[:] = row
+        return arr
+
+    @property
+    def nbytes(self) -> int:
+        """Logical size of the pooled state (memmaps are sparse: resident
+        bytes stay far below this until rows are actually written)."""
+        leaves = jax.tree.leaves((self._opt, self._residual))
+        return int(sum(x.nbytes for x in leaves)
+                   + self._rng.nbytes + self._step.nbytes)
+
+    # ------------------------------------------------------ gather/scatter
+
+    def gather(self, ids: np.ndarray) -> Tuple[PyTree, CompressorState]:
+        """One tile's rows, host → device."""
+        opt_g = jax.tree.map(lambda x: jnp.asarray(x[ids]), self._opt)
+        comp_g = CompressorState(
+            residual=jax.tree.map(lambda x: jnp.asarray(x[ids]), self._residual),
+            rng=jnp.asarray(self._rng[ids]),
+            step=jnp.asarray(self._step[ids]),
+        )
+        return opt_g, comp_g
+
+    def scatter(self, ids: np.ndarray, opt_g: PyTree,
+                comp_g: CompressorState) -> None:
+        """Write a tile's updated rows back (device → host; duplicate ids
+        from tile padding carry identical rows, so last-write-wins is
+        deterministic)."""
+        opt_g, comp_g = jax.device_get((opt_g, comp_g))
+        jax.tree.map(lambda full, upd: full.__setitem__(ids, upd),
+                     self._opt, opt_g)
+        jax.tree.map(lambda full, upd: full.__setitem__(ids, upd),
+                     self._residual, comp_g.residual)
+        self._rng[ids] = comp_g.rng
+        self._step[ids] = comp_g.step
+
+    # ------------------------------------------------------- checkpointing
+
+    def export(self) -> Dict[str, Any]:
+        """Materialized host copies of the full pooled state."""
+        return {
+            "opt": jax.tree.map(np.array, self._opt),
+            "residual": jax.tree.map(np.array, self._residual),
+            "rng": np.array(self._rng),
+            "step": np.array(self._step),
+        }
+
+    def import_(self, state: Dict[str, Any]) -> None:
+        jax.tree.map(lambda full, v: full.__setitem__(slice(None), v),
+                     self._opt, state["opt"])
+        jax.tree.map(lambda full, v: full.__setitem__(slice(None), v),
+                     self._residual, state["residual"])
+        self._rng[:] = state["rng"]
+        self._step[:] = state["step"]
+
+
 @dataclasses.dataclass(eq=False)  # id-hash → usable as a jit static arg
 class ClientPool:
     model: Model
@@ -86,12 +200,31 @@ class ClientPool:
     # stacked per-leaf pytree — gather/scatter and the vmapped group step
     # are layout-agnostic, so nothing else changes.
     fast: Optional[bool] = None
+    # streaming/tiled cohort executor (DESIGN.md §14): cap the member axis
+    # of one compiled step at `cohort_tile` (None → whole profile group in
+    # one vmap, the original behavior).  Short tiles are padded by
+    # repeating their last member, so every tile shares ONE compiled
+    # shape; padded outputs are discarded and padded scatters rewrite the
+    # identical row.  Peak per-round device state is O(tile), not
+    # O(cohort).
+    cohort_tile: Optional[int] = None
+    # where the pooled per-client state lives between rounds: "device"
+    # (stacked jnp arrays, the original layout), "host" (numpy), or
+    # "memmap" (on-disk, lazily allocated — the 10k–1M client regime)
+    store: str = "device"
+    store_dir: Optional[str] = None  # memmap backing directory
 
     def __post_init__(self) -> None:
         if self.n_clients < 1:
             raise ValueError("need at least one client")
         if self.fast is not None and self.fast != self.policy.fast:
             self.policy = dataclasses.replace(self.policy, fast=self.fast)
+        if self.store not in CLIENT_STORES:
+            raise ValueError(
+                f"unknown client store {self.store!r}; have {CLIENT_STORES}"
+            )
+        if self.cohort_tile is not None and self.cohort_tile < 1:
+            raise ValueError(f"cohort_tile must be >= 1, got {self.cohort_tile}")
         for prof in self.profiles:
             if prof.delay < 1:
                 raise ValueError(
@@ -101,6 +234,7 @@ class ClientPool:
         self._resolved: Optional[ResolvedPolicy] = None
         self._opt_states: PyTree = None
         self._comp_state: Optional[CompressorState] = None
+        self._spill: Optional[SpilledClientStore] = None
         self._ref_leaf_shape: Optional[Tuple[int, ...]] = None
 
     # ------------------------------------------------------------ lifecycle
@@ -114,17 +248,44 @@ class ClientPool:
         return self._resolved
 
     def init(self, params: PyTree, rng: Optional[jax.Array] = None) -> None:
-        """Allocate per-client optimizer/compressor state (leading N axis)."""
+        """Allocate per-client optimizer/compressor state (leading N axis):
+        stacked device arrays for the "device" store, one
+        :class:`SpilledClientStore` otherwise."""
         if rng is None:
             rng = jax.random.PRNGKey(self.seed)
         resolved = self.resolved(params)
-        self._opt_states = stack_clients(self.optimizer.init(params), self.n_clients)
-        comp = resolved.init_state(params)
-        self._comp_state = CompressorState(
-            residual=stack_clients(comp.residual, self.n_clients),
-            rng=jax.random.split(rng, self.n_clients),
-            step=jnp.zeros((self.n_clients,), jnp.int32),
-        )
+        opt_row = self.optimizer.init(params)
+        comp_row = resolved.init_state(params)
+        rng_rows = jax.random.split(rng, self.n_clients)
+        if self.store == "device":
+            self._opt_states = stack_clients(opt_row, self.n_clients)
+            self._comp_state = CompressorState(
+                residual=stack_clients(comp_row.residual, self.n_clients),
+                rng=rng_rows,
+                step=jnp.zeros((self.n_clients,), jnp.int32),
+            )
+            self._spill = None
+        else:
+            self._spill = SpilledClientStore(
+                opt_row, comp_row, rng_rows, n_clients=self.n_clients,
+                kind=self.store, directory=self.store_dir,
+            )
+            self._opt_states = self._comp_state = None
+
+    @property
+    def initialized(self) -> bool:
+        return self._comp_state is not None or self._spill is not None
+
+    def state_nbytes(self) -> int:
+        """Logical bytes of the pooled per-client state, all clients."""
+        if self._spill is not None:
+            return self._spill.nbytes
+        if self._comp_state is None:
+            raise RuntimeError("ClientPool.init(params) must run first")
+        leaves = jax.tree.leaves(
+            (self._opt_states, self._comp_state.residual)
+        ) + [self._comp_state.rng, self._comp_state.step]
+        return int(sum(x.nbytes for x in leaves))
 
     def profile_of(self, client_id: int) -> ClientProfile:
         return self.profiles[client_id % len(self.profiles)]
@@ -153,11 +314,15 @@ class ClientPool:
         a leading member axis aligned with ``cohort_ids`` (async rounds:
         stale members start from older estimates).
 
-        Members are grouped by profile; each group is one jitted
-        vmap/scan step.  Per-client optimizer and compressor state is
-        gathered for the cohort and scattered back afterwards.
+        Members are grouped by profile; each group runs as jitted
+        vmap/scan steps over tiles of at most ``cohort_tile`` members
+        (the whole group at once when ``cohort_tile`` is None — the
+        original one-giant-vmap layout).  Per-client optimizer and
+        compressor state is gathered per tile and scattered back
+        afterwards, so a spilled store only ever materializes one tile
+        on device.
         """
-        if self._comp_state is None:
+        if not self.initialized:
             raise RuntimeError("ClientPool.init(params) must run first")
         ids = np.asarray(cohort_ids, np.int32)
         k_total = ids.size
@@ -172,34 +337,48 @@ class ClientPool:
             member_pos = np.nonzero(ids % len(self.profiles) == prof_i)[0]
             if member_pos.size == 0:
                 continue
-            group_ids = ids[member_pos]
-            gidx = jnp.asarray(group_ids)
-            if stacked_start:
-                group_start = jax.tree.map(
-                    lambda x: x[jnp.asarray(member_pos)], start_params
-                )
-            else:
-                group_start = start_params  # broadcast inside the vmapped step
-            opt_g, comp_g = self._gather_states(
-                self._opt_states, self._comp_state, gidx
-            )
-            batch = self._group_batch(round_idx, group_ids, prof.delay)
             rates = resolved.rates(prof.sparsity, round_idx)
-            ctree_g, opt_g, comp_g, loss_g, bits_g = self._group_step(
-                group_start, opt_g, comp_g, batch,
-                jnp.asarray(round_idx * prof.delay, jnp.int32),
-                n_delay=prof.delay, rates=rates, shared_start=not stacked_start,
+            tile = (
+                member_pos.size if self.cohort_tile is None
+                else min(self.cohort_tile, member_pos.size)
             )
-            self._opt_states, self._comp_state = self._scatter_states(
-                self._opt_states, self._comp_state, gidx, opt_g, comp_g
-            )
-            # one device→host transfer for the whole group, then cheap
-            # numpy slicing per member (pack works on numpy anyway)
-            ctree_np, loss_np, bits_np = jax.device_get((ctree_g, loss_g, bits_g))
-            for j, pos in enumerate(member_pos):
-                ctrees[int(pos)] = jax.tree.map(lambda x: x[j], ctree_np)
-                losses[int(pos)] = loss_np[j]
-                bits[int(pos)] = bits_np[j]
+            for t0 in range(0, member_pos.size, tile):
+                pos_t = member_pos[t0:t0 + tile]
+                pad = tile - pos_t.size
+                # pad short (final) tiles by repeating the last member so
+                # every tile traces ONE shape; the duplicate rows compute
+                # identical values, their scatter rewrites the same row,
+                # and their outputs are discarded below
+                pos_pad = (
+                    np.concatenate([pos_t, np.repeat(pos_t[-1:], pad)])
+                    if pad else pos_t
+                )
+                group_ids = ids[pos_pad]
+                gidx = jnp.asarray(group_ids)
+                if stacked_start:
+                    group_start = jax.tree.map(
+                        lambda x: x[jnp.asarray(pos_pad)], start_params
+                    )
+                else:
+                    group_start = start_params  # broadcast inside the vmap
+                opt_g, comp_g = self._gather(gidx)
+                batch = self._group_batch(round_idx, group_ids, prof.delay)
+                ctree_g, opt_g, comp_g, loss_g, bits_g = self._group_step(
+                    group_start, opt_g, comp_g, batch,
+                    jnp.asarray(round_idx * prof.delay, jnp.int32),
+                    n_delay=prof.delay, rates=rates,
+                    shared_start=not stacked_start,
+                )
+                self._scatter(gidx, opt_g, comp_g)
+                # one device→host transfer for the whole tile, then cheap
+                # numpy slicing per member (pack works on numpy anyway)
+                ctree_np, loss_np, bits_np = jax.device_get(
+                    (ctree_g, loss_g, bits_g)
+                )
+                for j, pos in enumerate(pos_t):
+                    ctrees[int(pos)] = jax.tree.map(lambda x: x[j], ctree_np)
+                    losses[int(pos)] = loss_np[j]
+                    bits[int(pos)] = bits_np[j]
 
         profs = [self.profile_of(int(c)) for c in ids]
         return CohortResult(
@@ -284,6 +463,90 @@ class ClientPool:
             step=comp_full.step.at[gidx].set(comp_upd.step),
         )
         return opt_full, comp_full
+
+    def _gather(self, gidx) -> Tuple[PyTree, CompressorState]:
+        """Store-dispatching tile gather (device fancy-index vs spill read)."""
+        if self._spill is not None:
+            return self._spill.gather(np.asarray(gidx))
+        return self._gather_states(self._opt_states, self._comp_state, gidx)
+
+    def _scatter(self, gidx, opt_g: PyTree, comp_g: CompressorState) -> None:
+        if self._spill is not None:
+            self._spill.scatter(np.asarray(gidx), opt_g, comp_g)
+            return
+        self._opt_states, self._comp_state = self._scatter_states(
+            self._opt_states, self._comp_state, gidx, opt_g, comp_g
+        )
+
+    # --------------------------------------------------- rollback/checkpoint
+
+    def snapshot_clients(self, ids: Sequence[int]) -> Dict[str, Any]:
+        """Host copies of the named clients' rows, BEFORE a round touches
+        them — the elasticity rollback unit: a client whose participation
+        fails (straggler abort, corrupt upload) is restored from this, so
+        a failed round leaves its residual/momentum/rng bit-identical to
+        never having run (DESIGN.md §14)."""
+        ids = np.asarray(ids, np.int32)
+        if ids.size == 0:
+            return {"ids": ids, "opt": None, "comp": None}
+        opt_g, comp_g = self._gather(jnp.asarray(ids))
+        opt_g, comp_g = jax.device_get((opt_g, comp_g))
+        return {"ids": ids.copy(), "opt": opt_g, "comp": comp_g}
+
+    def restore_clients(self, snap: Dict[str, Any],
+                        only: Optional[Sequence[int]] = None) -> None:
+        """Write snapshotted rows back; ``only`` restricts the restore to a
+        subset of the snapshot's clients (the ones that actually failed)."""
+        ids = np.asarray(snap["ids"], np.int32)
+        if ids.size == 0:
+            return
+        keep = np.arange(ids.size)
+        if only is not None:
+            only_set = {int(c) for c in only}
+            keep = np.asarray(
+                [i for i, c in enumerate(ids) if int(c) in only_set], np.int64
+            )
+            if keep.size == 0:
+                return
+        sel = jnp.asarray(keep)
+        opt_g = jax.tree.map(lambda x: jnp.asarray(x)[sel], snap["opt"])
+        comp = snap["comp"]
+        comp_g = CompressorState(
+            residual=jax.tree.map(lambda x: jnp.asarray(x)[sel], comp.residual),
+            rng=jnp.asarray(comp.rng)[sel],
+            step=jnp.asarray(comp.step)[sel],
+        )
+        self._scatter(jnp.asarray(ids[keep]), opt_g, comp_g)
+
+    def export_state(self) -> Dict[str, Any]:
+        """The full pooled state as host numpy (fed checkpoint payload)."""
+        if not self.initialized:
+            raise RuntimeError("ClientPool.init(params) must run first")
+        if self._spill is not None:
+            return self._spill.export()
+        comp = self._comp_state
+        return {
+            "opt": jax.tree.map(np.asarray, jax.device_get(self._opt_states)),
+            "residual": jax.tree.map(
+                np.asarray, jax.device_get(comp.residual)
+            ),
+            "rng": np.asarray(jax.device_get(comp.rng)),
+            "step": np.asarray(jax.device_get(comp.step)),
+        }
+
+    def import_state(self, state: Dict[str, Any]) -> None:
+        """Restore a full pooled state exported by :meth:`export_state`."""
+        if not self.initialized:
+            raise RuntimeError("ClientPool.init(params) must run first")
+        if self._spill is not None:
+            self._spill.import_(state)
+            return
+        self._opt_states = jax.tree.map(jnp.asarray, state["opt"])
+        self._comp_state = CompressorState(
+            residual=jax.tree.map(jnp.asarray, state["residual"]),
+            rng=jnp.asarray(state["rng"]),
+            step=jnp.asarray(state["step"]),
+        )
 
     def _group_batch(self, round_idx: int, ids: np.ndarray, delay: int) -> PyTree:
         """(K, delay, B, ...) microbatches for one profile group — the same

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any
+from typing import Any, Dict, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.channel import FedWireChannel
 from repro.fed.clients import ClientPool
+from repro.fed.faults import FaultSchedule, ServerKilled
 from repro.fed.server import ParameterServer
 
 PyTree = Any
@@ -47,6 +48,11 @@ class RoundScheduler:
     mode: str = "sync"  # "sync" | "async"
     max_staleness: int = 0
     seed: int = 0
+    # elasticity (DESIGN.md §14): abort uploads whose simulated duration
+    # profile.delay × fault-slowdown exceeds the timeout; inject the
+    # seeded fault schedule (None → failure-free, the original behavior)
+    straggler_timeout: Optional[float] = None
+    faults: Optional[FaultSchedule] = None
 
     def __post_init__(self) -> None:
         if self.mode not in ("sync", "async"):
@@ -56,6 +62,15 @@ class RoundScheduler:
         self.channel = FedWireChannel(server=self.server, pool=self.pool)
         # ring of past replicas Ŵ_{r−s}; entries are immutable pytree refs
         self._snapshots: deque = deque(maxlen=self.max_staleness + 1)
+        # rejoin bookkeeping: the round each client last downloaded a
+        # replica, and the round of its last FAILED participation (cleared
+        # on success) — a rejoining failed client re-enters at staleness
+        # round − last_download instead of the random draw
+        self._last_download: Dict[int, int] = {}
+        self._failed: Dict[int, int] = {}
+        # kill_server faults fire ONCE: the fired set is checkpointed, so
+        # a resumed run sails past the kill that produced its checkpoint
+        self._kills_fired: Set[Tuple[int, str]] = set()
         self.channel.init_state()
 
     @property
@@ -68,12 +83,55 @@ class RoundScheduler:
     def step(self, round_idx: int) -> dict:
         """Sample a cohort, pick (possibly stale) starts, and hand the
         round to the wire channel (run + pack + aggregate + broadcast +
-        meter)."""
+        meter).
+
+        With a fault schedule attached: dropped clients are excluded
+        before download (their pool state, and their replica, stay put);
+        a scheduled server kill raises :class:`ServerKilled` either at the
+        round boundary (``pre_round``) or mid-round after partial
+        aggregation (``post_aggregate`` — finish via
+        :meth:`resume_pending` after restoring a checkpoint)."""
+        kill = None
+        if self.faults is not None:
+            kill = self.faults.kill_at(round_idx)
+            if kill is not None:
+                if (round_idx, kill) in self._kills_fired:
+                    kill = None  # resumed past this kill already
+                else:
+                    self._kills_fired.add((round_idx, kill))
+                    if kill == "pre_round":
+                        raise ServerKilled(round_idx, "pre_round")
+
         self._snapshots.appendleft(self.server.estimate)
         cohort = self.pool.sample_cohort(round_idx, self.cohort_size)
-        staleness = self._draw_staleness(round_idx, cohort.size)
+        dropped = (
+            self.faults.drops_at(round_idx) if self.faults is not None
+            else frozenset()
+        )
+        dropped = sorted(dropped & {int(c) for c in cohort})
+        participants = np.asarray(
+            [c for c in cohort if int(c) not in set(dropped)], np.int64
+        )
+        staleness = self._draw_staleness(round_idx, participants.size)
+        if self.mode == "async" and self._failed:
+            # rejoin semantics: a client whose LAST attempt failed still
+            # holds the replica of its last successful download — override
+            # the random draw with its true staleness (capped by the ring)
+            cap = min(self.max_staleness, len(self._snapshots) - 1)
+            for j, cid in enumerate(participants):
+                if int(cid) in self._failed:
+                    last_dl = self._last_download.get(int(cid))
+                    s = cap if last_dl is None else min(round_idx - last_dl, cap)
+                    staleness[j] = max(0, s)
+        # download bookkeeping happens at round start: every participant
+        # pulls a replica before training (stragglers/corrupt included —
+        # their DOWNLOAD is real even when their upload fails)
+        for cid in dropped:
+            self._failed[int(cid)] = round_idx
+        for cid in participants:
+            self._last_download[int(cid)] = round_idx
 
-        if self.mode == "sync":
+        if self.mode == "sync" or participants.size == 0:
             start = self.server.estimate  # shared: everyone pulls Ŵ_r
         else:
             start = jax.tree.map(
@@ -81,16 +139,50 @@ class RoundScheduler:
                 *[self._snapshots[s] for s in staleness],
             )
 
-        return self.channel.round_exchange(round_idx, cohort, start, staleness)
+        m = self.channel.round_exchange(
+            round_idx, participants, start, staleness,
+            faults=self.faults, straggler_timeout=self.straggler_timeout,
+            kill_step=kill,
+        )
+        m["dropped"] = dropped
+        self._bookkeep_failures(round_idx, m)
+        return m
+
+    def _bookkeep_failures(self, round_idx: int, m: dict) -> None:
+        for cid in m.get("stragglers", ()) or ():
+            self._failed[int(cid)] = round_idx
+        for cid in m.get("rejected", ()) or ():
+            self._failed[int(cid)] = round_idx
+        for cid in m.get("accepted", ()) or ():
+            self._failed.pop(int(cid), None)
+
+    def resume_pending(self) -> Optional[dict]:
+        """Finish a round interrupted by a ``post_aggregate`` kill (the
+        aggregated-but-unbroadcast half survives checkpoint/restore in
+        ``channel._pending``).  Returns the round metrics, or None when
+        nothing is pending."""
+        pending = self.channel._pending
+        if pending is None:
+            return None
+        m = self.channel._finish_round(pending)
+        m["dropped"] = sorted(
+            self.faults.drops_at(m["round"]) if self.faults is not None
+            else ()
+        )
+        self._bookkeep_failures(m["round"], m)
+        return m
 
     # ------------------------------------------------------------- full run
 
-    def run(self, n_rounds: int, log_every: int = 0) -> dict:
-        """Drive ``n_rounds`` rounds; returns a column-major history merged
-        with the ledger's byte accounting."""
+    def run(self, n_rounds: int, log_every: int = 0,
+            start_round: int = 0) -> dict:
+        """Drive rounds ``start_round..n_rounds−1``; returns a column-major
+        history merged with the ledger's byte accounting.  A resumed run
+        passes ``start_round`` = the next round its checkpoint owes (after
+        :meth:`resume_pending` for mid-round checkpoints)."""
         hist: dict = {"round": [], "loss": [], "update_norm": [],
                       "mean_staleness": []}
-        for r in range(n_rounds):
+        for r in range(start_round, n_rounds):
             m = self.step(r)
             hist["round"].append(r)
             hist["loss"].append(m["loss"])

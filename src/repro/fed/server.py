@@ -174,43 +174,67 @@ class ParameterServer:
     # ------------------------------------------------------------ receiving
 
     def receive(self, uploads: Sequence[ClientUpdate], round_idx: int) -> dict:
-        """Decode every upload from bytes, aggregate, apply to W.
+        """Decode every upload from bytes, aggregate the survivors, apply.
+
+        Corrupt/truncated buffers (``Wire.unpack`` raises ``ValueError``)
+        are REJECTED per upload, not fatal: aggregation weights are
+        computed over the decoded survivors only, so a round with rejects
+        is bitwise identical to receiving just the survivors — partial
+        aggregation IS survivors-only aggregation by construction (the
+        elasticity contract ``tests/test_faults.py`` pins).  A round with
+        zero survivors applies a zero update.  Decode failures touch no
+        server state: params/estimate/residual advance only by accepted
+        content.
 
         Returns the round's upstream accounting:
-        ``{"up_bits_measured", "weights", "update_norm"}``.
+        ``{"up_bits_measured", "weights", "update_norm", "accepted",
+        "rejected"}`` — bit accounting covers ACCEPTED uploads only (the
+        channel meters rejected bytes as wasted).
         """
-        if not uploads:
-            raise ValueError("receive() needs at least one client upload")
-        weights = AGGREGATORS[self.aggregator](uploads, self.staleness_beta)
         measured = 0.0
-        agg: Optional[PyTree] = None
+        decoded: list = []
+        rejected: list = []
         tel = self.telemetry
         with tel.span("decode", round=round_idx, uploads=len(uploads)):
-            for u, w in zip(uploads, weights):
+            for u in uploads:
                 wire = self.up_wire(u.rate, round_idx)
-                comps = wire.unpack_compressed(u.blob)
+                try:
+                    comps = wire.unpack_compressed(u.blob)
+                except ValueError:
+                    rejected.append(int(u.client_id))
+                    continue
                 measured += sum(
                     float(l.nbits)
                     for l in jax.tree.leaves(
                         comps, is_leaf=lambda x: isinstance(x, LeafCompressed)
                     )
                 )
-                update = wire.dense_of(comps)
+                decoded.append((u, wire.dense_of(comps)))
+            survivors = [u for u, _ in decoded]
+            weights = (
+                AGGREGATORS[self.aggregator](survivors, self.staleness_beta)
+                if survivors else np.zeros((0,), np.float64)
+            )
+            agg: Optional[PyTree] = None
+            for (u, update), w in zip(decoded, weights):
                 scaled = jax.tree.map(lambda x: float(w) * np.asarray(x, np.float64), update)
                 agg = scaled if agg is None else jax.tree.map(np.add, agg, scaled)
         with tel.span("apply", round=round_idx):
-            self.params = jax.tree.map(
-                lambda p, u: (p.astype(jnp.float32) + jnp.asarray(u, jnp.float32)).astype(p.dtype),
-                self.params, agg,
-            )
-            tel.fence(self.params)
-        norm = float(
+            if agg is not None:
+                self.params = jax.tree.map(
+                    lambda p, u: (p.astype(jnp.float32) + jnp.asarray(u, jnp.float32)).astype(p.dtype),
+                    self.params, agg,
+                )
+                tel.fence(self.params)
+        norm = 0.0 if agg is None else float(
             np.sqrt(sum(float(np.sum(np.square(x))) for x in jax.tree.leaves(agg)))
         )
         return {
             "up_bits_measured": measured,
             "weights": weights,
             "update_norm": norm,
+            "accepted": [int(u.client_id) for u in survivors],
+            "rejected": rejected,
         }
 
     # ---------------------------------------------------------- broadcasting

@@ -27,6 +27,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import tempfile
 import time
 
 import jax
@@ -80,7 +81,30 @@ def main(argv=None):
         # span and ingests the ledger into round-tagged gauges at the end
         _, hist = run.run(spec.rounds, log_every=args.log_every)
     else:
-        hist = sched.run(spec.rounds, log_every=args.log_every)
+        from repro.fed.checkpoint import restore_fed_state
+        from repro.fed.faults import ServerKilled
+
+        hist, start = None, 0
+        while hist is None:
+            try:
+                hist = sched.run(spec.rounds, log_every=args.log_every,
+                                 start_round=start)
+            except ServerKilled as e:
+                # a scheduled --faults kill fired: checkpoint the whole
+                # federation, rebuild from scratch, restore, and continue
+                # — the CLI surface of bit-identical mid-round resume
+                fd, ckpt = tempfile.mkstemp(suffix=".fedckpt.npz")
+                os.close(fd)
+                print(f"server killed at round {e.round_idx} ({e.step}); "
+                      f"checkpoint → restore → resume")
+                run.checkpoint(sched, ckpt, rounds_done=e.round_idx)
+                run = build_run(spec)
+                sched = run.init()
+                restore_fed_state(ckpt, sched)
+                os.unlink(ckpt)
+                pool, server = sched.pool, sched.server
+                pending = sched.resume_pending()
+                start = e.round_idx + (1 if pending is not None else 0)
     dt = time.time() - t0
     sched.ledger.reconcile(rel=0.1)
     t = sched.ledger.totals()
@@ -91,10 +115,11 @@ def main(argv=None):
         for rec in sched.ledger.records
         for c in rec.cohort
     )
-    print(
-        f"done in {dt:.1f}s ({spec.rounds / dt:.2f} rounds/s): "
+    loss_arc = (
         f"loss {hist['loss'][0]:.4f} → {hist['loss'][-1]:.4f}"
+        if hist["loss"] else "loss n/a (every round predates the resume)"
     )
+    print(f"done in {dt:.1f}s ({spec.rounds / dt:.2f} rounds/s): {loss_arc}")
     print(
         f"wire: up {t['up_bytes']/1e3:.1f} kB, down {t['down_bytes']/1e3:.1f} kB "
         f"(measured/analytic up ×{t['up_bits_measured']/max(t['up_bits_analytic'],1):.3f}, "
@@ -102,6 +127,11 @@ def main(argv=None):
         f"dense up would be {dense_up_bits / 8e6:.1f} MB "
         f"(×{dense_up_bits / max(t['up_bytes'] * 8, 1):.0f})"
     )
+    if t["up_bytes_wasted"]:
+        print(
+            f"elasticity: {t['up_bytes_wasted']/1e3:.1f} kB of uploads "
+            "wasted (straggler aborts + corrupt rejects)"
+        )
     if spec.telemetry:
         from repro.obs import finish_run
 

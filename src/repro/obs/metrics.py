@@ -29,6 +29,11 @@ METRIC_NAMES: Dict[str, Tuple[str, str]] = {
     "wire/up_bytes": ("gauge", "framed upstream SBW1 bytes this round"),
     "wire/up_bits_measured": ("gauge", "exact upstream payload bits (pre-padding)"),
     "wire/up_bits_analytic": ("gauge", "Eq. 1 upstream bits (Golomb priced by Eq. 5)"),
+    "wire/up_bytes_wasted": (
+        "gauge",
+        "upstream bytes the server never aggregated this round (aborted "
+        "straggler uploads + corrupt buffers rejected at decode)",
+    ),
     "wire/down_bytes": ("gauge", "framed downstream bytes this round"),
     "wire/down_bits_measured": ("gauge", "exact downstream payload bits"),
     "wire/down_bits_analytic": ("gauge", "Eq. 1/Eq. 5 downstream bits"),
@@ -105,13 +110,15 @@ class MetricsRegistry:
             self.gauge("wire/up_bytes", rec.up_bytes, **t)
             self.gauge("wire/up_bits_measured", rec.up_bits_measured, **t)
             self.gauge("wire/up_bits_analytic", rec.up_bits_analytic, **t)
+            self.gauge("wire/up_bytes_wasted", rec.up_bytes_wasted, **t)
             self.gauge("wire/down_bytes", rec.down_bytes, **t)
             self.gauge("wire/down_bits_measured", rec.down_bits_measured, **t)
             self.gauge("wire/down_bits_analytic", rec.down_bits_analytic, **t)
             self.counter("obs/rounds")
         totals = ledger.totals()
         for col in ("up_bytes", "up_bits_measured", "up_bits_analytic",
-                    "down_bytes", "down_bits_measured", "down_bits_analytic"):
+                    "up_bytes_wasted", "down_bytes", "down_bits_measured",
+                    "down_bits_analytic"):
             # plain sequential sum, NOT fsum: bit-exact against the
             # ledger's own totals() means same addends, same order, same
             # float summation

@@ -501,12 +501,19 @@ class FedRun(Run):
             policy=policy, task=self.task, n_clients=spec.clients,
             lr=lambda it: lr, profiles=profiles_from_spec(spec),
             seed=spec.seed,
+            cohort_tile=spec.cohort_tile, store=spec.client_store,
         )
+        faults = None
+        if spec.faults:
+            from repro.fed.faults import FaultSchedule
+
+            faults = FaultSchedule.parse(spec.faults)
         self.scheduler = RoundScheduler(
             server=server, pool=pool,
             cohort_size=spec.cohort or spec.clients,
             mode="async" if spec.async_rounds else "sync",
             max_staleness=spec.max_staleness, seed=spec.seed,
+            straggler_timeout=spec.straggler_timeout, faults=faults,
         )
         self.channel = self.scheduler.channel
         # thread the telemetry handle to the wire endpoints (stage spans:
@@ -519,13 +526,22 @@ class FedRun(Run):
     def step(self, state, round_idx: int) -> tuple:
         return state, state.step(round_idx)
 
-    def checkpoint(self, state, path: str) -> None:
-        from repro.checkpoint.io import save_pytree
+    def checkpoint(self, state, path: str,
+                   rounds_done: Optional[int] = None) -> None:
+        """Full-federation snapshot (server + pool + channel + DeltaLog):
+        ``repro.fed.checkpoint`` makes a restored run continue
+        bit-identically, mid-round included."""
+        from repro.fed.checkpoint import save_fed_state
 
-        save_pytree(path, {
-            "params": state.server.params,
-            "estimate": state.server.estimate,
-        })
+        save_fed_state(path, state, rounds_done=rounds_done)
+
+    def restore(self, path: str) -> dict:
+        """Restore a :meth:`checkpoint` file into a freshly-initialized
+        scheduler; returns the checkpoint meta (``rounds_done`` etc.)."""
+        from repro.fed.checkpoint import restore_fed_state
+
+        state = self.init() if self.scheduler is None else self.scheduler
+        return restore_fed_state(path, state)
 
     def params_of(self, state) -> PyTree:
         return state.server.params

@@ -95,6 +95,20 @@ def add_run_flags(ap: argparse.ArgumentParser, **defaults) -> argparse.ArgumentP
                         "cohort members pull stacked/replay catch-ups")
     g.add_argument("--delta-horizon", type=int, default=16,
                    help="rounds the DeltaLog keeps before forcing full resync")
+    e = ap.add_argument_group("federated elasticity (fed backend; DESIGN.md §14)")
+    e.add_argument("--cohort-tile", type=int, default=None,
+                   help="clients per compiled cohort step (default: the whole "
+                        "profile group in one vmap); bounds device memory")
+    e.add_argument("--client-store", choices=["device", "host", "memmap"],
+                   default="device",
+                   help="where per-client pool state lives between rounds "
+                        "(memmap scales to 10k+ simulated clients)")
+    e.add_argument("--straggler-timeout", type=float, default=None,
+                   help="abort uploads whose simulated duration "
+                        "delay×slowdown exceeds this (partial aggregation)")
+    e.add_argument("--faults", default=None,
+                   help="deterministic FaultSchedule: inline JSON or a path "
+                        "(drops/slow/corrupt/kill_server)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--history", default=None, help="metrics JSON path")
     ap.add_argument("--spec-json", default=None,
@@ -184,5 +198,9 @@ def spec_from_args(args: argparse.Namespace,
         skew=args.skew,
         broadcast_log=args.broadcast_log,
         delta_horizon=args.delta_horizon,
+        cohort_tile=args.cohort_tile,
+        client_store=args.client_store,
+        straggler_timeout=args.straggler_timeout,
+        faults=args.faults,
         telemetry=telemetry_requested(args),
     )

@@ -68,6 +68,12 @@ class RunSpec:
     broadcast_log: bool = False  # downstream rides a serve/ DeltaLog
     delta_horizon: int = 16  # rounds the DeltaLog keeps for catch-ups
 
+    # ---- elasticity / memory (fed backend only, DESIGN.md §14)
+    cohort_tile: Optional[int] = None  # members per compiled step (None=all)
+    client_store: str = "device"  # "device" | "host" | "memmap" pool state
+    straggler_timeout: Optional[float] = None  # abort uploads slower than this
+    faults: Optional[str] = None  # FaultSchedule: inline JSON or a file path
+
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
             raise ValueError(
@@ -75,6 +81,11 @@ class RunSpec:
             )
         if self.flat_engine not in ("exact", "hist"):
             raise ValueError(f"unknown flat_engine {self.flat_engine!r}")
+        if self.client_store not in ("device", "host", "memmap"):
+            raise ValueError(
+                f"unknown client_store {self.client_store!r}; "
+                "have ('device', 'host', 'memmap')"
+            )
         # normalize JSON-born lists into the hashable tuple form
         object.__setattr__(
             self,

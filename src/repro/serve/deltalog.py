@@ -177,21 +177,16 @@ class DeltaLog:
 
     # ------------------------------------------------------------- appending
 
-    def append(
+    def _decode_entry(
         self,
         round_idx: int,
         blob: bytes,
         wire: Wire,
         bits_analytic: Optional[float] = None,
     ) -> LogEntry:
-        """Log one round's broadcast: decode ``blob`` through ``wire`` (the
-        exact receiver path), record the transmitted position sets, and
-        advance the replica by the decoded dense content."""
-        if round_idx != self._head + 1:
-            raise ValueError(
-                f"DeltaLog rounds must be contiguous: got {round_idx}, "
-                f"expected {self._head + 1}"
-            )
+        """Decode one broadcast blob through ``wire`` (the exact receiver
+        path) into a :class:`LogEntry` — no replica/log mutation, so
+        :meth:`restore` can rebuild evicted-window entries from bytes."""
         comps = wire.unpack_compressed(blob)
         leaves = wire.treedef.flatten_up_to(comps)
         if len(leaves) != len(self._replica):
@@ -217,9 +212,7 @@ class DeltaLog:
                 touched.append(np.zeros((0,), np.int64))
             else:
                 touched.append(np.asarray(comp.idx, np.int64))
-        for rep, d in zip(self._replica, denses):
-            rep += d  # f32 IEEE add — identical on every receiver
-        entry = LogEntry(
+        return LogEntry(
             round=round_idx,
             blob=bytes(blob),
             touched=tuple(touched),
@@ -227,11 +220,70 @@ class DeltaLog:
             bits_measured=bits,
             bits_analytic=float(bits if bits_analytic is None else bits_analytic),
         )
+
+    def append(
+        self,
+        round_idx: int,
+        blob: bytes,
+        wire: Wire,
+        bits_analytic: Optional[float] = None,
+    ) -> LogEntry:
+        """Log one round's broadcast: decode ``blob`` through ``wire`` (the
+        exact receiver path), record the transmitted position sets, and
+        advance the replica by the decoded dense content."""
+        if round_idx != self._head + 1:
+            raise ValueError(
+                f"DeltaLog rounds must be contiguous: got {round_idx}, "
+                f"expected {self._head + 1}"
+            )
+        entry = self._decode_entry(round_idx, blob, wire, bits_analytic)
+        for rep, d in zip(self._replica, entry.dense):
+            rep += d  # f32 IEEE add — identical on every receiver
         self._entries.append(entry)
         self._head = round_idx
         while self._entries and self._entries[0].round <= self._head - self.horizon:
             self._entries.popleft()
         return entry
+
+    # --------------------------------------------------------- checkpointing
+
+    def state_dict(self) -> dict:
+        """The log's full restorable state: head, flat replica leaves, and
+        the held window as raw (round, blob, bits_analytic) rows —
+        entries re-decode on :meth:`restore`, so only bytes persist."""
+        return {
+            "head": self._head,
+            "replica": [r.copy() for r in self._replica],
+            "entries": [
+                (e.round, e.blob, e.bits_analytic) for e in self._entries
+            ],
+        }
+
+    def restore(self, state: dict, wire_for_round) -> None:
+        """Restore :meth:`state_dict` output.  ``wire_for_round(round)``
+        yields the decode contract for each held blob (the server's
+        ``down_wire``); the replica is set directly — entry decode must
+        NOT advance it a second time."""
+        self._head = int(state["head"])
+        if len(state["replica"]) != len(self._replica):
+            raise ValueError(
+                f"checkpoint has {len(state['replica'])} replica leaves, "
+                f"log has {len(self._replica)}"
+            )
+        for rep, saved in zip(self._replica, state["replica"]):
+            if rep.size != np.size(saved):
+                raise ValueError(
+                    f"replica leaf size {np.size(saved)} != {rep.size}"
+                )
+            rep[:] = np.asarray(saved, np.float32).reshape(-1)
+        self._entries.clear()
+        for round_idx, blob, bits_analytic in state["entries"]:
+            self._entries.append(
+                self._decode_entry(
+                    int(round_idx), bytes(blob), wire_for_round(int(round_idx)),
+                    bits_analytic,
+                )
+            )
 
     # ------------------------------------------------------------- encoding
 

@@ -1,0 +1,178 @@
+"""Deterministic fault-injection harness for the elastic fed backend
+(DESIGN.md §14 — the ISSUE 8 load-bearing deliverable).
+
+Everything the elasticity tests and the chaos benchmark share lives here:
+
+  * the :class:`repro.fed.FaultSchedule` surface re-exported under one
+    roof (``FaultSchedule``, ``ServerKilled``, ``NO_FAULTS``,
+    ``KILL_STEPS``, ``straggler_ids``);
+  * :func:`make_federation` — a micro federation factory with every
+    elasticity knob (faults, straggler timeout, cohort tile, spilled
+    client store, DeltaLog horizon) as a keyword, built on the SAME
+    cached micro model as ``test_fed`` so the suite pays its compiles
+    once;
+  * bit-level state capture/compare: :func:`capture_state` grabs every
+    array the federation owns (server W/Ŵ/residual, the full pooled
+    client state) and :func:`assert_trees_bitwise` holds two captures to
+    byte equality — elasticity claims in an error-feedback system are
+    bit-level claims, so every assertion here is ``tobytes`` equality,
+    never ``allclose``;
+  * :func:`craft_upload` — a REAL packed SBW1 upload (compress → pack
+    through the shared wire contract) without paying a cohort compile,
+    for server-level aggregation properties.
+
+Fault scenarios are *data* (a frozen seeded schedule), so a test names
+exactly which client fails how in which round and replays it bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed import (  # noqa: F401  (re-exports: the harness surface)
+    KILL_STEPS,
+    NO_FAULTS,
+    ClientPool,
+    ClientProfile,
+    ClientUpdate,
+    FaultSchedule,
+    ParameterServer,
+    RoundScheduler,
+    ServerKilled,
+)
+from repro.fed.faults import straggler_ids  # noqa: F401
+from repro.optim import get_optimizer
+
+from test_fed import _policy, micro_setup
+
+
+def micro_params():
+    """The micro model's initial parameters (deterministic, cached model)."""
+    _, model, _ = micro_setup()
+    return model.init(jax.random.PRNGKey(0))
+
+
+def make_federation(
+    *,
+    n_clients: int = 8,
+    cohort: int = 5,
+    mode: str = "async",
+    max_staleness: int = 2,
+    agg: str = "staleness",
+    faults: FaultSchedule | None = None,
+    straggler_timeout: float | None = None,
+    cohort_tile: int | None = None,
+    store: str = "device",
+    store_dir: str | None = None,
+    delta_horizon: int | None = None,
+    down_sparsity: float = 0.1,
+    profiles=(ClientProfile(delay=2, sparsity=0.05),),
+    seed: int = 0,
+) -> RoundScheduler:
+    """One micro federation with every elasticity knob exposed.
+
+    Two calls with identical arguments build bit-identical federations
+    (same params, same cohort draws, same fault replay) — the reference
+    construction every scenario test compares against.
+    """
+    _, model, task = micro_setup()
+    server = ParameterServer(
+        params=model.init(jax.random.PRNGKey(0)), up_policy=_policy(),
+        down_sparsity=down_sparsity, aggregator=agg, staleness_beta=0.5,
+        delta_horizon=delta_horizon,
+    )
+    pool = ClientPool(
+        model=model, optimizer=get_optimizer("momentum"), policy=_policy(),
+        task=task, n_clients=n_clients, lr=lambda it: 0.05,
+        profiles=profiles, seed=seed, cohort_tile=cohort_tile,
+        store=store, store_dir=store_dir,
+    )
+    return RoundScheduler(
+        server=server, pool=pool, cohort_size=cohort, mode=mode,
+        max_staleness=max_staleness, seed=seed,
+        straggler_timeout=straggler_timeout, faults=faults,
+    )
+
+
+def run_rounds(sched: RoundScheduler, n_rounds: int, start: int = 0) -> list:
+    """Drive rounds ``start..n_rounds−1``; returns the per-round metrics."""
+    return [sched.step(r) for r in range(start, n_rounds)]
+
+
+# ------------------------------------------------------- bit-level capture
+
+
+def capture_state(sched: RoundScheduler) -> dict:
+    """Every array the federation owns, as one host-side dict: master
+    weights W, replica Ŵ, the server's downstream residual, and the FULL
+    pooled client state (optimizer moments, error-feedback residuals,
+    RNG keys, step counters for all N clients)."""
+    return jax.device_get({
+        "server/params": sched.server.params,
+        "server/estimate": sched.server.estimate,
+        "server/down_residual": sched.server.down_residual,
+        "pool": sched.pool.export_state(),
+    })
+
+
+def assert_trees_bitwise(a, b, what: str = "state") -> None:
+    """Hold two pytrees to BYTE equality, leaf by leaf (dtype, shape, and
+    raw bits — ``allclose`` has no standing in an error-feedback system)."""
+    la, pa = jax.tree_util.tree_flatten(a)
+    lb, pb = jax.tree_util.tree_flatten(b)
+    assert pa == pb, f"{what}: tree structures differ"
+    for i, (x, y) in enumerate(zip(la, lb)):
+        xa, ya = np.asarray(x), np.asarray(y)
+        assert xa.dtype == ya.dtype and xa.shape == ya.shape, (
+            f"{what}: leaf {i} is {xa.dtype}{xa.shape} vs {ya.dtype}{ya.shape}"
+        )
+        assert xa.tobytes() == ya.tobytes(), f"{what}: leaf {i} differs bitwise"
+
+
+def trees_equal_bitwise(a, b) -> bool:
+    try:
+        assert_trees_bitwise(a, b)
+        return True
+    except AssertionError:
+        return False
+
+
+# -------------------------------------------------- server-level uploads
+
+
+def _rand_update(params, key, scale: float = 0.05):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, [
+        scale * jax.random.normal(k, leaf.shape, jnp.float32)
+        for k, leaf in zip(keys, leaves)
+    ])
+
+
+def craft_upload(
+    server: ParameterServer,
+    client_id: int,
+    *,
+    rate: float = 0.05,
+    round_idx: int = 0,
+    seed: int = 0,
+    weight: float = 1.0,
+    staleness: int = 0,
+) -> ClientUpdate:
+    """A genuine packed SBW1 upload — a random dense update compressed and
+    packed through the server's own upstream contract — so server-level
+    aggregation properties run on real wire bytes without a cohort
+    compile."""
+    resolved = server._up_resolved
+    delta = _rand_update(
+        server.params, jax.random.fold_in(jax.random.PRNGKey(seed), client_id)
+    )
+    state = resolved.init_state(
+        jax.tree.map(lambda x: x.astype(jnp.float32), server.params)
+    )
+    rates = resolved.rates(rate, round_idx)
+    ctree, _, _ = resolved.compress(delta, state, rates)
+    blob = server.up_wire(rate, round_idx).pack(ctree)
+    return ClientUpdate(client_id=client_id, blob=blob, rate=rate,
+                        weight=weight, staleness=staleness)

@@ -1,0 +1,385 @@
+"""Elastic fault tolerance (DESIGN.md §14): every claim is bit-level.
+
+The elasticity contract this file pins, scenario by scenario, on the
+deterministic :mod:`faults` harness:
+
+  * a client whose participation FAILS (drop, straggler abort, corrupt
+    upload) leaves its pooled residual/momentum/rng byte-identical to
+    never having run — error feedback must not double-count;
+  * partial aggregation IS survivors-only aggregation: a server that
+    rejects k of n uploads lands on exactly the bytes of a server that
+    only ever saw the n−k survivors (property-tested across all three
+    aggregators);
+  * aborted and rejected uploads are metered as wasted bytes, and the
+    ledger still reconciles measured-vs-analytic in dropout rounds;
+  * a rejoining failed client re-enters at its TRUE staleness (rounds
+    since its last successful download), not a random draw;
+  * the tiled cohort executor and the spilled (host/memmap) client
+    stores are bit-transparent: tiling/spilling changes memory, never
+    results;
+  * a ``kill_server`` fault raises :class:`ServerKilled` exactly once,
+    and a ``post_aggregate`` kill resumes through
+    :meth:`RoundScheduler.resume_pending` onto the uninterrupted
+    trajectory.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from faults import (
+    NO_FAULTS,
+    FaultSchedule,
+    ServerKilled,
+    assert_trees_bitwise,
+    capture_state,
+    craft_upload,
+    make_federation,
+    run_rounds,
+    straggler_ids,
+)
+
+try:  # property-based when hypothesis is installed, fixed grid otherwise
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+
+# ---------------------------------------------------------- schedule object
+
+
+class TestFaultSchedule:
+    def test_json_round_trip(self):
+        fs = FaultSchedule(
+            seed=3, drops=((1, 2), (4, 0)), slow=((2, 1, 8.0),),
+            corrupt=((3, 5),), kill_server=((2, "post_aggregate"),),
+        )
+        assert FaultSchedule.from_json(fs.to_json()) == fs
+        assert FaultSchedule.parse(fs.to_json()) == fs
+
+    def test_parse_file(self, tmp_path):
+        fs = FaultSchedule(drops=((0, 1),))
+        p = tmp_path / "faults.json"
+        p.write_text(fs.to_json())
+        assert FaultSchedule.parse(str(p)) == fs
+        with pytest.raises(ValueError, match="neither"):
+            FaultSchedule.parse(str(tmp_path / "missing.json"))
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="slowdown"):
+            FaultSchedule(slow=((0, 1, 0.5),))
+        with pytest.raises(ValueError, match="kill_server step"):
+            FaultSchedule(kill_server=((0, "mid_broadcast"),))
+        with pytest.raises(ValueError, match="one kill_server"):
+            FaultSchedule(kill_server=((0, "pre_round"), (0, "post_aggregate")))
+        with pytest.raises(ValueError, match="unknown FaultSchedule fields"):
+            FaultSchedule.from_json('{"dropz": []}')
+
+    def test_queries(self):
+        fs = FaultSchedule(
+            drops=((1, 2), (1, 3)), slow=((2, 1, 8.0),), corrupt=((3, 5),),
+            kill_server=((4, "pre_round"),),
+        )
+        assert fs.drops_at(1) == frozenset({2, 3}) and fs.drops_at(0) == frozenset()
+        assert fs.corrupts_at(3) == frozenset({5})
+        assert fs.slowdown_of(2, 1) == 8.0 and fs.slowdown_of(2, 0) == 1.0
+        assert fs.kill_at(4) == "pre_round" and fs.kill_at(1) is None
+        assert fs.last_round() == 4 and NO_FAULTS.last_round() == -1
+
+    def test_corrupt_blob_is_seeded_and_damaging(self):
+        blob = bytes(range(256)) * 4
+        fs = FaultSchedule(seed=7)
+        a = fs.corrupt_blob(blob, 2, 5)
+        assert a == fs.corrupt_blob(blob, 2, 5), "same (seed,round,client) must repeat"
+        assert a != blob and len(a) < len(blob), "must truncate"
+        assert a != fs.corrupt_blob(blob, 2, 6), "different client, different damage"
+        assert a != FaultSchedule(seed=8).corrupt_blob(blob, 2, 5)
+        assert fs.corrupt_blob(b"1234", 0, 0) == b""
+
+    def test_straggler_ids(self):
+        fs = FaultSchedule(slow=((1, 4, 100.0), (1, 5, 2.0)))
+        delays = {c: 2 for c in range(8)}
+        assert straggler_ids(fs, 1, range(8), delays, None) == frozenset()
+        # delay 2 × slowdown {100, 2} vs timeout 10: only ×100 exceeds it
+        assert straggler_ids(fs, 1, range(8), delays, 10.0) == frozenset({4})
+        # a tight timeout stalls everyone even with no scheduled slowdowns
+        assert straggler_ids(None, 0, range(3), delays, 1.0) == frozenset({0, 1, 2})
+
+
+# ---------------------------------------- partial aggregation == survivors
+
+
+class TestPartialAggregationProperty:
+    """ISSUE 8 satellite: receive() with rejects must land bit-identically
+    on the survivors-only aggregation, for every aggregator — the
+    survivor-weighted mean is renormalized over survivors by construction,
+    so no reference rerun with a different weight vector can diverge."""
+
+    @settings(max_examples=24, deadline=None)
+    @given(
+        agg=st.sampled_from(["mean", "weighted", "staleness"]),
+        n_uploads=st.integers(min_value=2, max_value=5),
+        mask_seed=st.integers(min_value=0, max_value=2),
+    )
+    def test_partial_equals_survivors_only(self, agg, n_uploads, mask_seed):
+        sched = make_federation(agg=agg)
+        srv = sched.server
+        ups = [
+            craft_upload(srv, c, seed=11, weight=1.0 + c, staleness=c % 3)
+            for c in range(n_uploads)
+        ]
+        rng = np.random.default_rng([mask_seed, n_uploads])
+        corrupt = {int(c) for c in rng.choice(n_uploads, size=rng.integers(1, n_uploads), replace=False)}
+        fs = FaultSchedule(seed=mask_seed)
+        damaged = [
+            u._replace(blob=fs.corrupt_blob(u.blob, 0, u.client_id))
+            if u.client_id in corrupt else u
+            for u in ups
+        ]
+        m = srv.receive(damaged, 0)
+        assert sorted(m["rejected"]) == sorted(corrupt)
+        assert m["accepted"] == [u.client_id for u in ups if u.client_id not in corrupt]
+
+        ref = make_federation(agg=agg).server
+        m_ref = ref.receive([u for u in ups if u.client_id not in corrupt], 0)
+        assert_trees_bitwise(srv.params, ref.params, "params")
+        assert np.asarray(m["weights"]).tobytes() == np.asarray(m_ref["weights"]).tobytes()
+        assert m["up_bits_measured"] == m_ref["up_bits_measured"]
+        if m["accepted"]:
+            assert np.asarray(m["weights"]).sum() == pytest.approx(1.0)
+
+    def test_zero_survivors_is_a_zero_update(self):
+        sched = make_federation()
+        srv = sched.server
+        before = capture_state(sched)
+        ups = [craft_upload(srv, c, seed=1) for c in range(3)]
+        fs = FaultSchedule(seed=0)
+        m = srv.receive(
+            [u._replace(blob=fs.corrupt_blob(u.blob, 0, u.client_id)) for u in ups], 0
+        )
+        assert m["accepted"] == [] and sorted(m["rejected"]) == [0, 1, 2]
+        assert m["update_norm"] == 0.0 and m["up_bits_measured"] == 0.0
+        assert_trees_bitwise(capture_state(sched), before, "all-rejected round")
+
+
+# ------------------------------------------------------------ drop / rejoin
+
+
+class TestDropoutRejoin:
+    def test_dropped_client_state_untouched_and_unmetered(self):
+        # round-1 cohort of the seed-0 micro federation contains client 2
+        fs = FaultSchedule(drops=((1, 2),))
+        sched = make_federation(faults=fs)
+        run_rounds(sched, 1)
+        assert 2 in set(int(c) for c in sched.pool.sample_cohort(1, 5))
+        before = sched.pool.snapshot_clients([2])
+        m = sched.step(1)
+        assert m["dropped"] == [2] and 2 not in m["accepted"]
+        after = sched.pool.snapshot_clients([2])
+        assert_trees_bitwise(after, before, "dropped client rows")
+        rec = sched.ledger.records[-1]
+        assert 2 not in rec.cohort, "dropped client must not be in the record"
+        # excluded BEFORE download: a drop costs nothing in either direction
+        assert rec.down_recipients == len(rec.cohort) == 4
+        assert rec.up_bytes_wasted == 0
+        sched.ledger.reconcile(rel=0.12)
+
+    def test_rejoin_reenters_at_true_staleness(self):
+        fs = FaultSchedule(drops=((1, 2),))
+        sched = make_federation(faults=fs)
+        downloads = {}
+        for r in range(6):
+            cohort = [int(c) for c in sched.pool.sample_cohort(r, 5)]
+            participants = [c for c in cohort if (r, c) not in {(1, 2)}]
+            m = sched.step(r)
+            assert m["accepted"] == participants  # only the drop fault fires
+            if r > 1 and 2 in participants:
+                cap = min(sched.max_staleness, r)  # ring holds r+1 entries
+                # last successful download, or the ring cap if it never did
+                expect = min(r - downloads[2], cap) if 2 in downloads else cap
+                got = int(np.asarray(m["staleness"])[participants.index(2)])
+                assert got == expect, (
+                    f"round {r}: rejoin staleness {got} != true lag {expect}"
+                )
+                break
+            for c in participants:
+                downloads[c] = r
+        else:
+            pytest.fail("client 2 never rejoined within 6 rounds")
+
+    def test_failure_free_schedule_is_the_original_trajectory(self):
+        """Attaching an EMPTY schedule (or none) must not perturb a run —
+        the fault machinery is bit-transparent when nothing fires."""
+        a = make_federation(faults=None)
+        b = make_federation(faults=NO_FAULTS, straggler_timeout=1e9)
+        run_rounds(a, 3), run_rounds(b, 3)
+        assert_trees_bitwise(capture_state(a), capture_state(b), "no-op faults")
+        assert [dataclasses.asdict(r) for r in a.ledger.records] == \
+               [dataclasses.asdict(r) for r in b.ledger.records]
+
+
+# ------------------------------------------------------- straggler timeouts
+
+
+class TestStragglerTimeout:
+    def test_straggler_rolled_back_and_metered_as_waste(self):
+        fs = FaultSchedule(slow=((1, 4, 100.0),))
+        sched = make_federation(faults=fs, straggler_timeout=10.0)
+        run_rounds(sched, 1)
+        before = sched.pool.snapshot_clients([4])
+        m = sched.step(1)
+        assert m["stragglers"] == [4] and 4 not in m["accepted"]
+        # work was done, bytes were wasted — but state is as if it never ran
+        assert m["up_bytes_wasted"] > 0
+        assert_trees_bitwise(
+            sched.pool.snapshot_clients([4]), before, "straggler rows"
+        )
+        rec = sched.ledger.records[-1]
+        assert 4 not in rec.cohort
+        assert rec.up_bytes_wasted == m["up_bytes_wasted"]
+        # the straggler DID download (it started the round)
+        assert rec.down_recipients == len(rec.cohort) + 1
+        sched.ledger.reconcile(rel=0.12)
+        assert sched.ledger.totals()["up_bytes_wasted"] == m["up_bytes_wasted"]
+
+    def test_all_stragglers_apply_a_zero_update(self):
+        sched = make_federation(straggler_timeout=0.5)  # delay=2 > 0.5: everyone
+        w_before = capture_state(sched)["server/params"]
+        m = sched.step(0)
+        assert m["accepted"] == [] and len(m["stragglers"]) == 5
+        assert np.isnan(m["loss"]) and m["update_norm"] == 0.0
+        assert_trees_bitwise(
+            capture_state(sched)["server/params"], w_before, "zero-survivor W"
+        )
+        sched.ledger.reconcile(rel=0.12)
+
+
+# ------------------------------------------------------ corrupt-upload fuzz
+
+
+class TestCorruptUploadFuzz:
+    def test_corrupt_uploads_never_poison_state(self):
+        """Seeded corruption across several rounds: the server drops the
+        client cleanly, finishes the round over the survivors, the victim's
+        pool rows stay bitwise pristine, and it is re-accepted on its next
+        clean round."""
+        fs = FaultSchedule(seed=5, corrupt=((1, 3), (2, 5), (2, 7)))
+        sched = make_federation(faults=fs)
+        victims = {1: [3], 2: [5, 7]}
+        reaccepted = False
+        for r in range(4):
+            cohort = {int(c) for c in sched.pool.sample_cohort(r, 5)}
+            hit = sorted(set(victims.get(r, [])) & cohort)
+            before = sched.pool.snapshot_clients(hit)
+            m = sched.step(r)
+            assert m["rejected"] == hit
+            assert not set(hit) & set(m["accepted"])
+            if hit:
+                assert_trees_bitwise(
+                    sched.pool.snapshot_clients(hit), before,
+                    f"round {r} corrupt-victim rows",
+                )
+                assert m["up_bytes_wasted"] > 0
+            if r > 2 and set(m["accepted"]) & {3, 5, 7}:
+                reaccepted = True
+            if m["accepted"]:
+                assert np.isfinite(m["loss"])
+        assert reaccepted, "no corrupt victim was ever accepted again"
+        sched.ledger.reconcile(rel=0.12)
+
+    def test_many_corruption_seeds_all_reject(self):
+        """Fuzz the decode surface: every seeded damage pattern of a real
+        SBW1 upload must be REJECTED (never mis-decoded) and must leave the
+        server untouched."""
+        sched = make_federation()
+        srv = sched.server
+        up = craft_upload(srv, 0, seed=2)
+        before = capture_state(sched)
+        for seed in range(8):
+            bad = FaultSchedule(seed=seed).corrupt_blob(up.blob, 0, 0)
+            m = srv.receive([up._replace(blob=bad)], 0)
+            assert m["rejected"] == [0] and m["accepted"] == []
+        assert_trees_bitwise(capture_state(sched), before, "fuzzed server")
+
+
+# ------------------------------------------- tiled executor / spilled store
+
+
+class TestTiledExecutorParity:
+    def test_tile_and_store_are_bit_transparent(self, tmp_path):
+        """The tiled executor + host/memmap spill change WHERE client state
+        lives and how many members one compiled step covers — never a bit
+        of the result."""
+        ref = make_federation()
+        run_rounds(ref, 2)
+        want = capture_state(ref)
+        for tile, store in ((3, "host"), (2, "memmap")):
+            alt = make_federation(
+                cohort_tile=tile, store=store,
+                store_dir=str(tmp_path / store) if store == "memmap" else None,
+            )
+            run_rounds(alt, 2)
+            assert_trees_bitwise(
+                capture_state(alt), want, f"tile={tile} store={store}"
+            )
+            assert [dataclasses.asdict(r) for r in alt.ledger.records] == \
+                   [dataclasses.asdict(r) for r in ref.ledger.records]
+
+    def test_tile_one_is_sequential_but_identical(self):
+        ref = make_federation()
+        alt = make_federation(cohort_tile=1)
+        run_rounds(ref, 1), run_rounds(alt, 1)
+        assert_trees_bitwise(capture_state(alt), capture_state(ref), "tile=1")
+
+    def test_memmap_store_is_lazy(self, tmp_path):
+        """Zero-initialized leaves are never written at init: a fresh
+        spilled pool's logical bytes dwarf what a cohort actually touches."""
+        sched = make_federation(store="memmap", store_dir=str(tmp_path / "m"),
+                                cohort_tile=2)
+        sched.pool.init(sched.server.params)
+        logical = sched.pool.state_nbytes()
+        assert logical > 0
+        import os
+        on_disk = sum(
+            os.stat(os.path.join(dp, f)).st_blocks * 512
+            for dp, _, fs in os.walk(tmp_path) for f in fs
+        )
+        assert on_disk < logical, (
+            f"memmap init materialized {on_disk}B of {logical}B logical state"
+        )
+
+
+# ----------------------------------------------------------- server kills
+
+
+class TestServerKill:
+    def test_pre_round_kill_fires_exactly_once(self):
+        fs = FaultSchedule(kill_server=((1, "pre_round"),))
+        sched = make_federation(faults=fs)
+        run_rounds(sched, 1)
+        with pytest.raises(ServerKilled) as ei:
+            sched.step(1)
+        assert ei.value.round_idx == 1 and ei.value.step == "pre_round"
+        # the fired kill is consumed: the retried round proceeds normally
+        m = sched.step(1)
+        assert m["round"] == 1 and m["accepted"]
+
+    def test_post_aggregate_kill_resumes_onto_the_same_trajectory(self):
+        fs = FaultSchedule(drops=((1, 2),), kill_server=((2, "post_aggregate"),))
+        sched = make_federation(faults=fs, delta_horizon=4)
+        run_rounds(sched, 2)
+        with pytest.raises(ServerKilled):
+            sched.step(2)
+        assert sched.channel._pending is not None
+        m = sched.resume_pending()
+        assert m["round"] == 2 and sched.channel._pending is None
+        assert sched.resume_pending() is None
+        run_rounds(sched, 5, start=3)
+
+        ref = make_federation(faults=FaultSchedule(drops=((1, 2),)),
+                              delta_horizon=4)
+        run_rounds(ref, 5)
+        assert_trees_bitwise(capture_state(sched), capture_state(ref),
+                             "killed-and-resumed vs uninterrupted")
+        assert sched.ledger.totals() == ref.ledger.totals()
