@@ -57,44 +57,65 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
         policy=policy,
         telemetry=telemetry,
     )
-    print(f"{out['n_subscribers']} subscribers x {out['timed_rounds']} rounds "
-          f"(horizon {out['horizon']}, p_down={out['down_sparsity']}, "
-          f"{out['n_params']} params)")
-    print(f"  {out['bytes_per_subscriber_per_round']:8.1f} B/subscriber/round "
-          f"(full resync would be {out['full_resync_bytes']} B)")
-    print(f"  {out['bytes_saving_vs_full_resync']:8.1f}x saving vs "
-          f"full-resync-every-sync")
-    print(f"  {out['rounds_per_sec']:8.2f} rounds/s  "
-          f"{out['subscriber_syncs_per_sec']:8.0f} subscriber syncs/s")
-    print(render_table(
-        ["lag", "plan", "bytes", "candidates"],
-        [
-            (lag, rec["kind"], rec["nbytes"],
-             "  ".join(f"{k}={v}" for k, v in rec["candidates"].items()))
-            for lag, rec in sorted(
-                out["plan_by_lag"].items(), key=lambda kv: int(kv[0])
-            )
-        ],
-        title="catch-up plan by lag class",
-    ))
-    if not out["catchup_beats_full_all_lags"]:
-        raise AssertionError(
-            "a lag <= horizon chose a plan >= full resync cost"
+    print(
+        f"{out['n_subscribers']} subscribers x {out['timed_rounds']} rounds "
+        f"(horizon {out['horizon']}, p_down={out['down_sparsity']}, "
+        f"{out['n_params']} params)"
+    )
+    print(
+        f"  {out['bytes_per_subscriber_per_round']:8.1f} B/subscriber/round "
+        f"(full resync would be {out['full_resync_bytes']} B)"
+    )
+    print(
+        f"  {out['bytes_saving_vs_full_resync']:8.1f}x saving vs "
+        f"full-resync-every-sync"
+    )
+    print(
+        f"  {out['rounds_per_sec']:8.2f} rounds/s  "
+        f"{out['subscriber_syncs_per_sec']:8.0f} subscriber syncs/s"
+    )
+    print(
+        render_table(
+            ["lag", "plan", "bytes", "candidates"],
+            [
+                (
+                    lag,
+                    rec["kind"],
+                    rec["nbytes"],
+                    "  ".join(f"{k}={v}" for k, v in rec["candidates"].items()),
+                )
+                for lag, rec in sorted(
+                    out["plan_by_lag"].items(), key=lambda kv: int(kv[0])
+                )
+            ],
+            title="catch-up plan by lag class",
         )
+    )
+    if not out["catchup_beats_full_all_lags"]:
+        raise AssertionError("a lag <= horizon chose a plan >= full resync cost")
     if not out["stack_bit_exact"]:
         raise AssertionError("catch-up application diverged from the replica")
     path = save_json("broadcast_fanout", out)
     print(f"wrote {path}")
-    save_telemetry("broadcast_fanout", telemetry,
-                   meta={"benchmark": "broadcast_fanout",
-                         "n_subscribers": N_SUBSCRIBERS, "rounds": ROUNDS})
+    save_telemetry(
+        "broadcast_fanout",
+        telemetry,
+        meta={
+            "benchmark": "broadcast_fanout",
+            "n_subscribers": N_SUBSCRIBERS,
+            "rounds": ROUNDS,
+        },
+    )
     return out
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI run (identical configuration; see docstring)")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI run (identical configuration; see docstring)",
+    )
     args = ap.parse_args(argv)
     run(smoke=args.smoke)
 

@@ -18,7 +18,12 @@ Two kinds of checks per benchmark:
 
 Only files present in BOTH directories and named in ``RULES`` are gated,
 so adding a new benchmark is non-breaking until its baseline is
-committed.
+committed — but EVERY ``*.json`` the fresh directory holds must either
+have a ``RULES`` entry or be named in ``UNGATED`` with a reason
+(telemetry ``*.trace.json`` artifacts are validated by
+``repro.obs.view --check`` instead).  A benchmark whose output nobody
+gates is a benchmark that can rot silently; this module exits non-zero
+on such strays.
 
   python -m benchmarks.check_regression --baseline /tmp/bench-baseline \
       --fresh experiments/benchmarks
@@ -32,10 +37,39 @@ import sys
 RATIO_BAND = 3.0  # fresh speedup may degrade to 1/3 of baseline
 REL_TOL = 0.02  # structural float fields (measured byte counts etc.)
 
-# per-benchmark field classes; list-valued JSONs match rows by "arch".
+# Committed/produced JSON stems deliberately outside the gate, with the
+# reason on record.  Anything else without a RULES entry is an error.
+UNGATED = {
+    # full-suite artifact; the CI smoke sequence re-runs the --smoke
+    # variant (gated as fed_round_smoke) and never regenerates this file
+    "fed_round": "full-suite artifact, CI re-runs fed_round_smoke",
+}
+
+# per-benchmark field classes; list-valued JSONs match rows by the
+# rule's "key" field ("arch" when unset).
 # Only benchmarks the CI smoke sequence actually re-runs belong here —
 # a stem CI never regenerates would be compared against its own copy.
 RULES = {
+    # Table I analytic rates + seeded Golomb validation: fully
+    # deterministic in quick mode, so the whole payload is structural
+    "table1_rates": {
+        "exact": ("table1", "golomb_validation"),
+    },
+    # §5 wire microbench: codec geometry and stream sizes are
+    # threefry-deterministic; throughput floats are runner noise
+    "wire_throughput": {
+        "key": "codec",
+        "exact": ("codec", "n", "p"),
+        "rel": ("packed_bytes", "measured_bits"),
+    },
+    # §11 device select→pack kernels: byte identity with the host
+    # encoder and the decode round-trip are the acceptance claims
+    "pack_kernels": {
+        "exact": ("n", "rows", "k", "bstar", "words_per_row"),
+        "true": ("byte_identical", "decode_roundtrip"),
+        "rel": ("bytes_total",),
+        "ratio_min": ("speedup",),
+    },
     "compress_e2e": {
         "exact": ("arch", "n_params", "n_leaves", "packed_bytes"),
         "ratio_min": ("speedup_vs_per_leaf",),
@@ -43,48 +77,78 @@ RULES = {
     "fed_round_smoke": {
         "exact": ("n_clients", "delay", "timed_rounds"),
         "true": ("ledger_reconciles",),
-        "rel": ("up_bytes_per_round", "up_bytes_per_round_legacy",
-                "down_bytes_per_round"),
+        "rel": (
+            "up_bytes_per_round",
+            "up_bytes_per_round_legacy",
+            "down_bytes_per_round",
+        ),
     },
     # §13 delta-broadcast fan-out: byte fields are threefry-deterministic,
     # so structural equality holds cross-machine; only throughput floats
     "broadcast_fanout": {
-        "exact": ("n_subscribers", "timed_rounds", "horizon", "n_params",
-                  "full_resync_bytes"),
-        "true": ("catchup_beats_full_all_lags", "stack_bit_exact",
-                 "ledger_reconciles"),
+        "exact": (
+            "n_subscribers",
+            "timed_rounds",
+            "horizon",
+            "n_params",
+            "full_resync_bytes",
+        ),
+        "true": (
+            "catchup_beats_full_all_lags",
+            "stack_bit_exact",
+            "ledger_reconciles",
+        ),
         "rel": ("bytes_per_subscriber_per_round",),
         "ratio_min": ("bytes_saving_vs_full_resync",),
     },
     # §14 elastic federation: structural fields are threefry-deterministic;
     # memory/parity booleans are the acceptance claims, throughput is noise
     "fed_elastic": {
-        "exact": ("n_clients", "cohort", "cohort_tile", "timed_rounds",
-                  "n_params", "pool_logical_bytes"),
-        "true": ("tile_parity", "memory_bounded", "store_sparse",
-                 "ledger_reconciles"),
+        "exact": (
+            "n_clients",
+            "cohort",
+            "cohort_tile",
+            "timed_rounds",
+            "n_params",
+            "pool_logical_bytes",
+        ),
+        "true": (
+            "tile_parity",
+            "memory_bounded",
+            "store_sparse",
+            "ledger_reconciles",
+        ),
         "rel": ("up_bytes_per_round", "down_bytes_per_round"),
     },
     # §14 chaos smoke: the CLI-level dropout/kill/resume contract — every
     # field that matters is a must-hold boolean
     "fed_chaos": {
         "exact": ("rounds", "clients", "cohort"),
-        "true": ("resume_loss_bit_equal", "resume_ledger_equal",
-                 "loss_parity_vs_failure_free", "wasted_bytes_metered",
-                 "ledger_reconciles"),
+        "true": (
+            "resume_loss_bit_equal",
+            "resume_ledger_equal",
+            "loss_parity_vs_failure_free",
+            "wasted_bytes_metered",
+            "ledger_reconciles",
+        ),
     },
     "dist_flat": {
         "exact": ("n_devices", "n_clients", "n_params"),
-        "true": ("parity", "bits_equal"),
-        "rel": ("bits_per_client",),
-        "ratio_min": ("speedup", "compile_speedup"),
+        "true": ("parity", "pack_parity", "bits_equal", "wire_bytes_equal"),
+        "rel": ("bits_per_client", "wire_bytes"),
+        "ratio_min": ("speedup", "compile_speedup", "wire_speedup"),
     },
     # §12 channel/Run driver overhead vs the direct trainer loop: the
     # <5% bound is computed by the benchmark itself (interleaved medians),
     # so the gate only needs the boolean + stable structural fields
     "run_api_overhead": {
-        "exact": ("preset", "n_clients", "timed_rounds", "bound",
-                  "telemetry_bound"),
+        "exact": (
+            "preset",
+            "n_clients",
+            "timed_rounds",
+            "bound",
+            "telemetry_bound",
+        ),
         "true": ("overhead_within_bound", "telemetry_disabled_within_bound"),
     },
 }
@@ -127,14 +191,15 @@ def compare_file(stem: str, base_path: str, fresh_path: str) -> list:
     if isinstance(base, dict):
         return _check_record(stem, rule, base, fresh)
     errs = []
-    fresh_by = {r.get("arch"): r for r in fresh}
+    key = rule.get("key", "arch")
+    fresh_by = {r.get(key): r for r in fresh}
     for row in base:
-        arch = row.get("arch")
-        got = fresh_by.get(arch)
+        name = row.get(key)
+        got = fresh_by.get(name)
         if got is None:
-            errs.append(f"{stem}: arch {arch!r} missing from fresh output")
+            errs.append(f"{stem}: {key} {name!r} missing from fresh output")
             continue
-        errs.extend(_check_record(f"{stem}[{arch}]", rule, row, got))
+        errs.extend(_check_record(f"{stem}[{name}]", rule, row, got))
     return errs
 
 
@@ -165,6 +230,21 @@ def main(argv=None) -> int:
         status = "FAIL" if file_errs else "ok"
         print(f"[{status:4s}] {stem}")
         errs.extend(file_errs)
+    # every fresh JSON must be gated or exempt on record — a benchmark
+    # output nobody compares is a gate that rots silently
+    for fname in sorted(os.listdir(args.fresh)):
+        if not fname.endswith(".json") or fname.endswith(".trace.json"):
+            continue
+        stem = fname[: -len(".json")]
+        if stem in RULES:
+            continue
+        if stem in UNGATED:
+            print(f"[skip] {stem} (ungated: {UNGATED[stem]})")
+            continue
+        errs.append(
+            f"{stem}: fresh JSON has no RULES entry — add one (or list it "
+            f"in UNGATED with a reason)"
+        )
     if not checked:
         print("no gated benchmarks found in both directories", file=sys.stderr)
         return 1

@@ -16,8 +16,11 @@ from repro.models.model import build_model
 from repro.optim import get_optimizer
 from repro.train import DSGDTrainer
 
-OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                       "experiments", "benchmarks")
+OUT_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments",
+    "benchmarks",
+)
 
 
 def save_json(name: str, payload) -> str:
@@ -56,8 +59,9 @@ def bench_tasks(quick: bool = True):
     out = []
 
     lenet = get_config("lenet5")
-    t_img = make_classification_task(n_classes=10, img_size=28, channels=1,
-                                     batch=32, noise=0.3)
+    t_img = make_classification_task(
+        n_classes=10, img_size=28, channels=1, batch=32, noise=0.3
+    )
     out.append(("lenet5@blobs", lenet, t_img, 40 if quick else 150, 1e-3))
 
     charlstm = get_config("charlstm")
@@ -74,8 +78,18 @@ def bench_tasks(quick: bool = True):
     return out
 
 
-def run_training(cfg, task, *, compressor: str, n_rounds: int, delay: int,
-                 sparsity: float, lr: float, clients: int = 4, seed: int = 0):
+def run_training(
+    cfg,
+    task,
+    *,
+    compressor: str,
+    n_rounds: int,
+    delay: int,
+    sparsity: float,
+    lr: float,
+    clients: int = 4,
+    seed: int = 0,
+):
     """One training run; returns history dict (loss curve, bits, rate)."""
     model = build_model(cfg)
     opt = get_optimizer(cfg.local_opt if cfg.local_opt != "momentum" else "momentum")

@@ -124,13 +124,17 @@ def run(quick: bool = True) -> None:
     archs = ["resnet32", "charlstm"]
     repeats = 8 if quick else 25
     rows = [bench_arch(a, repeats) for a in archs]
-    print(f"{'arch':12s} {'params':>9s} {'per-leaf ms':>12s} {'jit ms':>8s} "
-          f"{'flat ms':>8s} {'x vs leaf':>10s} {'x vs jit':>9s}")
+    print(
+        f"{'arch':12s} {'params':>9s} {'per-leaf ms':>12s} {'jit ms':>8s} "
+        f"{'flat ms':>8s} {'x vs leaf':>10s} {'x vs jit':>9s}"
+    )
     for r in rows:
-        print(f"{r['arch']:12s} {r['n_params']:>9d} "
-              f"{r['per_leaf_eager_ms']:>11.1f} {r['per_leaf_jit_ms']:>7.1f} "
-              f"{r['flat_fast_ms']:>7.1f} {r['speedup_vs_per_leaf']:>9.1f}× "
-              f"{r['speedup_vs_per_leaf_jit']:>8.2f}×")
+        print(
+            f"{r['arch']:12s} {r['n_params']:>9d} "
+            f"{r['per_leaf_eager_ms']:>11.1f} {r['per_leaf_jit_ms']:>7.1f} "
+            f"{r['flat_fast_ms']:>7.1f} {r['speedup_vs_per_leaf']:>9.1f}× "
+            f"{r['speedup_vs_per_leaf_jit']:>8.2f}×"
+        )
     path = save_json("compress_e2e", rows)
     print(f"wrote {path}")
 

@@ -40,15 +40,25 @@ CHAOS = FaultSchedule(
     corrupt=((1, 6),),
     kill_server=((3, "post_aggregate"),),
 )
-NO_KILL = FaultSchedule(seed=7, drops=CHAOS.drops, slow=CHAOS.slow,
-                        corrupt=CHAOS.corrupt)
+NO_KILL = FaultSchedule(
+    seed=7, drops=CHAOS.drops, slow=CHAOS.slow, corrupt=CHAOS.corrupt
+)
 
 
 def _run(faults: FaultSchedule | None) -> dict:
     argv = [
-        "--rounds", str(ROUNDS), "--clients", str(CLIENTS),
-        "--cohort", str(COHORT), "--delay", str(DELAY),
-        "--sparsity", "0.05", "--log-every", "0",
+        "--rounds",
+        str(ROUNDS),
+        "--clients",
+        str(CLIENTS),
+        "--cohort",
+        str(COHORT),
+        "--delay",
+        str(DELAY),
+        "--sparsity",
+        "0.05",
+        "--log-every",
+        "0",
     ]
     if faults is not None:
         argv += ["--faults", faults.to_json(), "--straggler-timeout", "10"]
@@ -63,9 +73,16 @@ def run() -> dict:
     print("=== C: failure-free ===")
     c = _run(None)
 
-    totals_keys = ("rounds", "up_bytes", "down_bytes", "up_bytes_wasted",
-                   "up_bits_measured", "up_bits_analytic",
-                   "down_bits_measured", "down_bits_analytic")
+    totals_keys = (
+        "rounds",
+        "up_bytes",
+        "down_bytes",
+        "up_bytes_wasted",
+        "up_bits_measured",
+        "up_bits_analytic",
+        "down_bits_measured",
+        "down_bits_analytic",
+    )
     resume_ledger_equal = all(a[k] == b[k] for k in totals_keys)
     resume_loss_bit_equal = a["loss"][-1] == b["loss"][-1]
     loss_parity = abs(a["loss"][-1] - c["loss"][-1]) <= 0.5 * abs(c["loss"][-1])
@@ -93,8 +110,12 @@ def run() -> dict:
     )
     path = save_json("fed_chaos", out)
     print(f"wrote {path}")
-    for flag in ("resume_loss_bit_equal", "resume_ledger_equal",
-                 "loss_parity_vs_failure_free", "wasted_bytes_metered"):
+    for flag in (
+        "resume_loss_bit_equal",
+        "resume_ledger_equal",
+        "loss_parity_vs_failure_free",
+        "wasted_bytes_metered",
+    ):
         if not out[flag]:
             raise AssertionError(f"fed_chaos acceptance failed: {flag}")
     return out

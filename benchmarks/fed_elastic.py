@@ -51,12 +51,21 @@ def _setup():
     # sub-tiny decoder: the measured quantity is pool/executor overhead and
     # memory shape, not model FLOPs (the state-per-client ratio is what a
     # bigger model would only scale linearly)
-    cfg = ModelConfig(name="elastic-micro", family="decoder", n_layers=1,
-                      d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
-                      vocab_size=64, dtype=jnp.float32)
+    cfg = ModelConfig(
+        name="elastic-micro",
+        family="decoder",
+        n_layers=1,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=1,
+        d_ff=64,
+        vocab_size=64,
+        dtype=jnp.float32,
+    )
     model = build_model(cfg)
-    task = make_lm_task(vocab=cfg.vocab_size, batch=2, seq_len=16,
-                        temperature=0.5)
+    task = make_lm_task(
+        vocab=cfg.vocab_size, batch=2, seq_len=16, temperature=0.5
+    )
     policy = CompressionPolicy(
         default=make_codec("sbc"),
         rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),),
@@ -65,26 +74,46 @@ def _setup():
     return cfg, model, task, policy
 
 
-def _federation(model, task, policy, *, n_clients, cohort, tile=None,
-                store="device", store_dir=None):
-    server = ParameterServer(params=model.init(jax.random.PRNGKey(0)),
-                             up_policy=policy, down_sparsity=0.1)
+def _federation(
+    model,
+    task,
+    policy,
+    *,
+    n_clients,
+    cohort,
+    tile=None,
+    store="device",
+    store_dir=None,
+):
+    server = ParameterServer(
+        params=model.init(jax.random.PRNGKey(0)),
+        up_policy=policy,
+        down_sparsity=0.1,
+    )
     pool = ClientPool(
-        model=model, optimizer=get_optimizer("momentum"), policy=policy,
-        task=task, n_clients=n_clients, lr=lambda it: 0.05,
+        model=model,
+        optimizer=get_optimizer("momentum"),
+        policy=policy,
+        task=task,
+        n_clients=n_clients,
+        lr=lambda it: 0.05,
         profiles=(ClientProfile(delay=2, sparsity=0.05),),
-        cohort_tile=tile, store=store, store_dir=store_dir,
+        cohort_tile=tile,
+        store=store,
+        store_dir=store_dir,
     )
     return RoundScheduler(server=server, pool=pool, cohort_size=cohort)
 
 
 def _state(sched):
-    return jax.device_get({
-        "W": sched.server.params,
-        "What": sched.server.estimate,
-        "residual": sched.server.down_residual,
-        "pool": sched.pool.export_state(),
-    })
+    return jax.device_get(
+        {
+            "W": sched.server.params,
+            "What": sched.server.estimate,
+            "residual": sched.server.down_residual,
+            "pool": sched.pool.export_state(),
+        }
+    )
 
 
 def _bitwise(a, b) -> bool:
@@ -111,16 +140,25 @@ def run(full: bool = False) -> dict:
     n_clients, cohort, tile = 10_000, 64, 16
     rounds = 8 if full else 3
     _, model, task, policy = _setup()
-    n_params = sum(x.size for x in jax.tree.leaves(model.init(jax.random.PRNGKey(0))))
+    n_params = sum(
+        x.size for x in jax.tree.leaves(model.init(jax.random.PRNGKey(0)))
+    )
 
     # ---- the headline run FIRST so its compile + paging dominate the RSS
     # delta we assert against (a later spike would hide under the high-water
     # mark of an earlier one)
     rss_start = _rss_bytes()
     with tempfile.TemporaryDirectory(prefix="fed-elastic-") as d:
-        sched = _federation(model, task, policy, n_clients=n_clients,
-                            cohort=cohort, tile=tile, store="memmap",
-                            store_dir=d)
+        sched = _federation(
+            model,
+            task,
+            policy,
+            n_clients=n_clients,
+            cohort=cohort,
+            tile=tile,
+            store="memmap",
+            store_dir=d,
+        )
         logical = sched.pool.state_nbytes()
         times = []
         rss_warm = rss_start
@@ -147,8 +185,9 @@ def run(full: bool = False) -> dict:
 
     # ---- bit-transparency at a size where the device reference still fits
     ref = _federation(model, task, policy, n_clients=48, cohort=16)
-    alt = _federation(model, task, policy, n_clients=48, cohort=16,
-                      tile=6, store="memmap")  # 16 = 6 + 6 + 4 (padded tile)
+    alt = _federation(
+        model, task, policy, n_clients=48, cohort=16, tile=6, store="memmap"
+    )  # 16 = 6 + 6 + 4 (padded tile)
     for r in range(2):
         ref.step(r), alt.step(r)
     tile_parity = _bitwise(_state(ref), _state(alt))
@@ -172,13 +211,19 @@ def run(full: bool = False) -> dict:
         "store_sparse": bool(store_sparse),
         "ledger_reconciles": True,  # reconcile(rel=0.12) raised otherwise
     }
-    print(f"clients={n_clients} cohort={cohort} tile={tile} "
-          f"({rounds} timed rounds, memmap store)")
+    print(
+        f"clients={n_clients} cohort={cohort} tile={tile} "
+        f"({rounds} timed rounds, memmap store)"
+    )
     print(f"  throughput : {rps:6.2f} rounds/s")
-    print(f"  memory     : pool logical {logical/1e6:.0f} MB, peak RSS delta "
-          f"{rss_total/1e6:.0f} MB (×{out['rss_over_logical']:.2f}; "
-          f"steady-state {rss_steady/1e6:.0f} MB), on disk {on_disk/1e6:.1f} MB")
-    print(f"  parity     : tiled+spilled == device untiled bitwise: {tile_parity}")
+    print(
+        f"  memory     : pool logical {logical/1e6:.0f} MB, peak RSS delta "
+        f"{rss_total/1e6:.0f} MB (×{out['rss_over_logical']:.2f}; "
+        f"steady-state {rss_steady/1e6:.0f} MB), on disk {on_disk/1e6:.1f} MB"
+    )
+    print(
+        f"  parity     : tiled+spilled == device untiled bitwise: {tile_parity}"
+    )
     path = save_json("fed_elastic", out)
     print(f"wrote {path}")
     for flag in ("tile_parity", "memory_bounded", "store_sparse"):

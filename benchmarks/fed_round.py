@@ -40,12 +40,21 @@ def _setup(batch=4, seq_len=32):
     # the reduced config: small enough that orchestration (not the model's
     # FLOPs) is the measured quantity — at paper scale the compute term is
     # identical between the two paths anyway
-    cfg = ModelConfig(name="fed-micro", family="decoder", n_layers=2,
-                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
-                      vocab_size=128, dtype=jnp.float32)
+    cfg = ModelConfig(
+        name="fed-micro",
+        family="decoder",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=128,
+        dtype=jnp.float32,
+    )
     model = build_model(cfg)
-    task = make_lm_task(vocab=cfg.vocab_size, batch=batch, seq_len=seq_len,
-                        temperature=0.5)
+    task = make_lm_task(
+        vocab=cfg.vocab_size, batch=batch, seq_len=seq_len, temperature=0.5
+    )
     policy = CompressionPolicy(
         default=make_codec("sbc"),
         rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),),
@@ -81,8 +90,9 @@ def legacy_loop(model, task, policy, *, n_clients, delay, sparsity, rounds):
             window = []
             for d in range(delay):
                 loss, g = step_fn(w, task.sample(r * delay + d, c))
-                w, ostate = opt.apply(ostate, g, w, 0.05,
-                                      jnp.asarray(r * delay + d))
+                w, ostate = opt.apply(
+                    ostate, g, w, 0.05, jnp.asarray(r * delay + d)
+                )
                 window.append(float(loss))
             client_opt[c] = ostate
             losses.append(float(np.mean(window)))  # whole window, not last
@@ -108,17 +118,25 @@ def legacy_loop(model, task, policy, *, n_clients, delay, sparsity, rounds):
     return times, losses, up_bytes / rounds
 
 
-def fed_subsystem(model, task, policy, *, n_clients, delay, sparsity, rounds,
-                  telemetry=None):
+def fed_subsystem(
+    model, task, policy, *, n_clients, delay, sparsity, rounds, telemetry=None
+):
     """The same workload through ParameterServer/ClientPool/RoundScheduler."""
     from repro.obs import NULL_TELEMETRY
 
     tel = NULL_TELEMETRY if telemetry is None else telemetry
-    server = ParameterServer(params=model.init(jax.random.PRNGKey(0)),
-                             up_policy=policy, down_sparsity=1.0)
+    server = ParameterServer(
+        params=model.init(jax.random.PRNGKey(0)),
+        up_policy=policy,
+        down_sparsity=1.0,
+    )
     pool = ClientPool(
-        model=model, optimizer=get_optimizer("momentum"), policy=policy,
-        task=task, n_clients=n_clients, lr=lambda it: 0.05,
+        model=model,
+        optimizer=get_optimizer("momentum"),
+        policy=policy,
+        task=task,
+        n_clients=n_clients,
+        lr=lambda it: 0.05,
         profiles=(ClientProfile(delay=delay, sparsity=sparsity),),
     )
     sched = RoundScheduler(server=server, pool=pool, cohort_size=n_clients)
@@ -175,19 +193,27 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
         "final_loss_legacy": float(loss_old[-1]),
         "ledger_reconciles": True,  # reconcile(rel=0.1) raised otherwise
     }
-    print(f"clients={n_clients} delay={delay} p={sparsity} "
-          f"({rounds} timed rounds)")
+    print(
+        f"clients={n_clients} delay={delay} p={sparsity} "
+        f"({rounds} timed rounds)"
+    )
     print(f"  legacy python loop : {rps_old:6.3f} rounds/s")
-    print(f"  vmapped cohort     : {rps_new:6.3f} rounds/s  "
-          f"(×{out['speedup']:.1f})")
-    print(f"  wire: up {up_new/1e3:.1f} kB/round, down {down_new/1e3:.1f} "
-          f"kB/round — ledger reconciles with Eq. 1/Eq. 5 every round")
+    print(
+        f"  vmapped cohort     : {rps_new:6.3f} rounds/s  "
+        f"(×{out['speedup']:.1f})"
+    )
+    print(
+        f"  wire: up {up_new/1e3:.1f} kB/round, down {down_new/1e3:.1f} "
+        f"kB/round — ledger reconciles with Eq. 1/Eq. 5 every round"
+    )
     name = "fed_round_smoke" if smoke else "fed_round"
     path = save_json(name, out)
     print(f"wrote {path}")
-    save_telemetry(name, telemetry,
-                   meta={"benchmark": name, "n_clients": n_clients,
-                         "rounds": rounds + 1})
+    save_telemetry(
+        name,
+        telemetry,
+        meta={"benchmark": name, "n_clients": n_clients, "rounds": rounds + 1},
+    )
     if not smoke and out["speedup"] < 3.0:
         raise AssertionError(
             f"vmapped cohort runner only ×{out['speedup']:.2f} over the "

@@ -21,31 +21,51 @@ def run(quick: bool = True) -> dict:
     grid = []
     for n in delays:
         for p in sparsities:
-            hist = run_training(cfg, task, compressor="sbc" if p < 1 else "none",
-                                n_rounds=budget, delay=n, sparsity=p, lr=lr)
+            hist = run_training(
+                cfg,
+                task,
+                compressor="sbc" if p < 1 else "none",
+                n_rounds=budget,
+                delay=n,
+                sparsity=p,
+                lr=lr,
+            )
             total_sparsity = p / n
-            grid.append({
-                "delay": n, "sparsity": p,
-                "total_sparsity": total_sparsity,
-                "final_loss": hist["loss"][-1],
-                "compression_rate": hist["compression_rate"],
-            })
-            print(f"delay={n:>3} p={p:>6}: loss {hist['loss'][-1]:.4f} "
-                  f"(total sparsity {total_sparsity:.1e})")
+            grid.append(
+                {
+                    "delay": n,
+                    "sparsity": p,
+                    "total_sparsity": total_sparsity,
+                    "final_loss": hist["loss"][-1],
+                    "compression_rate": hist["compression_rate"],
+                }
+            )
+            print(
+                f"delay={n:>3} p={p:>6}: loss {hist['loss'][-1]:.4f} "
+                f"(total sparsity {total_sparsity:.1e})"
+            )
 
     # diagonal-constancy check: group by total sparsity decade
     by_decade: dict[int, list[float]] = {}
     for g in grid:
         d = round(math.log10(g["total_sparsity"]))
         by_decade.setdefault(d, []).append(g["final_loss"])
-    diag = {str(d): {"mean": sum(v) / len(v),
-                     "spread": max(v) - min(v), "n": len(v)}
-            for d, v in by_decade.items() if len(v) > 1}
+    diag = {
+        str(d): {
+            "mean": sum(v) / len(v),
+            "spread": max(v) - min(v),
+            "n": len(v),
+        }
+        for d, v in by_decade.items()
+        if len(v) > 1
+    }
     out = {"grid": grid, "iso_diagonals": diag}
     save_json("fig3_sparsity_grid", out)
     for d, s in sorted(diag.items()):
-        print(f"total-sparsity decade 1e{d}: mean loss {s['mean']:.3f} "
-              f"spread {s['spread']:.3f} over {s['n']} points")
+        print(
+            f"total-sparsity decade 1e{d}: mean loss {s['mean']:.3f} "
+            f"spread {s['spread']:.3f} over {s['n']} points"
+        )
     return out
 
 

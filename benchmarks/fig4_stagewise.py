@@ -39,11 +39,13 @@ def run(quick: bool = True) -> dict:
                 # stage-wise schedules need the trainer layer directly;
                 # the legacy-surface warning targets end users
                 warnings.simplefilter("ignore", DeprecationWarning)
-                tr = DSGDTrainer(model=model, compressor=make_compressor(comp),
-                                 optimizer=get_optimizer(cfg.local_opt),
-                                 n_clients=4,
-                                 lr=lambda it: jnp.where(it < half, lr0,
-                                                         lr0 * 0.1))
+                tr = DSGDTrainer(
+                    model=model,
+                    compressor=make_compressor(comp),
+                    optimizer=get_optimizer(cfg.local_opt),
+                    n_clients=4,
+                    lr=lambda it: jnp.where(it < half, lr0, lr0 * 0.1),
+                )
             state = tr.init(jax.random.PRNGKey(0))
             losses, it, r = [], 0, 0
             while it < iters:
@@ -61,8 +63,10 @@ def run(quick: bool = True) -> dict:
                 "loss_end_phase2": phase2[-1] if phase2 else None,
                 "delay": delay, "sparsity": p,
             }
-            print(f"{key:>28}: phase1 {out[key]['loss_end_phase1']:.4f}  "
-                  f"phase2 {out[key]['loss_end_phase2']:.4f}")
+            print(
+                f"{key:>28}: phase1 {out[key]['loss_end_phase1']:.4f}  "
+                f"phase2 {out[key]['loss_end_phase2']:.4f}"
+            )
     save_json("fig4_stagewise", out)
     return out
 

@@ -18,8 +18,15 @@ def run(quick: bool = True) -> dict:
     for name, comp, delay, p in METHODS:
         if quick and delay > n_rounds // 2:
             delay = max(1, n_rounds // 4)
-        hist = run_training(cfg, task, compressor=comp, n_rounds=n_rounds,
-                            delay=delay, sparsity=p, lr=lr)
+        hist = run_training(
+            cfg,
+            task,
+            compressor=comp,
+            n_rounds=n_rounds,
+            delay=delay,
+            sparsity=p,
+            lr=lr,
+        )
         bits = np.cumsum(hist["bits_per_client"]).tolist()
         out[name] = {
             "iterations": hist["iterations"],
@@ -28,8 +35,10 @@ def run(quick: bool = True) -> dict:
             "final_loss": hist["loss"][-1],
             "total_bits": bits[-1],
         }
-        print(f"{name:>14}: final loss {hist['loss'][-1]:.4f} after "
-              f"{hist['iterations'][-1]+delay} iters, {bits[-1]:.3e} bits up")
+        print(
+            f"{name:>14}: final loss {hist['loss'][-1]:.4f} after "
+            f"{hist['iterations'][-1] + delay} iters, {bits[-1]:.3e} bits up"
+        )
 
     # loss-at-equal-bits comparison (the paper's right-panel reading)
     base_bits = out["baseline"]["total_bits"]

@@ -1,0 +1,136 @@
+"""Device-side wire packing microbench: pack+decode turnaround per path.
+
+Times one wire TURNAROUND for a batch of sparse rows (one client upload):
+selected positions → transport-grade Golomb bytes → positions again at
+the server, two ways:
+
+  host      the pre-§11 `repro.core.golomb` path behind ``Wire.pack``:
+            one ``encode_positions_packed`` per row, then the server's
+            sequential ``decode_positions`` scan per stream (the
+            parameter-server hot path).
+  device    the §11 kernels the flat exchange uses: one vmapped
+            ``bits_from_positions`` + a single ``seg_packbits`` launch
+            (exactly ``ShardedFlatParamSpace._pack_local``'s idiom),
+            log-parallel ``golomb_decode_rows``, and transport bytes as
+            a truncating copy (``golomb.packed_words_to_bytes``).
+
+Both paths must produce byte-identical streams per row and decode back
+to the original positions (asserted).  The row geometry matches the
+embedding segment of the dist_flat bench model: n=32768, p=0.01 →
+k=328, b*=6, 88 words/row.
+
+  PYTHONPATH=src python -m benchmarks.pack_kernels          # quick
+  PYTHONPATH=src python -m benchmarks.run --only pack_kernels
+"""
+from __future__ import annotations
+
+import functools
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import golomb
+from repro.kernels.pack import (
+    bits_from_positions,
+    golomb_decode_rows,
+    pack_bit_rows,
+    row_words,
+)
+
+N = 32_768
+P = 0.01
+
+
+def run(quick: bool = True) -> dict:
+    rows = 32 if quick else 128
+    repeats = 7 if quick else 20
+    k = max(1, round(N * P))
+    bstar = golomb.golomb_bstar(P)
+    w = row_words(N, k, bstar)
+    scores = jax.random.normal(jax.random.PRNGKey(0), (rows, N))
+    idx = jnp.sort(jnp.argsort(scores, axis=1)[:, -k:], axis=1).astype(
+        jnp.int32
+    )
+    idx_np = np.asarray(idx)
+
+    def _pack(pos):
+        bits, nb = jax.vmap(
+            functools.partial(bits_from_positions, bstar=bstar, cap32=32 * w)
+        )(pos)
+        return pack_bit_rows(bits), nb
+
+    pack = jax.jit(_pack)
+    dec = jax.jit(lambda ws: golomb_decode_rows(ws, k=k, bstar=bstar))
+
+    def device_round() -> list:
+        words, nbits = pack(idx)
+        decoded = dec(words)
+        jax.block_until_ready(decoded)
+        w_np = np.asarray(jax.device_get(words))
+        nb_np = np.asarray(jax.device_get(nbits))
+        return [
+            golomb.packed_words_to_bytes(w_np[r], int(nb_np[r]))
+            for r in range(rows)
+        ]
+
+    def host_round() -> list:
+        blobs = []
+        for r in range(rows):
+            blob, nb = golomb.encode_positions_packed(idx_np[r], P)
+            bits = np.unpackbits(np.frombuffer(blob, np.uint8))[:nb]
+            golomb.decode_positions(bits, P)
+            blobs.append(blob)
+        return blobs
+
+    dev_blobs = device_round()  # compile + correctness anchor
+    host_blobs = host_round()
+    byte_identical = dev_blobs == host_blobs
+    words, _ = pack(idx)
+    decoded = np.asarray(dec(words))
+    decode_roundtrip = bool(np.array_equal(decoded, idx_np))
+
+    t_dev, t_host = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        device_round()
+        t_dev.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        host_round()
+        t_host.append(time.perf_counter() - t0)
+    dev_ms = 1e3 * statistics.median(t_dev)
+    host_ms = 1e3 * statistics.median(t_host)
+
+    out = {
+        "n": N,
+        "rows": rows,
+        "p": P,
+        "k": k,
+        "bstar": bstar,
+        "words_per_row": w,
+        "repeats": repeats,
+        "bytes_total": sum(len(b) for b in dev_blobs),
+        "byte_identical": bool(byte_identical),
+        "decode_roundtrip": decode_roundtrip,
+        "host_turnaround_ms": host_ms,
+        "device_turnaround_ms": dev_ms,
+        "speedup": host_ms / dev_ms,
+    }
+    assert out["byte_identical"], "device stream != host Wire.pack stream"
+    assert out["decode_roundtrip"], "device decode lost positions"
+    print(
+        f"{rows} rows × n={N} (k={k}, b*={bstar}, {w} words/row): "
+        f"host {host_ms:.2f} ms   device {dev_ms:.2f} ms   "
+        f"x{out['speedup']:.2f}  ({out['bytes_total']} bytes, "
+        f"identical={out['byte_identical']})"
+    )
+    path = save_json("pack_kernels", out)
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

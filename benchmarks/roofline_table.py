@@ -10,8 +10,11 @@ import os
 
 from benchmarks.common import save_json
 
-DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                          "experiments", "dryrun")
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments",
+    "dryrun",
+)
 
 
 def load_records(mesh: str = "single") -> list[dict]:
@@ -25,33 +28,55 @@ def load_records(mesh: str = "single") -> list[dict]:
 def run(quick: bool = True, mesh: str = "single") -> dict:
     recs = load_records(mesh)
     if not recs:
-        print("no dry-run records found — run `python -m repro.launch.dryrun --all` first")
+        print(
+            "no dry-run records found — run "
+            "`python -m repro.launch.dryrun --all` first"
+        )
         return {}
     rows = []
-    print(f"{'arch':>26} {'shape':>12} {'dom':>10} {'C(s)':>8} {'M(s)':>8} "
-          f"{'X(s)':>8} {'useful':>7} {'temp GiB':>9}")
+    print(
+        f"{'arch':>26} {'shape':>12} {'dom':>10} {'C(s)':>8} {'M(s)':>8} "
+        f"{'X(s)':>8} {'useful':>7} {'temp GiB':>9}"
+    )
     for r in recs:
         if r.get("status") == "skip":
-            rows.append({"arch": r["arch"], "shape": r["shape"], "status": "skip",
-                         "reason": r["reason"]})
-            print(f"{r['arch']:>26} {r['shape']:>12} {'(skip)':>10}  {r['reason'][:48]}")
+            rows.append(
+                {
+                    "arch": r["arch"],
+                    "shape": r["shape"],
+                    "status": "skip",
+                    "reason": r["reason"],
+                }
+            )
+            print(
+                f"{r['arch']:>26} {r['shape']:>12} {'(skip)':>10}  "
+                f"{r['reason'][:48]}"
+            )
             continue
         if r.get("status") != "ok":
             rows.append({"arch": r["arch"], "shape": r["shape"], "status": "error"})
             continue
         rf = r["roofline"]
         temp = (r["memory"].get("temp_bytes") or 0) / 2**30
-        rows.append({
-            "arch": r["arch"], "shape": r["shape"], "status": "ok",
-            "dominant": rf["dominant"],
-            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
-            "collective_s": rf["collective_s"],
-            "useful_ratio": rf["useful_ratio"],
-            "temp_gib": temp,
-        })
-        print(f"{r['arch']:>26} {r['shape']:>12} {rf['dominant']:>10} "
-              f"{rf['compute_s']:>8.3f} {rf['memory_s']:>8.3f} "
-              f"{rf['collective_s']:>8.3f} {rf['useful_ratio']:>7.2f} {temp:>9.2f}")
+        rows.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "status": "ok",
+                "dominant": rf["dominant"],
+                "compute_s": rf["compute_s"],
+                "memory_s": rf["memory_s"],
+                "collective_s": rf["collective_s"],
+                "useful_ratio": rf["useful_ratio"],
+                "temp_gib": temp,
+            }
+        )
+        print(
+            f"{r['arch']:>26} {r['shape']:>12} {rf['dominant']:>10} "
+            f"{rf['compute_s']:>8.3f} {rf['memory_s']:>8.3f} "
+            f"{rf['collective_s']:>8.3f} {rf['useful_ratio']:>7.2f} "
+            f"{temp:>9.2f}"
+        )
     out = {"mesh": mesh, "rows": rows}
     save_json(f"roofline_table_{mesh}", out)
     return out

@@ -8,6 +8,9 @@
   fig5_convergence    Fig. 5-8  loss vs iterations and vs transferred bits
   roofline_table      §Roofline aggregation of dry-run records (if present)
   wire_throughput     §Wire    pack/unpack microbench (DESIGN.md §5)
+  pack_kernels        §11      device select→pack kernels vs host Golomb
+                               encode+decode turnaround, byte-identity
+                               asserted (docs/kernels.md)
   compress_e2e        §Flat    whole-pytree compress+pack: fast path vs
                                per-leaf baseline (DESIGN.md §10)
   fed_round           §Fed     vmapped cohort runner vs legacy loop (§9)
@@ -29,16 +32,23 @@ import argparse
 import sys
 import time
 
-SMOKE = ("table1_rates", "wire_throughput", "compress_e2e", "dist_flat",
-         "run_api_overhead")
+SMOKE = (
+    "table1_rates",
+    "wire_throughput",
+    "pack_kernels",
+    "compress_e2e",
+    "dist_flat",
+    "run_api_overhead",
+)
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale runs (slow)")
     ap.add_argument("--only", default=None, help="run a single benchmark")
-    ap.add_argument("--smoke", action="store_true",
-                    help="fast training-free subset (CI)")
+    ap.add_argument(
+        "--smoke", action="store_true", help="fast training-free subset (CI)"
+    )
     return ap
 
 
@@ -46,14 +56,25 @@ def main(argv=None):
     args = build_parser().parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (broadcast_fanout, compress_e2e, dist_flat,
-                            fed_round, fig3_sparsity_grid, fig4_stagewise,
-                            fig5_convergence, roofline_table,
-                            run_api_overhead, table1_rates,
-                            table2_accuracy, wire_throughput)
+    from benchmarks import (
+        broadcast_fanout,
+        compress_e2e,
+        dist_flat,
+        fed_round,
+        fig3_sparsity_grid,
+        fig4_stagewise,
+        fig5_convergence,
+        pack_kernels,
+        roofline_table,
+        run_api_overhead,
+        table1_rates,
+        table2_accuracy,
+        wire_throughput,
+    )
 
     suite = {
         "table1_rates": table1_rates.run,
+        "pack_kernels": pack_kernels.run,
         "table2_accuracy": table2_accuracy.run,
         "fig3_sparsity_grid": fig3_sparsity_grid.run,
         "fig4_stagewise": fig4_stagewise.run,

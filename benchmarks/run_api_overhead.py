@@ -44,8 +44,15 @@ TELEMETRY_BOUND = 0.01  # disabled telemetry must stay under 1%
 
 
 def _spec(rounds: int) -> RunSpec:
-    return RunSpec(preset=PRESET, backend="local", rounds=rounds,
-                   batch=16, clients=4, delay=1, sparsity=0.01)
+    return RunSpec(
+        preset=PRESET,
+        backend="local",
+        rounds=rounds,
+        batch=16,
+        clients=4,
+        delay=1,
+        sparsity=0.01,
+    )
 
 
 def bench(timed_rounds: int = ROUNDS_TIMED) -> dict:
@@ -123,8 +130,9 @@ def bench(timed_rounds: int = ROUNDS_TIMED) -> dict:
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="fewer timed rounds (what CI runs)")
+    ap.add_argument(
+        "--smoke", action="store_true", help="fewer timed rounds (what CI runs)"
+    )
     args = ap.parse_args(argv)
     rec = bench(timed_rounds=16 if args.smoke else ROUNDS_TIMED)
     path = save_json("run_api_overhead", rec)

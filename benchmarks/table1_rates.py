@@ -39,14 +39,20 @@ def run(quick: bool = True) -> dict:
     out = {"table1": rows, "golomb_validation": golomb_check}
     save_json("table1_rates", out)
 
-    print(f"{'method':>20} {'f':>7} {'p':>7} {'vbits':>6} {'pbits':>6} {'rate':>10}")
+    print(
+        f"{'method':>20} {'f':>7} {'p':>7} {'vbits':>6} {'pbits':>6} {'rate':>10}"
+    )
     for r in rows:
-        print(f"{r['method']:>20} {r['temporal_sparsity']:>7.3f} "
-              f"{r['gradient_sparsity']:>7.3f} {r['value_bits']:>6.1f} "
-              f"{r['position_bits']:>6.2f} ×{r['compression_rate']:>9.1f}")
+        print(
+            f"{r['method']:>20} {r['temporal_sparsity']:>7.3f} "
+            f"{r['gradient_sparsity']:>7.3f} {r['value_bits']:>6.1f} "
+            f"{r['position_bits']:>6.2f} ×{r['compression_rate']:>9.1f}"
+        )
     for p, g in golomb_check.items():
-        print(f"golomb p={p}: measured {g['measured_bits_per_pos']} bits/pos "
-              f"vs Eq.5 {g['eq5_expected']} (×{g['naive_16bit_gain']} vs 16-bit)")
+        print(
+            f"golomb p={p}: measured {g['measured_bits_per_pos']} bits/pos "
+            f"vs Eq.5 {g['eq5_expected']} (×{g['naive_16bit_gain']} vs 16-bit)"
+        )
     return out
 
 

@@ -17,8 +17,15 @@ def run(quick: bool = True) -> dict:
         for name, comp, delay, p in METHODS:
             if quick and name == "sbc3":
                 delay = min(delay, 20)  # keep ≥2 rounds at quick scale
-            hist = run_training(cfg, task, compressor=comp, n_rounds=n_rounds,
-                                delay=delay, sparsity=p, lr=lr)
+            hist = run_training(
+                cfg,
+                task,
+                compressor=comp,
+                n_rounds=n_rounds,
+                delay=delay,
+                sparsity=p,
+                lr=lr,
+            )
             rows[name] = {
                 "final_loss": hist["loss"][-1],
                 "first_loss": hist["loss"][0],
@@ -26,9 +33,11 @@ def run(quick: bool = True) -> dict:
                 "upload_MB": hist["total_upload_bits"] / 8e6,
                 "iterations": hist["iterations"][-1] + delay,
             }
-            print(f"{tag:>22} {name:>14}: loss {rows[name]['final_loss']:.4f} "
-                  f"×{rows[name]['compression_rate']:.0f} "
-                  f"({rows[name]['upload_MB']:.3f} MB up)")
+            print(
+                f"{tag:>22} {name:>14}: loss {rows[name]['final_loss']:.4f} "
+                f"×{rows[name]['compression_rate']:.0f} "
+                f"({rows[name]['upload_MB']:.3f} MB up)"
+            )
         results[tag] = rows
     save_json("table2_accuracy", results)
     return results

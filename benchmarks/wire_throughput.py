@@ -64,13 +64,17 @@ def run(quick: bool = True) -> None:
     n = 1_000_000 if quick else 25_000_000
     repeats = 5 if quick else 20
     rows = [bench_one(name, n, 0.01, repeats) for name in CODECS]
-    print(f"{'codec':10s} {'packed':>10s} {'ratio':>8s} {'pack ms':>9s} "
-          f"{'unpack ms':>9s} {'pack MB/s':>10s} {'unpack MB/s':>11s}")
+    print(
+        f"{'codec':10s} {'packed':>10s} {'ratio':>8s} {'pack ms':>9s} "
+        f"{'unpack ms':>9s} {'pack MB/s':>10s} {'unpack MB/s':>11s}"
+    )
     for r in rows:
-        print(f"{r['codec']:10s} {r['packed_bytes']:>9d}B "
-              f"×{r['compression']:>6.0f} {r['pack_ms']:>8.2f} "
-              f"{r['unpack_ms']:>8.2f} {r['pack_dense_mb_s']:>9.0f} "
-              f"{r['unpack_dense_mb_s']:>10.0f}")
+        print(
+            f"{r['codec']:10s} {r['packed_bytes']:>9d}B "
+            f"×{r['compression']:>6.0f} {r['pack_ms']:>8.2f} "
+            f"{r['unpack_ms']:>8.2f} {r['pack_dense_mb_s']:>9.0f} "
+            f"{r['unpack_dense_mb_s']:>10.0f}"
+        )
     path = save_json("wire_throughput", rows)
     print(f"wrote {path}")
 

@@ -290,13 +290,18 @@ class LocalVmapChannel:
         compressed0: PyTree,
         rate: float,
         bits_analytic_per_client: float,
+        device_pack: bool = False,
     ) -> float:
         """Meter client 0's real packed upload and extrapolate ×C into the
         ledger (every client's analytic size is identical; measured sizes
-        are one geometric draw each).  Returns client 0's measured bits."""
+        are one geometric draw each).  Returns client 0's measured bits.
+
+        With ``device_pack`` the Golomb position streams are produced by
+        the fused select→pack Pallas kernel (byte-identical to the host
+        encoder — held by tests/test_channel_parity.py)."""
         with self.telemetry.span("encode", round=round_idx, client=0):
             w = self.wire(params, rate, round_idx)
-            blob, bits = w.pack_with_bits(compressed0)
+            blob, bits = w.pack_with_bits(compressed0, device_pack=device_pack)
         measured = float(bits)
         up_bytes = len(blob) * self.n_clients
         self.ledger.record_up(
@@ -417,6 +422,7 @@ class ShardedGspmdChannel:
     residual_dtype: Any = jnp.float32
     flat_space: Any = None  # ShardedFlatParamSpace | None
     flat_engine: str = "exact"  # "exact" | "hist"
+    device_pack: bool = False  # pack Golomb wire streams on-device (§11)
 
     def __post_init__(self) -> None:
         if self.flat_engine not in ("exact", "hist"):
@@ -425,6 +431,15 @@ class ShardedGspmdChannel:
             raise ValueError(
                 "flat_engine='hist' needs the sharded flat fast path "
                 "(fast=True with all-f32 leaves and an f32 residual_dtype)"
+            )
+        if self.device_pack and (
+            self.flat_space is None or self.flat_engine != "exact"
+        ):
+            raise ValueError(
+                "device_pack needs the sharded flat fast path with the "
+                "exact engine (fast=True, flat_engine='exact', all-f32 "
+                "leaves) — the hist engine and the per-leaf exchange have "
+                "no packed position stream to produce on-device"
             )
         self.ledger = BandwidthLedger()
         self.telemetry = NULL_TELEMETRY  # build_run swaps in an enabled one
@@ -455,7 +470,18 @@ class ShardedGspmdChannel:
         own_specs = (
             tuple(in_specs) if need_own else tuple(type(s)() for s in in_specs)
         )
-        if self.flat_space is not None:
+        packed = None
+        if self.device_pack:
+            # extra outputs: this round's device-packed Golomb word
+            # buffers + exact per-row bit counts for EVERY (client,
+            # shard) — same layout/sharding as the flat residual
+            mean_leaves, new_residual, own_leaves, packed = shard_map(
+                lambda res, *leaves: self.exchange_flat(res, leaves, need_own),
+                mesh=mesh, in_specs=(res_spec,) + tuple(in_specs),
+                out_specs=(tuple(in_specs), res_spec, own_specs,
+                           (res_spec, res_spec)),
+            )(residual, *delta_leaves)
+        elif self.flat_space is not None:
             mean_leaves, new_residual, own_leaves = shard_map(
                 lambda res, *leaves: self.exchange_flat(res, leaves, need_own),
                 mesh=mesh, in_specs=(res_spec,) + tuple(in_specs),
@@ -481,6 +507,8 @@ class ShardedGspmdChannel:
         own_tree = (
             jax.tree.unflatten(treedef, own_leaves) if need_own else None
         )
+        if self.device_pack:
+            return mean_tree, new_residual, own_tree, packed
         return mean_tree, new_residual, own_tree
 
     # -------------------------------------------------- shard_map bodies
@@ -520,9 +548,16 @@ class ShardedGspmdChannel:
         one launch per pass."""
         space = self.flat_space
         bodies = [leaf[0] for leaf in leaves]
-        fn = (space.exchange_local if self.flat_engine == "exact"
-              else space.exchange_local_hist)
-        mean_f, own_f, new_res_f = fn(bodies, res[0, 0])
+        packed = None
+        if self.device_pack:
+            mean_f, own_f, new_res_f, words, nbits = space.exchange_local(
+                bodies, res[0, 0], device_pack=True
+            )
+            packed = (words[None, None], nbits[None, None])
+        else:
+            fn = (space.exchange_local if self.flat_engine == "exact"
+                  else space.exchange_local_hist)
+            mean_f, own_f, new_res_f = fn(bodies, res[0, 0])
         means = tuple(
             m.astype(leaf.dtype)[None] for m, leaf in
             zip(space.unflatten_local(mean_f), leaves)
@@ -536,6 +571,8 @@ class ShardedGspmdChannel:
             owns = tuple(
                 jnp.zeros((1,) * leaf.ndim, leaf.dtype) for leaf in leaves
             )
+        if self.device_pack:
+            return means, new_res_f[None, None], owns, packed
         return means, new_res_f[None, None], owns
 
     # ------------------------------------------------------- bit accounting
@@ -586,17 +623,77 @@ class ShardedGspmdChannel:
                     total += float(encode_positions(pos, gl.rate).size) + 32.0
         return total
 
-    def record_round(self, round_idx: int, *, own_client0: PyTree) -> float:
-        """Meter CLIENT 0's upload and extrapolate ×C (see ledger docs).
+    def measured_bits_per_client(self, packed_nbits) -> list:
+        """Real wire bits of EVERY client's upload, from the device-packed
+        streams' exact bit counts.
 
-        The metric is explicitly named ``own_client0``: only client 0's
-        per-shard Golomb streams are host-encoded (one geometric draw);
-        the ledger row is that sample ×C, not a cohort sum — see the
-        sampling caveat in docs/wire-format.md.
+        ``packed_nbits`` is the second ``round_exchange`` packed output:
+        i32[n_clients, shards_per_client, n_mu] per-(client, shard, row)
+        Golomb position bits.  Each client pays its own position streams
+        + one 32-bit μ per (shard, row) + 32 bits/entry for dense leaves
+        — no host re-encode, no client-0 sampling.  Unlike the sampled
+        :meth:`measured_bits` (which infers positions from the nonzeros
+        of the reconstructed ΔW*), these counts meter the stream as
+        transmitted, including positions whose μ is exactly zero.
         """
+        nb = np.asarray(jax.device_get(packed_nbits))
+        dense = sum(
+            32.0 * int(np.prod(gl.global_shape) or 1)
+            for gl in self.leaves if gl.mode == "dense"
+        )
+        # The S axis is DEVICES per client, not distinct shards: a segment
+        # replicated over a shard axis (n_shards < S) is packed identically
+        # on every replica, so weight each μ-row by n_shards/S to count
+        # every distinct stream exactly once (matching the sampled host
+        # path, which iterates shard_grid blocks).
+        S = nb.shape[1]
+        sparse = self.flat_space._sparse
+        row_w = (
+            np.concatenate(
+                [np.full((s.rows,), s.n_shards / S) for s in sparse]
+            )
+            if sparse else np.zeros((0,))
+        )
+        pos_bits = (nb.astype(np.float64) * row_w[None, None, :]).sum(axis=(1, 2))
+        mu_bits = 32.0 * float(row_w.sum()) * S  # one μ per distinct (shard, row)
+        return [float(pos_bits[c]) + mu_bits + dense for c in range(nb.shape[0])]
+
+    def record_round(
+        self,
+        round_idx: int,
+        *,
+        own_client0: PyTree = None,
+        packed_nbits=None,
+    ) -> float:
+        """Meter the round's uploads into the ledger; returns bits/client.
+
+        With ``packed_nbits`` (device_pack active): EVERY client's real
+        packed stream is metered from the device-side bit counts — the
+        ledger row is a true cohort sum and the return value the cohort
+        mean.  Without it, CLIENT 0's upload is host-encoded and
+        extrapolated ×C (one geometric draw, explicitly a sample — see
+        docs/wire-format.md).
+        """
+        analytic = self.bits().per_client
+        if packed_nbits is not None:
+            with self.telemetry.span("encode", round=round_idx):
+                per_client = self.measured_bits_per_client(packed_nbits)
+            for ci, b in enumerate(per_client):
+                self.telemetry.metrics.gauge(
+                    "wire/client_bits_measured", b,
+                    round=round_idx, client=ci,
+                )
+            total = float(sum(per_client))
+            self.ledger.record_up(
+                round_idx,
+                clients=tuple(range(self.n_clients)),
+                up_bytes=sum(int(-(-b // 8)) for b in per_client),
+                up_bits_measured=total,
+                up_bits_analytic=analytic * self.n_clients,
+            )
+            return total / self.n_clients
         with self.telemetry.span("encode", round=round_idx, client=0):
             measured = self.measured_bits(own_client0)
-        analytic = self.bits().per_client
         self.telemetry.metrics.gauge(
             "wire/own_client0_bits_measured", measured,
             round=round_idx, client=0,

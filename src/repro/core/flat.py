@@ -49,10 +49,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.golomb import golomb_bstar
 from repro.core.stages import LeafCompressed, k_for
 from repro.kernels.flat import seg_binarize_apply, seg_hist2side, seg_moments
 from repro.kernels.hist2side import SPAN_OCTAVES, bucket_lower_edges
 from repro.kernels.ops import _side_threshold, on_tpu
+from repro.kernels.pack import (
+    bits_from_positions,
+    golomb_decode_rows,
+    row_words,
+    seg_packbits,
+)
 
 PyTree = Any
 
@@ -574,6 +581,19 @@ class ShardedFlatParamSpace:
             np.concatenate(pos_row) if pos_row else np.zeros((0,), np.int32)
         )
         self.n_pos = int(self._pos_row.shape[0])
+        # device-pack layout: one packed uint32 Golomb stream per
+        # (segment, row), capacity-padded to whole words so the
+        # concatenated word buffer — and every row's slice of it — is
+        # static.  ``(b*, words/row, word offset)`` per sparse segment.
+        winfo: List[Tuple[int, int, int]] = []
+        woff = 0
+        for s in self._sparse:
+            b = golomb_bstar(s.rate)
+            w = row_words(s.n_loc, s.k, b)
+            winfo.append((b, w, woff))
+            woff += s.rows * w
+        self._pack_info = tuple(winfo)
+        self.n_pack_words = woff
 
     # ------------------------------------------------------------- building
 
@@ -661,7 +681,14 @@ class ShardedFlatParamSpace:
 
     # ------------------------------------------------------- exact exchange
 
-    def exchange_local(self, bodies, res_flat: Optional[jax.Array]) -> tuple:
+    def exchange_local(
+        self,
+        bodies,
+        res_flat: Optional[jax.Array],
+        *,
+        device_pack: bool = False,
+        interpret: Optional[bool] = None,
+    ) -> tuple:
         """Inside shard_map: compress this device's shard of every leaf
         and exchange.  Returns ``(mean_flat, own_flat, new_res_flat)`` —
         the aggregated update, this client's ΔW*, and the new residual,
@@ -675,12 +702,25 @@ class ShardedFlatParamSpace:
         the per-leaf path bit for bit).  Dense segments ride one
         ``pmean`` of the packed dense slice; skip segments move nothing
         and keep their full update in the residual.
+
+        ``device_pack=True`` replaces the position gather with the wire
+        form itself: every (segment, row)'s surviving positions are
+        Golomb-packed on-device into ``uint32`` words (one
+        :func:`~repro.kernels.pack.seg_packbits` launch over the whole
+        local stream), the all_gather moves those word buffers
+        (≈ b̄(p) bits/position instead of 32), and receivers recover
+        positions with the pointer-doubling device decoder.  Returns two
+        extra outputs ``(words u32[n_pack_words], nbits i32[n_mu])`` —
+        this shard's packed streams + exact per-row bit counts, which
+        are byte-identical to the host ``encode_positions_packed`` and
+        feed the per-client wire metering.  The aggregated update,
+        residual, and ΔW* are bit-identical to ``device_pack=False``.
         """
         acc = self.flatten_local(bodies)
         if res_flat is not None:
             acc = res_flat + acc
 
-        pos_parts, mu_parts = [], []
+        pos_parts, mu_parts, idx_parts = [], [], []
         for s in self._sparse:
             x = acc[s.offset:s.offset + s.rows * s.n_loc].reshape(
                 s.rows, s.n_loc
@@ -700,6 +740,7 @@ class ShardedFlatParamSpace:
             base = s.offset + np.arange(s.rows, dtype=np.int32) * s.n_loc
             pos_parts.append((idx + jnp.asarray(base)[:, None]).reshape(-1))
             mu_parts.append(mu)
+            idx_parts.append(idx)
 
         own = jnp.zeros((self.n_pad,), jnp.float32)
         if pos_parts:
@@ -712,15 +753,30 @@ class ShardedFlatParamSpace:
             dvals = acc[dense_idx]
             own = own.at[dense_idx].set(dvals)
 
+        words = nbits = None
+        if device_pack:
+            if interpret is None:
+                interpret = not on_tpu()
+            words, nbits = self._pack_local(idx_parts, interpret)
+
         if self.client_axes and self.n_clients > 1 and pos_parts:
             # THE exchange: the packed (positions, μ) streams cross the
-            # client axes once, not once per leaf.
-            gpos, gmu = pos, mu
+            # client axes once, not once per leaf.  With device_pack the
+            # position stream IS the wire form — packed uint32 Golomb
+            # word buffers (≈ b̄(p) bits/position) instead of raw 32-bit
+            # index arrays.
+            gsrc = words if device_pack else pos
+            gmu = mu
             for ax in self.client_axes:
-                gpos = jax.lax.all_gather(gpos, ax)
+                gsrc = jax.lax.all_gather(gsrc, ax)
                 gmu = jax.lax.all_gather(gmu, ax)
-            gpos = gpos.reshape(self.n_clients, self.n_pos)
             gmu = gmu.reshape(self.n_clients, self.n_mu)
+            if device_pack:
+                gpos = self._decode_gathered(
+                    gsrc.reshape(self.n_clients, self.n_pack_words)
+                )
+            else:
+                gpos = gsrc.reshape(self.n_clients, self.n_pos)
 
             def add_client(buf, ci):
                 vals = jnp.take(gmu[ci], pos_row) / self.n_clients
@@ -739,7 +795,58 @@ class ShardedFlatParamSpace:
             mean = mean.at[dense_idx].set(dv)
 
         new_res = acc - own if res_flat is not None else None
+        if device_pack:
+            return mean, own, new_res, words, nbits
         return mean, own, new_res
+
+    # ------------------------------------------------- device wire packing
+
+    def _pack_local(self, idx_parts: List[jax.Array], interpret: bool) -> tuple:
+        """This shard's survivors → (packed u32 words, per-row bit counts).
+
+        Builds every (segment, row)'s Golomb bit stream at its static
+        offset in one concatenated bit buffer, then folds bits into
+        ``uint32`` words with ONE ``seg_packbits`` launch over the whole
+        flat set — the wire bytes for this shard, produced on-device.
+        """
+        if not idx_parts:
+            return (jnp.zeros((0,), jnp.uint32), jnp.zeros((0,), jnp.int32))
+        chunks, nb_parts = [], []
+        for s, (b, w, _), idx_s in zip(self._sparse, self._pack_info, idx_parts):
+            bits_s, nb_s = jax.vmap(
+                lambda p, b=b, cap=32 * w: bits_from_positions(
+                    p, bstar=b, cap32=cap
+                )
+            )(jnp.sort(idx_s, axis=1))
+            chunks.append(bits_s.reshape(-1))
+            nb_parts.append(nb_s)
+        allbits = jnp.concatenate(chunks)
+        pad = -allbits.shape[0] % (32 * self.lanes)
+        if pad:
+            allbits = jnp.concatenate(
+                [allbits, jnp.zeros((pad,), allbits.dtype)]
+            )
+        planes = allbits.reshape(-1, 32).T
+        words = seg_packbits(planes, lanes=self.lanes, interpret=interpret)
+        return words[: self.n_pack_words], jnp.concatenate(nb_parts)
+
+    def _decode_gathered(self, gw: jax.Array) -> jax.Array:
+        """Gathered word buffers u32[C, n_pack_words] → global positions
+        i32[C, n_pos] via the pointer-doubling Golomb decoder, segment by
+        segment (each has its own static k, b*, and row stride)."""
+        gpos_parts = []
+        for s, (b, w, off) in zip(self._sparse, self._pack_info):
+            seg_w = gw[:, off:off + s.rows * w].reshape(
+                self.n_clients, s.rows, w
+            )
+            ploc = golomb_decode_rows(seg_w, k=s.k, bstar=b)
+            base = s.offset + np.arange(s.rows, dtype=np.int32) * s.n_loc
+            gpos_parts.append(
+                (ploc + jnp.asarray(base)[None, :, None]).reshape(
+                    self.n_clients, -1
+                )
+            )
+        return jnp.concatenate(gpos_parts, axis=1)
 
     # -------------------------------------------------------- hist exchange
 

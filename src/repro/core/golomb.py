@@ -110,6 +110,22 @@ def encode_positions_packed(indices: np.ndarray, p: float) -> tuple[bytes, int]:
     return np.packbits(bits).tobytes(), int(bits.size)
 
 
+def packed_words_to_bytes(words: np.ndarray, nbits: int) -> bytes:
+    """Device word buffer → transport bytes, byte-identical to
+    :func:`encode_positions_packed`.
+
+    The device packers (:mod:`repro.kernels.pack`) put stream bit ``b``
+    in word ``b >> 5`` at bit position ``31 - (b & 31)``, so a
+    big-endian byte view truncated to ``ceil(nbits/8)`` IS the
+    ``np.packbits`` output — this is the whole device-to-bytes copy.
+    """
+    if nbits <= 0:
+        return b""
+    return np.ascontiguousarray(
+        np.asarray(words, dtype=np.uint32)
+    ).astype(">u4").tobytes()[: -(-int(nbits) // 8)]
+
+
 def decode_positions(msg: np.ndarray, p: float) -> np.ndarray:
     """Alg. 4: decode a Golomb bitstream back to absolute positions.
 

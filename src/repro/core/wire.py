@@ -148,20 +148,27 @@ def _nbytes(bits: int) -> int:
 # ------------------------------------------------------------ leaf pack side
 
 
-def pack_leaf(comp: LeafCompressed, spec: LeafSpec) -> Tuple[bytes, int]:
+def pack_leaf(
+    comp: LeafCompressed, spec: LeafSpec, golomb_payload=None
+) -> Tuple[bytes, int]:
     """Serialize one compressed leaf → (payload bytes, exact payload bits).
 
     The exact bit count is pre-byte-padding: Golomb bitstream length,
     1 bit per sign/side, ⌈log2⌉ bits per code, 32 per f32 scalar.
+    ``golomb_payload`` is an optional precomputed ``(packed bytes, bits)``
+    position stream (the device-pack path) used in place of the host
+    encoder for golomb leaves.
     """
     if spec.selector == "skip":
         return b"", 0
     if spec.selector == "dense":
         return _pack_dense(comp, spec)
-    return _pack_sparse(comp, spec)
+    return _pack_sparse(comp, spec, golomb_payload)
 
 
-def _pack_sparse(comp: LeafCompressed, spec: LeafSpec) -> Tuple[bytes, int]:
+def _pack_sparse(
+    comp: LeafCompressed, spec: LeafSpec, golomb_payload=None
+) -> Tuple[bytes, int]:
     idx = np.asarray(comp.idx, np.int64)
     order = np.argsort(idx, kind="stable")
     idx = idx[order]
@@ -172,7 +179,10 @@ def _pack_sparse(comp: LeafCompressed, spec: LeafSpec) -> Tuple[bytes, int]:
 
     # ---- positions
     if spec.encoder == "golomb":
-        packed, pos_bits = golomb.encode_positions_packed(idx, spec.p)
+        if golomb_payload is not None:
+            packed, pos_bits = golomb_payload
+        else:
+            packed, pos_bits = golomb.encode_positions_packed(idx, spec.p)
         pos = struct.pack("<I", pos_bits) + packed
     elif spec.encoder == "bitmask":
         mask = np.zeros((spec.n,), np.uint8)
@@ -409,18 +419,38 @@ class Wire:
         """Compressed pytree → one framed byte buffer."""
         return self.pack_with_bits(compressed)[0]
 
-    def pack_with_bits(self, compressed: PyTree) -> Tuple[bytes, int]:
+    def pack_with_bits(
+        self, compressed: PyTree, *, device_pack: bool = False,
+        interpret=None,
+    ) -> Tuple[bytes, int]:
         """Pack and return (buffer, exact payload bits) in one pass — the
-        bits are what ``measured_bits`` reports, without re-serializing."""
+        bits are what ``measured_bits`` reports, without re-serializing.
+
+        ``device_pack=True`` produces every golomb position stream with
+        the fused select→pack Pallas kernel (:mod:`repro.kernels.pack`)
+        instead of the host numpy encoder; the serialized buffer is
+        byte-identical, but the bytes come off the device as a single
+        big-endian word-buffer copy (``golomb.packed_words_to_bytes``).
+        """
         leaves = self._leaves(compressed)
         out = [MAGIC, struct.pack("<I", len(leaves))]
         total_bits = 0
         for comp, spec in zip(leaves, self.specs):
-            payload, bits = pack_leaf(_to_numpy(comp), spec)
+            payload_pos = None
+            if device_pack and spec.encoder == "golomb" and spec.selector != "skip":
+                payload_pos = _device_golomb_payload(comp, spec, interpret)
+            payload, bits = pack_leaf(_to_numpy(comp), spec, payload_pos)
             total_bits += bits
             out.append(struct.pack("<I", len(payload)))
             out.append(payload)
         return b"".join(out), total_bits
+
+    def pack_device(self, compressed: PyTree, *, interpret=None) -> bytes:
+        """Device-side ``pack``: byte-identical output, golomb position
+        streams packed on-device (one fused select→pack launch per leaf)."""
+        return self.pack_with_bits(
+            compressed, device_pack=True, interpret=interpret
+        )[0]
 
     def unpack(self, data: bytes) -> PyTree:
         """Byte buffer → dense update pytree (numpy float32 leaves)."""
@@ -490,6 +520,35 @@ class Wire:
 
 def _to_numpy(comp: LeafCompressed) -> LeafCompressed:
     return LeafCompressed(*(np.asarray(x) for x in comp))
+
+
+def _device_golomb_payload(
+    comp: LeafCompressed, spec: LeafSpec, interpret=None
+) -> Tuple[bytes, int]:
+    """One leaf's golomb position payload off the device packer.
+
+    Builds the selection mask from the surviving indices and runs the
+    fused select→pack kernel; the returned bytes are the big-endian view
+    of the ``uint32`` word buffer, truncated to ``ceil(bits/8)`` — the
+    device-to-bytes copy that replaces the host ``np.packbits`` path.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import on_tpu
+    from repro.kernels.pack import seg_select_pack
+
+    idx = np.asarray(comp.idx)
+    k = int(idx.size)
+    if k == 0:
+        return b"", 0
+    if interpret is None:
+        interpret = not on_tpu()
+    mask = jnp.zeros((spec.n,), jnp.int32).at[jnp.asarray(idx, jnp.int32)].set(1)
+    words, nbits = seg_select_pack(
+        mask[None], k=k, bstar=golomb.golomb_bstar(spec.p), interpret=interpret
+    )
+    nb = int(nbits[0])
+    return golomb.packed_words_to_bytes(np.asarray(jax.device_get(words[0])), nb), nb
 
 
 def wire_for(

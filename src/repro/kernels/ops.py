@@ -53,7 +53,9 @@ def _side_threshold(
     bstar = jnp.where(any_feasible, jnp.sum(feasible.astype(jnp.int32)) - 1, 0)
     lo_edge = jnp.where(any_feasible, edges[bstar], edges[0])
     hi_edge = jnp.where(
-        bstar + 1 < nbins, edges[jnp.minimum(bstar + 1, nbins - 1)], edges[nbins - 1] * 2.0
+        bstar + 1 < nbins,
+        edges[jnp.minimum(bstar + 1, nbins - 1)],
+        edges[nbins - 1] * 2.0,
     )
     above = jnp.where(
         bstar + 1 < nbins,

@@ -277,6 +277,7 @@ def build_dist_train(
     fast: Optional[bool] = None,
     flat_engine: str = "exact",
     measure: bool = False,
+    device_pack: bool = False,
 ) -> DistTrainFns:
     """Build the sharded DSGD train_step for (cfg, mesh).
 
@@ -309,6 +310,15 @@ def build_dist_train(
     a cohort sum; see docs/wire-format.md) so the channel ledger can
     Golomb-encode the
     real per-shard position streams next to the analytic Eq. 1 bits.
+
+    ``device_pack`` — pack each client's Golomb position streams into
+    wire words ON DEVICE (fused select→pack Pallas kernels, §11): the
+    all_gather exchanges packed uint32 buffers (~b̄(p) bits/position)
+    instead of 32-bit index arrays, and exact per-(client, shard, row)
+    bit counts come back with the step so the ledger meters EVERY
+    client's real upload (``metrics['packed_nbits']``) — no host
+    re-encode, no client-0 sampling.  Needs the flat fast path with the
+    exact engine.
 
     ``opts`` — §Perf beyond-baseline toggles (baseline = empty set):
       'expert_parallel'  experts shard over 'data', dispatch follows
@@ -387,6 +397,7 @@ def build_dist_train(
         residual_dtype=cfg.residual_dtype,
         flat_space=space,
         flat_engine=flat_engine,
+        device_pack=device_pack,
     )
     shard_axes = tuple(a for a in mesh.axis_names if a not in client_axes)
     res_spec = P(lead, _lead_spec(shard_axes), None)
@@ -449,11 +460,19 @@ def build_dist_train(
         deltas, opt_states, losses = jax.vmap(local)(state["opt"], batch)
 
         # ---- compress + exchange + residual, one channel call (§12)
-        mean_tree, new_residual, own_tree = channel.round_exchange(
-            state["residual"], deltas,
-            mesh=mesh, in_specs=tuple(flat_r_specs), res_spec=res_spec,
-            need_own=need_own,
-        )
+        packed = None
+        if device_pack:
+            mean_tree, new_residual, own_tree, packed = channel.round_exchange(
+                state["residual"], deltas,
+                mesh=mesh, in_specs=tuple(flat_r_specs), res_spec=res_spec,
+                need_own=need_own,
+            )
+        else:
+            mean_tree, new_residual, own_tree = channel.round_exchange(
+                state["residual"], deltas,
+                mesh=mesh, in_specs=tuple(flat_r_specs), res_spec=res_spec,
+                need_own=need_own,
+            )
 
         # every client reconstructs the identical mean update; take client 0
         mean_delta = jax.tree.map(lambda m: m[0], mean_tree)
@@ -472,6 +491,11 @@ def build_dist_train(
         if measure:
             # client 0's transmitted ΔW*, for host-side wire metering
             metrics["own_client0"] = jax.tree.map(lambda o: o[0], own_tree)
+            if device_pack:
+                # exact per-(client, shard, row) packed wire bits + client
+                # 0's packed word buffer (byte-identity tests read it)
+                metrics["packed_nbits"] = packed[1]
+                metrics["packed_words_client0"] = packed[0][0]
         return (
             {"params": new_params, "opt": opt_states, "residual": new_residual},
             metrics,

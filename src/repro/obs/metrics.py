@@ -42,6 +42,12 @@ METRIC_NAMES: Dict[str, Tuple[str, str]] = {
         "host-metered Golomb bits of client 0's shard streams (gspmd; "
         "a 1-client sample, not the cohort sum — see docs/wire-format.md)",
     ),
+    "wire/client_bits_measured": (
+        "gauge",
+        "exact packed wire bits of one client's upload, from the "
+        "device-side select→pack kernels (gspmd with --device-pack; "
+        "one sample per client per round, tag: client)",
+    ),
     # ---- per-leaf compression plan (static per resolved policy)
     "leaf/n": ("gauge", "leaf parameter count (tag: leaf)"),
     "leaf/k": ("gauge", "selected coordinates k = max(1, round(p*n)) (tag: leaf)"),

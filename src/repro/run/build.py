@@ -378,8 +378,10 @@ class GspmdRun(Run):
         m = dict(m)
         if self.spec.measure_wire:
             own_client0 = m.pop("own_client0")
+            packed_nbits = m.pop("packed_nbits", None)
+            m.pop("packed_words_client0", None)
             m["measured_bits_per_client"] = self.channel.record_round(
-                round_idx, own_client0=own_client0
+                round_idx, own_client0=own_client0, packed_nbits=packed_nbits
             )
         m["bits_per_client"] = self.fns.bits_per_client
         m["bits_dense"] = self.fns.bits_dense
@@ -464,6 +466,7 @@ def _build_gspmd(spec: RunSpec, mesh=None) -> GspmdRun:
         fast=True if spec.fast else None,
         flat_engine=spec.flat_engine,
         measure=spec.measure_wire,
+        device_pack=spec.device_pack,
     )
     n_clients, _ = client_topology(cfg, mesh)
     return GspmdRun(

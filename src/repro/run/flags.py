@@ -34,6 +34,9 @@ def add_compression_flags(ap: argparse.ArgumentParser) -> argparse.ArgumentParse
                    help="flat-buffer compression fast path (DESIGN.md §10/§11)")
     g.add_argument("--flat-engine", choices=["exact", "hist"], default="exact",
                    help="fast-path engine (gspmd backend; DESIGN.md §11)")
+    g.add_argument("--device-pack", action="store_true",
+                   help="pack Golomb wire words on-device (fused select→pack "
+                        "Pallas kernels; gspmd fast path, exact engine)")
     g.add_argument("--measure-wire", action="store_true",
                    help="meter real wire bytes into the channel ledger")
     return ap
@@ -184,6 +187,7 @@ def spec_from_args(args: argparse.Namespace,
         skip_pattern=args.skip_pattern,
         fast=args.fast,
         flat_engine=args.flat_engine,
+        device_pack=args.device_pack,
         measure_wire=args.measure_wire,
         clients=args.clients,
         delay=args.delay,

@@ -48,6 +48,7 @@ class RunSpec:
     skip_pattern: Optional[str] = None  # path regex → never transmitted
     fast: bool = False  # §10/§11 flat-buffer fast path
     flat_engine: str = "exact"  # "exact" | "hist" (gspmd fast path)
+    device_pack: bool = False  # pack Golomb wire words on-device (gspmd)
     measure_wire: bool = False  # meter real bytes into the ledger
     telemetry: bool = False  # repro.obs tracing + metrics (off = no-ops)
 
@@ -81,6 +82,14 @@ class RunSpec:
             )
         if self.flat_engine not in ("exact", "hist"):
             raise ValueError(f"unknown flat_engine {self.flat_engine!r}")
+        if self.device_pack and (
+            self.backend != "gspmd" or not self.fast or self.flat_engine != "exact"
+        ):
+            raise ValueError(
+                "device_pack packs wire words inside the gspmd flat "
+                "exchange; it needs backend='gspmd', fast=True and "
+                "flat_engine='exact'"
+            )
         if self.client_store not in ("device", "host", "memmap"):
             raise ValueError(
                 f"unknown client_store {self.client_store!r}; "

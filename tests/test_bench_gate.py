@@ -15,14 +15,18 @@ BASE = {
     "bits_per_client": 5e4,
     "speedup": 3.0,
     "compile_speedup": 1.5,
+    "wire_speedup": 1.3,
+    "wire_bytes": 25921,
     "parity": True,
+    "pack_parity": True,
     "bits_equal": True,
+    "wire_bytes_equal": True,
 }
 
 
-def write(dirpath, payload):
+def write(dirpath, payload, stem="dist_flat"):
     dirpath.mkdir(exist_ok=True)
-    (dirpath / "dist_flat.json").write_text(json.dumps(payload))
+    (dirpath / f"{stem}.json").write_text(json.dumps(payload))
 
 
 def run_gate(tmp_path, fresh):
@@ -70,8 +74,60 @@ def test_missing_gated_field_fails(tmp_path):
     assert run_gate(tmp_path, fresh) == 1
 
 
-@pytest.mark.parametrize("field", ["parity", "bits_equal"])
+@pytest.mark.parametrize(
+    "field", ["parity", "pack_parity", "bits_equal", "wire_bytes_equal"]
+)
 def test_true_fields_must_be_present(tmp_path, field):
     fresh = dict(BASE)
     del fresh[field]
     assert run_gate(tmp_path, fresh) == 1
+
+
+def test_wire_speedup_regression_fails(tmp_path):
+    fresh = dict(BASE, wire_speedup=BASE["wire_speedup"] / (RATIO_BAND + 1.0))
+    assert run_gate(tmp_path, fresh) == 1
+
+
+def test_unruled_fresh_json_fails(tmp_path):
+    # a fresh JSON with no RULES entry must fail loudly, not pass silently
+    write(tmp_path / "base", BASE)
+    write(tmp_path / "fresh", dict(BASE))
+    write(tmp_path / "fresh", {"anything": 1}, stem="mystery_bench")
+    base_dir = str(tmp_path / "base")
+    fresh_dir = str(tmp_path / "fresh")
+    assert main(["--baseline", base_dir, "--fresh", fresh_dir]) == 1
+
+
+def test_ungated_and_trace_artifacts_are_exempt(tmp_path):
+    write(tmp_path / "base", BASE)
+    write(tmp_path / "fresh", dict(BASE))
+    # fed_round is on the UNGATED record; telemetry traces are validated
+    # by repro.obs.view --check, not the regression gate
+    write(tmp_path / "fresh", {"rounds": 2}, stem="fed_round")
+    (tmp_path / "fresh" / "smoke.trace.json").write_text("{}")
+    base_dir = str(tmp_path / "base")
+    fresh_dir = str(tmp_path / "fresh")
+    assert main(["--baseline", base_dir, "--fresh", fresh_dir]) == 0
+
+
+def test_list_rows_match_by_rule_key(tmp_path):
+    # wire_throughput rows key on "codec", not the default "arch"
+    rows = [
+        {
+            "codec": "sbc",
+            "n": 10,
+            "p": 0.01,
+            "packed_bytes": 64,
+            "measured_bits": 512.0,
+        }
+    ]
+    write(tmp_path / "base", BASE)
+    write(tmp_path / "base", rows, stem="wire_throughput")
+    write(tmp_path / "fresh", dict(BASE))
+    write(tmp_path / "fresh", rows, stem="wire_throughput")
+    base_dir = str(tmp_path / "base")
+    fresh_dir = str(tmp_path / "fresh")
+    assert main(["--baseline", base_dir, "--fresh", fresh_dir]) == 0
+    drifted = [dict(rows[0], packed_bytes=99)]
+    write(tmp_path / "fresh", drifted, stem="wire_throughput")
+    assert main(["--baseline", base_dir, "--fresh", fresh_dir]) == 1

