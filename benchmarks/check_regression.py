@@ -138,6 +138,37 @@ RULES = {
         "rel": ("bits_per_client", "wire_bytes"),
         "ratio_min": ("speedup", "compile_speedup", "wire_speedup"),
     },
+    # §15 zoo-wide scale trajectories: every bit/memory field is pure
+    # deterministic arithmetic over shapes + policy rates, and
+    # `reconciles` carries the bit-exact ledger cross-check on the real
+    # tier; step times (real.step_ms_*, roofline_est) are never gated
+    "scale_zoo": {
+        "key": "arch",
+        "exact": (
+            "schema",
+            "arch",
+            "family",
+            "mode",
+            "params",
+            "active_params",
+            "compressor",
+            "sparsity",
+            "clients",
+            "n_leaves",
+            "mesh",
+            "framing_bytes",
+            "param_bytes",
+            "residual_bytes",
+            "optimizer_bytes",
+        ),
+        "true": ("reconciles",),
+        "rel": (
+            "up_bits_per_step",
+            "up_bits_f32_ledger",
+            "dense_bits",
+            "compression_rate",
+        ),
+    },
     # §12 channel/Run driver overhead vs the direct trainer loop: the
     # <5% bound is computed by the benchmark itself (interleaved medians),
     # so the gate only needs the boolean + stable structural fields

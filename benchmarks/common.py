@@ -14,13 +14,10 @@ from repro.core.api import make_compressor
 from repro.data import client_batches, make_classification_task, make_lm_task
 from repro.models.model import build_model
 from repro.optim import get_optimizer
+from repro.paths import experiments_dir
 from repro.train import DSGDTrainer
 
-OUT_DIR = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "experiments",
-    "benchmarks",
-)
+OUT_DIR = experiments_dir("benchmarks")
 
 
 def save_json(name: str, payload) -> str:

@@ -1,0 +1,59 @@
+"""Zoo-wide scale trajectory baseline (ISSUE 10).
+
+Runs the :mod:`repro.scale` planner over EVERY config in the zoo and
+commits one schema-versioned bits-per-step × step-time record per config
+to ``experiments/scale/scale_zoo.json`` — the proof-point ledger the
+``scale_zoo`` rule in ``benchmarks/check_regression.py`` gates.
+
+All gated fields (analytic bit totals, leaf counts, memory budgets, the
+bit-exact ``reconciles`` flag) are deterministic given the code: quick
+mode only shortens the real tier's measured rounds, which affect nothing
+but the ungated step-time numbers.
+
+  PYTHONPATH=src python -m benchmarks.scale_zoo [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.paths import experiments_dir
+from repro.scale.planner import plan_zoo
+
+OUT_DIR = experiments_dir("scale")
+
+
+def bench(quick: bool = True) -> list[dict]:
+    return plan_zoo(rounds=3 if quick else 8)
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="3 measured rounds in the real tier (what CI runs)")
+    args = ap.parse_args(argv)
+    records = bench(quick=args.smoke)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "scale_zoo.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1, sort_keys=True)
+        f.write("\n")
+    by_mode = {}
+    for r in records:
+        by_mode.setdefault(r["mode"], []).append(r["arch"])
+    for mode in ("real", "dryrun", "analytic"):
+        print(f"scale_zoo {mode}: {', '.join(by_mode.get(mode, []) or '-')}")
+    bad = [r["arch"] for r in records if not r["reconciles"]]
+    print(f"scale_zoo: {len(records)} records → {path} "
+          f"({'all reconcile' if not bad else 'FAIL: ' + ', '.join(bad)})")
+    return records
+
+
+def run(quick: bool = True) -> list[dict]:
+    """benchmarks.run harness hook."""
+    return main(["--smoke"] if quick else [])
+
+
+if __name__ == "__main__":
+    main()

@@ -6,14 +6,20 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import save_json
-from repro.core.bits import paper_table1
+from repro.core.bits import paper_table1, table1_row
 from repro.core.golomb import encode_positions, expected_position_bits
 
 
 def run(quick: bool = True) -> dict:
     n_params = 25_000_000  # ResNet50-scale, as in the paper's examples
     rows = []
-    for mb in paper_table1():
+    # the paper's ten methods, plus the variance-based selector (Tsuzuku
+    # et al.) at Gradient-Dropping sparsity with Golomb positions — same
+    # asymptotics as top-k, different survivors
+    methods = paper_table1() + [
+        table1_row("variance", sparsity=0.001, golomb=True)
+    ]
+    for mb in methods:
         rows.append({
             "method": mb.name,
             "temporal_sparsity": mb.temporal_sparsity,

@@ -20,7 +20,7 @@ from benchmarks.common import save_json
 from repro.core import api
 from repro.core.wire import wire_for
 
-CODECS = ["sbc", "topk", "signsgd", "terngrad", "qsgd", "none"]
+CODECS = ["sbc", "topk", "variance", "signsgd", "terngrad", "qsgd", "none"]
 
 
 def bench_one(name: str, n: int, p: float, repeats: int) -> dict:

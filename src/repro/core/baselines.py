@@ -176,3 +176,19 @@ def make_randomk_codec(**_) -> Codec:
 @api.register("randomk")
 def make_randomk(**_) -> api.Compressor:
     return api.Compressor.from_codec("randomk", make_randomk_codec())
+
+
+# ------------------------------------------- variance selection (Tsuzuku '18)
+
+
+@register_codec("variance")
+def make_variance_codec(**kw) -> Codec:
+    # approximated variance criterion over the accumulated update, full
+    # 32-bit values, optimal Golomb positions — the "what if DGC selected
+    # by SNR instead of magnitude" point of PAPERS.md
+    return _codec("variance", "identity", "golomb", **kw)
+
+
+@api.register("variance")
+def make_variance(**kw) -> api.Compressor:
+    return api.Compressor.from_codec("variance", make_variance_codec(**kw))

@@ -35,6 +35,11 @@ PyTree = Any
 # scales) — the one policy rule every launcher/example/benchmark shares.
 DENSE_SMALL_PATTERN = r"(^|/)(bias|scale|norm[^/]*)(/|$)"
 
+# MoE leaf paths as repro.models.moe lays them out: stacked expert weights
+# ("moe/up", "moe/gate", "moe/down", leading E axis) and the dense router.
+MOE_EXPERT_PATTERN = r"(^|/)moe/(up|gate|down)(/|$)"
+MOE_ROUTER_PATTERN = r"(^|/)moe/router(/|$)"
+
 
 class CompressorState(NamedTuple):
     """Per-client compressor state threaded through training.
@@ -77,12 +82,17 @@ class PolicyRule:
     sparsity: fixed per-leaf rate override (None → schedule / global rate).
     schedule: round → rate callable (e.g. DGC warm-up); overrides the
               global rate but loses to a fixed ``sparsity``.
+    rate_scale: multiplier applied to whichever rate wins above — the
+              MoE "reduced-k" knob (top_k/E for expert leaves whose
+              gradients routing already sparsified).  It composes with
+              schedules and the global rate instead of overriding them.
     """
 
     pattern: str
     codec: Union[str, Codec, None] = None
     sparsity: Optional[float] = None
     schedule: Optional[Callable[[int], float]] = None
+    rate_scale: float = 1.0
 
 
 class LeafPlan(NamedTuple):
@@ -92,13 +102,16 @@ class LeafPlan(NamedTuple):
     codec: Codec
     sparsity: Optional[float]
     schedule: Optional[Callable[[int], float]]
+    rate_scale: float = 1.0
 
     def rate(self, global_rate: float, round_idx: int = 0) -> float:
         if self.sparsity is not None:
-            return float(self.sparsity)
-        if self.schedule is not None:
-            return float(self.schedule(round_idx))
-        return float(global_rate)
+            base = float(self.sparsity)
+        elif self.schedule is not None:
+            base = float(self.schedule(round_idx))
+        else:
+            base = float(global_rate)
+        return min(1.0, base * float(self.rate_scale))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,7 +137,8 @@ class CompressionPolicy:
                 codec = (
                     self.default if rule.codec is None else make_codec(rule.codec)
                 )
-                return LeafPlan(path, codec, rule.sparsity, rule.schedule)
+                return LeafPlan(path, codec, rule.sparsity, rule.schedule,
+                                rule.rate_scale)
         return LeafPlan(path, self.default, None, None)
 
     def resolve(self, tree: PyTree) -> "ResolvedPolicy":
@@ -138,6 +152,40 @@ class CompressionPolicy:
     def single(cls, codec: Union[str, Codec], name: str = "", **kw) -> "CompressionPolicy":
         c = make_codec(codec, **kw)
         return cls(default=c, rules=(), name=name or c.spec)
+
+
+def moe_rules(
+    experts: int,
+    top_k: int = 2,
+    *,
+    pattern: str = MOE_EXPERT_PATTERN,
+    encoder: str = "golomb",
+    use_residual: bool = True,
+) -> Tuple[PolicyRule, ...]:
+    """MoE-aware policy rules (prepend to any policy's rule tuple).
+
+    Routing already sparsifies expert gradients: each step only ``top_k``
+    of ``experts`` experts see tokens, the rest accumulate exact zeros.
+    Two consequences, encoded as two rules:
+
+    * expert stacks (``moe/up|gate|down``) select with the
+      :func:`~repro.core.stages.make_expert_topk_selector` per-expert
+      quota (no hot expert crowds the others out; unrouted all-zero
+      experts lose every contested slot — skip-if-unrouted) and carry a
+      ``rate_scale = top_k/experts`` reduced-k multiplier, since only
+      that fraction of the stack holds signal in expectation;
+    * the router (``moe/router``) rides dense — it is tiny, every token
+      touches it, and quantizing it destabilizes routing.
+    """
+    scale = min(1.0, float(top_k) / float(max(1, experts)))
+    codec = make_codec(
+        f"expert_topk|identity|{encoder}",
+        experts=experts, use_residual=use_residual,
+    )
+    return (
+        PolicyRule(MOE_ROUTER_PATTERN, codec="dense32"),
+        PolicyRule(pattern, codec=codec, rate_scale=scale),
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -345,5 +393,7 @@ class ResolvedPolicy:
                 extra = f"  p={p.sparsity}"
             elif p.schedule is not None:
                 extra = "  p=schedule"
+            if p.rate_scale != 1.0:
+                extra += f"  rate×{p.rate_scale:g}"
             lines.append(f"  {p.path:<48s} {p.codec.spec}{extra}")
         return "\n".join(lines)

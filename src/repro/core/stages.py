@@ -196,6 +196,75 @@ def make_randomk_selector(**_) -> Selector:
     return Selector("randomk", fn, stochastic=True)
 
 
+@register_selector("variance")
+def make_variance_selector(block: int = 256, **_) -> Selector:
+    """Approximated variance-based selection (Tsuzuku et al. '18): keep the
+    entries whose magnitude is large *relative to the local noise level*,
+    not merely large in absolute terms.  The ambiguity criterion √V is
+    approximated by a blockwise second-moment proxy over the accumulated
+    (momentum-normalized) update: each entry's score is |ΔW| divided by
+    the RMS of its ``block``-sized neighbourhood, so a coordinate that
+    stands out from a quiet block beats a middling coordinate inside a
+    loud one.  Deterministic and static-k (exactly ``k_for(n, p)``
+    survivors), so it rides the standard sparse wire format unchanged."""
+
+    def fn(flat, p, rng):
+        del rng
+        n = flat.shape[0]
+        k = k_for(n, p)
+        b = min(block, n)
+        nb = -(-n // b)
+        x = jnp.pad(flat, (0, nb * b - n)).reshape(nb, b)
+        rms = jnp.sqrt(jnp.mean(x * x, axis=1, keepdims=True) + 1e-24)
+        score = (jnp.abs(x) / rms).reshape(-1)[:n]
+        _, idx = jax.lax.top_k(score, k)
+        return Selection(idx=idx.astype(jnp.int32), vals=flat[idx])
+
+    return Selector("variance", fn)
+
+
+@register_selector("expert_topk")
+def make_expert_topk_selector(experts: int = 8, **_) -> Selector:
+    """Per-expert balanced top-k for MoE leaves shaped ``(E, …)``.
+
+    Routing already sparsified the gradient: only the routed experts hold
+    signal, and a hot expert would crowd every other expert out of a
+    plain global top-k.  Selection therefore ranks candidates in three
+    tiers — (1) each expert's local top-⌈k/E⌉ (its fair quota), (2) the
+    remaining non-zero coordinates of routed experts, (3) exact zeros
+    (unrouted experts) — and takes the global top-k in tier order.  So
+    every routed expert keeps its quota, an unrouted all-zero expert
+    donates its slots to routed experts instead of shipping zeros
+    (skip-if-unrouted), and total survivors are exactly ``k_for(n, p)``
+    — byte-compatible with the static-k wire contract.  Leaves whose
+    length is not divisible by ``experts`` degrade to plain top-k."""
+
+    def fn(flat, p, rng):
+        del rng
+        n = flat.shape[0]
+        k = k_for(n, p)
+        e = experts if (experts > 1 and n % experts == 0) else 1
+        if e == 1:
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            return Selection(idx=idx.astype(jnp.int32), vals=flat[idx])
+        n_loc = n // e
+        q = min(n_loc, k)  # candidates per expert (enough to redistribute)
+        quota = -(-k // e)
+        bscore, bidx = jax.lax.top_k(jnp.abs(flat).reshape(e, n_loc), q)
+        # tiered score bands, non-overlapping since span > max score
+        span = jnp.max(bscore) + 1.0
+        nz = bscore > 0.0
+        in_quota = (jnp.arange(q) < quota)[None, :]
+        adj = bscore + 2.0 * span * (nz & in_quota) + span * (nz & ~in_quota)
+        base = jnp.arange(e, dtype=jnp.int32)[:, None] * n_loc
+        cand = (bidx.astype(jnp.int32) + base).reshape(-1)
+        _, sel = jax.lax.top_k(adj.reshape(-1), k)  # e·q ≥ k always
+        idx = cand[sel]
+        return Selection(idx=idx, vals=flat[idx])
+
+    return Selector("expert_topk", fn)
+
+
 # ----------------------------------------------------------------- quantizers
 
 

@@ -36,9 +36,10 @@ from repro.launch.dist import (
     make_dist_serve,
 )
 from repro.launch.mesh import make_production_mesh
+from repro.paths import experiments_dir
 from repro.run.flags import add_compression_flags
 
-OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+OUT_DIR = experiments_dir("dryrun")
 
 
 def scan_trips_for(cfg) -> int:
@@ -118,7 +119,8 @@ def _param_sds(cfg, p_shardings):
 
 def run_pair(arch: str, shape_name: str, multi_pod: bool, *, compressor="sbc",
              sparsity=0.001, save=True, verbose=True,
-             opts: frozenset = frozenset(), fast: bool = False) -> dict:
+             opts: frozenset = frozenset(), fast: bool = False,
+             out_dir: str = None) -> dict:
     cfg = get_config(arch)
     mesh_name = "multi" if multi_pod else "single"
     if opts:
@@ -174,9 +176,10 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool, *, compressor="sbc",
         if verbose:
             print(f"[ERROR]  {cfg.name} × {shape_name} × {mesh_name}: {record['error'][:200]}")
     if save:
-        os.makedirs(OUT_DIR, exist_ok=True)
+        out_dir = out_dir or OUT_DIR
+        os.makedirs(out_dir, exist_ok=True)
         key = cfg.name.replace("/", "_")  # canonical id regardless of alias
-        path = os.path.join(OUT_DIR, f"{key}__{shape_name}__{mesh_name}.json")
+        path = os.path.join(out_dir, f"{key}__{shape_name}__{mesh_name}.json")
         slim = {k: v for k, v in record.items() if k != "traceback"}
         with open(path, "w") as f:
             json.dump(slim, f, indent=1, default=str)
@@ -190,6 +193,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
     ap.add_argument("--opts", default="", help="comma list: expert_parallel,seq_every2")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default=None,
+                    help="record directory (default experiments/dryrun)")
     # the shared compression surface (only compressor/sparsity/fast bear on
     # lowering; policy patterns resolve per leaf exactly as in training)
     add_compression_flags(ap)
@@ -210,7 +215,8 @@ def main():
             for mp in meshes:
                 results.append(
                     run_pair(arch, shape, mp, compressor=args.compressor,
-                             sparsity=args.sparsity, opts=opts, fast=args.fast)
+                             sparsity=args.sparsity, opts=opts, fast=args.fast,
+                             out_dir=args.out_dir)
                 )
     ok = sum(r["status"] == "ok" for r in results)
     skip = sum(r["status"] == "skip" for r in results)

@@ -1,0 +1,238 @@
+"""Analytic communication/memory cost model (ISSUE 10, DESIGN.md §15).
+
+Prices one training step of any (config, policy, mesh) triple WITHOUT
+running it, from leaf shapes + :class:`~repro.core.policy.ResolvedPolicy`
+rates + mesh sharding:
+
+* **upstream bits** — the exact Eq. 1 walk the channels meter: per leaf,
+  ``encoder.position_bits(n, k, p) + quantizer.value_bits(k)`` with
+  ``k = k_for(n, p)`` (Golomb leaves price ``k·E[bits/pos]`` from Eq. 5);
+  dense leaves ``value_bits(n)``; skip leaves 0.  Two accumulations are
+  reported: the float64 truth, and a float32 sequential accumulation in
+  plan order — the *device* sums per-leaf ``nbits`` as f32 scalars
+  (`LeafCompressed.nbits`), so the f32 variant is what
+  ``BandwidthLedger.up_bits_analytic`` records, bit for bit;
+* **SBW1 framing** — the wire container's 8-byte header + 4-byte
+  per-leaf length prefix (:mod:`repro.core.wire`);
+* **residual / optimizer memory** — error-feedback and momentum/Adam
+  slot bytes per client;
+* **sharded exchange volume** — the per-(leaf, shard, scan-row) table
+  :class:`~repro.core.channel.ShardedGspmdChannel` prices on a GSPMD
+  mesh, generalized to any codec: ``L·S·(position_bits(n_loc, k_loc, p)
+  + value_bits(k_loc))``, with shard counts derived from the model's
+  PartitionSpec rules on a device-free stub mesh.
+
+Cross-checked bit-exactly against the measured ledger in
+``tests/test_scale_costs.py`` (acceptance criterion 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.policy import LeafPlan, ResolvedPolicy
+from repro.core.stages import k_for
+
+# SBW1 container framing (repro.core.wire): magic + u32 leaf count, then a
+# u32 payload-length prefix per leaf.
+SBW1_HEADER_BYTES = 8
+SBW1_PER_LEAF_BYTES = 4
+
+# optimizer slot count per parameter (f32 slots per weight)
+OPT_SLOTS = {"sgd": 0, "momentum": 1, "adam": 2, "adamw": 2}
+
+
+def leaf_bits(plan: LeafPlan, n: int, rate: float) -> float:
+    """Eq. 1 upstream bits for one n-entry leaf at ``rate`` (float64).
+
+    Mirrors :func:`repro.core.channel.analytic_bits` exactly — any drift
+    between the two is a bug, held by the reconcile tests.
+    """
+    codec = plan.codec
+    if codec.skip:
+        return 0.0
+    if codec.selector.dense:
+        return float(codec.quantizer.value_bits(n))
+    k = k_for(n, rate)
+    return float(
+        codec.encoder.position_bits(n, k, rate) + codec.quantizer.value_bits(k)
+    )
+
+
+def upstream_bits(
+    resolved: ResolvedPolicy, sizes: Sequence[int], rates: Sequence[float]
+) -> Tuple[float, float]:
+    """(float64 per-client bits, float32-ledger per-client bits).
+
+    The second value replays the device accumulation: each leaf's nbits
+    is cast to f32 (``jnp.asarray(nbits, jnp.float32)`` in
+    ``Codec.compress_leaf``) and summed sequentially in plan order
+    (``ResolvedPolicy.total_bits``), so it equals the per-round
+    ``bits_per_client`` the local channel hands the ledger.
+    """
+    f64 = 0.0
+    f32 = np.float32(0.0)
+    for plan, n, p in zip(resolved.plans, sizes, rates):
+        nb = leaf_bits(plan, int(n), float(p))
+        f64 += nb
+        f32 = f32 + np.float32(nb)
+    return f64, float(f32)
+
+
+def framing_bytes(n_leaves: int) -> int:
+    """SBW1 container overhead for one packed client upload."""
+    return SBW1_HEADER_BYTES + SBW1_PER_LEAF_BYTES * n_leaves
+
+
+def memory_bytes(
+    resolved: ResolvedPolicy, sizes: Sequence[int], *, opt: str = "momentum"
+) -> dict:
+    """Per-client steady-state memory: params, error-feedback residual
+    (f32, only for leaves whose codec uses it), optimizer slots."""
+    n_params = int(sum(int(s) for s in sizes))
+    residual = sum(
+        4 * int(n)
+        for plan, n in zip(resolved.plans, sizes)
+        if plan.codec.use_residual
+    ) if resolved.any_residual else 0
+    slots = OPT_SLOTS.get(opt, 1)
+    return {
+        "param_bytes": 4 * n_params,
+        "residual_bytes": int(residual),
+        "optimizer_bytes": 4 * n_params * slots,
+    }
+
+
+# ---------------------------------------------------------------- sharded
+
+
+class StubMesh:
+    """Device-free stand-in for ``jax.sharding.Mesh``: the PartitionSpec
+    rules in :mod:`repro.models.model` read only ``axis_names`` and
+    ``devices.shape``, so spec derivation for a 256-chip production mesh
+    needs no devices at all (the planner's dryrun/analytic trick)."""
+
+    def __init__(self, shape=(16, 16), axis_names=("data", "model")):
+        self.axis_names = tuple(axis_names)
+        self.devices = np.zeros(tuple(shape), dtype=np.int8)
+
+    @property
+    def shape_map(self) -> dict:
+        return dict(zip(self.axis_names, self.devices.shape))
+
+
+def _n_shards(spec, axis_size: dict) -> int:
+    """Total shard count a PartitionSpec induces (product of mesh axis
+    sizes over every named axis in the spec)."""
+    total = 1
+    for entry in tuple(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for ax in axes:
+            total *= int(axis_size.get(ax, 1))
+    return total
+
+
+def sharded_exchange_bits(
+    resolved: ResolvedPolicy,
+    leaves: Sequence,
+    paths: Sequence[str],
+    specs: Sequence,
+    rates: Sequence[float],
+    mesh: StubMesh,
+) -> float:
+    """Per-step exchange volume on a GSPMD mesh (float64 bits).
+
+    The per-(leaf, shard, scan-row) pricing of
+    ``ShardedGspmdChannel.bits``: each shard compresses its local slice
+    independently (local k, one per-row scalar), scanned stacks price one
+    row per superblock layer.  Dense leaves exchange their full 32-bit
+    payload once; skip leaves cost nothing.
+    """
+    axis_size = mesh.shape_map
+    total = 0.0
+    for plan, leaf, path, spec, rate in zip(
+        resolved.plans, leaves, paths, specs, rates
+    ):
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        codec = plan.codec
+        if codec.skip:
+            continue
+        if codec.selector.dense:
+            total += 32.0 * size
+            continue
+        scanned = "stack/scan" in path or path.startswith("scan")
+        shape = tuple(leaf.shape)
+        L = shape[0] if scanned and len(shape) > 1 else 1
+        S = _n_shards(spec, axis_size)
+        n_loc = max(1, size // (L * S))
+        k_loc = max(1, min(n_loc, int(round(rate * n_loc))))
+        total += L * S * float(
+            codec.encoder.position_bits(n_loc, k_loc, rate)
+            + codec.quantizer.value_bits(k_loc)
+        )
+    return total
+
+
+# ------------------------------------------------------------- full report
+
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    """One priced (config, policy, mesh) triple."""
+
+    n_params: int
+    n_leaves: int
+    up_bits_per_client: float  # float64 Eq. 1 truth
+    up_bits_f32_ledger: float  # what BandwidthLedger.up_bits_analytic sees
+    dense_bits: float  # 32-bit baseline upload
+    framing_bytes: int  # SBW1 container overhead per upload
+    param_bytes: int
+    residual_bytes: int
+    optimizer_bytes: int
+    exchange_bits: Optional[float] = None  # sharded per-step volume
+
+    @property
+    def compression_rate(self) -> float:
+        return self.dense_bits / max(self.up_bits_per_client, 1.0)
+
+    def as_record(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["compression_rate"] = self.compression_rate
+        return d
+
+
+def price(
+    resolved: ResolvedPolicy,
+    leaves: Sequence,
+    rates: Sequence[float],
+    *,
+    opt: str = "momentum",
+    paths: Optional[Sequence[str]] = None,
+    specs: Optional[Sequence] = None,
+    mesh: Optional[StubMesh] = None,
+) -> CostReport:
+    """Price one step.  ``leaves`` may be arrays or ShapeDtypeStructs —
+    only shapes are read.  Pass paths+specs+mesh for the sharded exchange
+    term."""
+    sizes = [int(np.prod(x.shape)) if x.shape else 1 for x in leaves]
+    f64, f32 = upstream_bits(resolved, sizes, rates)
+    mem = memory_bytes(resolved, sizes, opt=opt)
+    exchange = None
+    if specs is not None and mesh is not None and paths is not None:
+        exchange = sharded_exchange_bits(
+            resolved, leaves, paths, specs, rates, mesh
+        )
+    return CostReport(
+        n_params=int(sum(sizes)),
+        n_leaves=len(sizes),
+        up_bits_per_client=f64,
+        up_bits_f32_ledger=f32,
+        dense_bits=32.0 * float(sum(sizes)),
+        framing_bytes=framing_bytes(len(sizes)),
+        exchange_bits=exchange,
+        **mem,
+    )

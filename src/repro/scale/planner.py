@@ -1,0 +1,377 @@
+"""Zoo-wide execution planner (ISSUE 10 tentpole, DESIGN.md §15).
+
+Every config in ``repro/configs/`` gets ONE schema-versioned trajectory
+record — bits-per-step and step-time — produced in whichever of three
+modes its size permits:
+
+``real``
+    N measured rounds through :func:`repro.run.build_run` on the local
+    backend (the preset's executable variant — assigned archs run their
+    ``reduced()`` stand-in, paper archs run full size), wire metering on,
+    and the analytic cost model reconciled BIT-EXACTLY against the
+    measured :class:`~repro.core.ledger.BandwidthLedger` totals.
+``dryrun``
+    the FULL config abstract-evaluated (``jax.eval_shape`` — zero
+    allocation), PartitionSpecs derived on a device-free
+    :class:`~repro.scale.costs.StubMesh`, exchange volume priced per
+    (leaf, shard, scan-row), and step time estimated from the
+    :mod:`repro.launch.roofline` peak terms.
+``analytic``
+    cost model only, from ``cfg.param_count()`` — the 400B tier where
+    even abstract leaf enumeration is not worth the trace time.
+
+Classification is by host-memory budget: a config goes ``real`` when its
+executable variant's working set (params + per-client residual +
+optimizer slots + one gradient copy) fits ``budget_mb``, ``dryrun``
+while its full parameter count stays under ``DRYRUN_PARAM_CAP``, and
+``analytic`` beyond that.  ``--mode`` forces any mode for any config.
+
+NOTE: this module must never import :mod:`repro.launch.dryrun` — that
+module sets ``XLA_FLAGS`` (512 fake hosts) at import time, which would
+poison a planner process that later wants a real run.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    PAPER_ARCHS,
+    ModelConfig,
+    get_config,
+    reduced,
+)
+from repro.core.policy import CompressionPolicy, LeafPlan, moe_rules
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    model_flops_for,
+)
+from repro.scale import costs
+from repro.scale.costs import OPT_SLOTS, StubMesh
+
+SCHEMA = 1
+MODES = ("real", "dryrun", "analytic")
+ALL_ARCHS = PAPER_ARCHS + ASSIGNED_ARCHS
+
+# real-mode default: enough for the paper's own models (LeNet5 ~82 MB,
+# CharLSTM ~23 MB, WordLSTM ~5 MB working set at 4 clients) while the
+# reduced assigned stand-ins (~98-226 MB vocab-heavy trees) stay in
+# dryrun — CI's real tier must stay a seconds-scale smoke.
+DEFAULT_BUDGET_MB = 96
+# beyond ~60B analytic params even abstract shape enumeration is noise:
+# llama4_maverick_400b_a17b is the designated analytic-tier proof-point
+DRYRUN_PARAM_CAP = 60e9
+
+# families build_preset can actually train as a local run (the cnn branch
+# only has a task for lenet5's 28×28 grayscale preset)
+_REAL_PRESETS = {"lenet5", "charlstm"}
+_REAL_FAMILIES = {"decoder", "encdec", "lstm"}
+
+
+def policy_for(cfg: ModelConfig, compressor: str = "sbc",
+               moe_aware: bool = True) -> CompressionPolicy:
+    """The policy a config is priced (and run) under: the compressor's own
+    policy, plus the §15 MoE rules when the config routes experts."""
+    from repro.core.api import make_compressor
+    from repro.run.build import as_policy
+
+    pol = as_policy(make_compressor(compressor))
+    if moe_aware and cfg.moe_experts:
+        return CompressionPolicy(
+            default=pol.default,
+            rules=moe_rules(cfg.moe_experts, cfg.moe_top_k) + pol.rules,
+            name=f"{pol.name}+moe",
+            fast=pol.fast,
+        )
+    return pol
+
+
+def executable_config(name: str) -> ModelConfig:
+    """What a ``real`` run of ``name`` actually trains (preset semantics:
+    paper models full-size, assigned archs reduced)."""
+    cfg = get_config(name)
+    return cfg if name in _REAL_PRESETS else reduced(cfg)
+
+
+@functools.lru_cache(maxsize=64)
+def executable_param_count(name: str) -> int:
+    """EXACT parameter count of the executable variant, from abstract
+    leaf shapes (``cfg.param_count()`` is a transformer-family estimate —
+    meaningless for the cnn/lstm paper models the real tier cares about)."""
+    from repro.models.model import build_model
+
+    cfg = executable_config(name)
+    params = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+    return int(sum(int(np.prod(x.shape)) if x.shape else 1
+                   for x in jax.tree_util.tree_leaves(params)))
+
+
+def host_working_set_bytes(name: str, clients: int = 4) -> int:
+    """Steady-state f32 bytes a local-backend run of ``name`` holds:
+    server params + per-client (gradient, residual, optimizer slots)."""
+    cfg = executable_config(name)
+    slots = OPT_SLOTS.get(cfg.local_opt, 1)
+    return 4 * executable_param_count(name) * (1 + clients * (2 + slots))
+
+
+def classify(name: str, *, budget_mb: int = DEFAULT_BUDGET_MB,
+             mode: Optional[str] = None) -> tuple[str, str]:
+    """(mode, reason) for one config."""
+    if mode:
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; have {MODES}")
+        return mode, "forced by --mode"
+    cfg = get_config(name)
+    runnable = name in _REAL_PRESETS or cfg.family in _REAL_FAMILIES
+    if runnable:
+        ws = host_working_set_bytes(name)
+        if ws <= budget_mb * (1 << 20):
+            return "real", (
+                f"executable working set {ws / 2**20:.1f} MB ≤ "
+                f"budget {budget_mb} MB"
+            )
+    if cfg.param_count() <= DRYRUN_PARAM_CAP:
+        why = "" if runnable else f"no local preset for family {cfg.family!r}; "
+        return "dryrun", (
+            why + f"{cfg.param_count() / 1e9:.1f}B params ≤ "
+            f"{DRYRUN_PARAM_CAP / 1e9:.0f}B dryrun cap"
+        )
+    return "analytic", (
+        f"{cfg.param_count() / 1e9:.0f}B params above the dryrun cap"
+    )
+
+
+# ------------------------------------------------------------------ modes
+
+
+def _roofline(cfg: ModelConfig, param_bytes: int, exchange_bits: float,
+              n_dev: int) -> dict:
+    """Deterministic peak-rate step-time terms (no compile, no HLO):
+    compute at bf16 peak, weight traffic at HBM peak, exchange at ICI
+    peak — the same constants :func:`repro.launch.roofline.analyze`
+    grounds its measured numbers in."""
+    shape = INPUT_SHAPES["train_4k"]
+    flops = model_flops_for(cfg, shape, "train")
+    compute_s = flops / (n_dev * PEAK_FLOPS)
+    memory_s = 2.0 * param_bytes / (n_dev * HBM_BW)
+    exchange_s = (exchange_bits / 8.0) / (n_dev * ICI_BW)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "exchange_s": exchange_s,
+        "step_s": max(compute_s, memory_s) + exchange_s,
+    }
+
+
+def _base_record(name: str, cfg: ModelConfig, mode: str, reason: str,
+                 compressor: str, sparsity: float, clients: int) -> dict:
+    return {
+        "schema": SCHEMA,
+        "arch": name,
+        "family": cfg.family,
+        "mode": mode,
+        "reason": reason,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "compressor": compressor,
+        "sparsity": sparsity,
+        "clients": clients,
+        "mesh": list(StubMesh().devices.shape),
+    }
+
+
+def plan_analytic(name: str, *, compressor: str = "sbc",
+                  sparsity: float = 0.001, clients: int = 4,
+                  reason: str = "") -> dict:
+    """Mode 3: price from the analytic parameter count alone."""
+    cfg = get_config(name)
+    pol = policy_for(cfg, compressor)
+    n = cfg.param_count()
+    plan = LeafPlan(path="params", codec=pol.default, sparsity=None,
+                    schedule=None)
+    up = costs.leaf_bits(plan, n, sparsity)
+    rec = _base_record(name, cfg, "analytic", reason, compressor, sparsity,
+                       clients)
+    rec.update(
+        n_leaves=None,
+        up_bits_per_step=up,
+        up_bits_f32_ledger=float(np.float32(up)),
+        dense_bits=32.0 * n,
+        compression_rate=32.0 * n / max(up, 1.0),
+        framing_bytes=None,
+        param_bytes=4 * n,
+        residual_bytes=4 * n,
+        optimizer_bytes=4 * n * OPT_SLOTS.get(cfg.local_opt, 1),
+        exchange_bits_per_step=None,
+        roofline_est=_roofline(cfg, 4 * n, up, int(np.prod(
+            StubMesh().devices.shape))),
+        reconciles=bool(np.isfinite(up) and up > 0.0),
+    )
+    return rec
+
+
+def plan_dryrun(name: str, *, compressor: str = "sbc",
+                sparsity: float = 0.001, clients: int = 4,
+                reason: str = "") -> dict:
+    """Mode 2: abstract-eval the FULL config, derive PartitionSpecs on the
+    stub mesh, price per leaf.  Zero parameter allocation."""
+    from repro.models.model import build_model
+
+    cfg = get_config(name)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pol = policy_for(cfg, compressor)
+    resolved = pol.resolve(params)
+    leaves = jax.tree_util.tree_leaves(params)
+    mesh = StubMesh()
+    specs = jax.tree_util.tree_leaves(
+        model.param_specs(params, mesh), is_leaf=lambda x: hasattr(x, "index")
+    )
+    rates = resolved.rates(sparsity)
+    report = costs.price(
+        resolved, leaves, rates, opt=cfg.local_opt,
+        paths=[p.path for p in resolved.plans], specs=specs, mesh=mesh,
+    )
+    rec = _base_record(name, cfg, "dryrun", reason, compressor, sparsity,
+                       clients)
+    rec.update(
+        n_leaves=report.n_leaves,
+        up_bits_per_step=report.up_bits_per_client,
+        up_bits_f32_ledger=report.up_bits_f32_ledger,
+        dense_bits=report.dense_bits,
+        compression_rate=report.compression_rate,
+        framing_bytes=report.framing_bytes,
+        param_bytes=report.param_bytes,
+        residual_bytes=report.residual_bytes,
+        optimizer_bytes=report.optimizer_bytes,
+        exchange_bits_per_step=report.exchange_bits,
+        roofline_est=_roofline(
+            cfg, report.param_bytes, report.exchange_bits,
+            int(np.prod(mesh.devices.shape)),
+        ),
+        # internal sanity: the f32 ledger emulation must track the f64
+        # walk to float32 resolution over the whole tree
+        reconciles=bool(
+            abs(report.up_bits_f32_ledger - report.up_bits_per_client)
+            <= 1e-4 * max(report.up_bits_per_client, 1.0)
+        ),
+    )
+    return rec
+
+
+def plan_real(name: str, *, compressor: str = "sbc", sparsity: float = 0.001,
+              clients: int = 4, rounds: int = 8, reason: str = "",
+              telemetry: bool = False, seed: int = 0):
+    """Mode 1: run N measured rounds and reconcile the cost model
+    BIT-EXACTLY against the ledger.  Returns (record, run) — the run so
+    callers can export its telemetry."""
+    from repro.run import RunSpec, build_run
+
+    spec = RunSpec(
+        preset=name, backend="local", rounds=rounds, batch=16,
+        seq_len=32, clients=clients, delay=1, sparsity=sparsity,
+        compressor=compressor, fast=False, measure_wire=True,
+        telemetry=telemetry, seed=seed,
+    )
+    run = build_run(spec)
+    state = run.init()
+    step_ms = []
+    for r in range(rounds):
+        t0 = time.perf_counter()
+        state, m = run.step(state, r)
+        jax.block_until_ready(m["loss"])
+        step_ms.append(1e3 * (time.perf_counter() - t0))
+    if telemetry:
+        run.telemetry.metrics.ingest_ledger(run.ledger)
+
+    # --- the reconcile: replay the device's f32 accumulation on the host
+    resolved = run.trainer.resolved(state.params)
+    sizes = [int(np.prod(np.shape(x)) or 1)
+             for x in jax.tree_util.tree_leaves(state.params)]
+    predicted = 0.0
+    f64_per_client = 0.0
+    for r in range(rounds):
+        f64, f32 = costs.upstream_bits(resolved, sizes,
+                                       resolved.rates(sparsity, r))
+        predicted += float(f32) * clients  # what record_round stores
+        f64_per_client = f64
+    totals = run.ledger.totals()
+    measured = totals["up_bits_analytic"]
+
+    cfg = executable_config(name)
+    full = get_config(name)
+    report = costs.price(resolved,
+                         jax.tree_util.tree_leaves(state.params),
+                         resolved.rates(sparsity, rounds - 1),
+                         opt=full.local_opt)
+    rec = _base_record(name, full, "real", reason, compressor, sparsity,
+                       clients)
+    rec.update(
+        n_leaves=report.n_leaves,
+        up_bits_per_step=f64_per_client,
+        up_bits_f32_ledger=report.up_bits_f32_ledger,
+        dense_bits=report.dense_bits,
+        compression_rate=report.compression_rate,
+        framing_bytes=report.framing_bytes,
+        param_bytes=report.param_bytes,
+        residual_bytes=report.residual_bytes,
+        optimizer_bytes=report.optimizer_bytes,
+        exchange_bits_per_step=None,
+        roofline_est=None,
+        reconciles=bool(predicted == measured),  # BIT-exact, not approx
+        real={
+            "executed_params": int(sum(sizes)),
+            "executed_arch": cfg.name,
+            "rounds": rounds,
+            "up_bits_ledger": measured,
+            "up_bits_predicted": predicted,
+            "up_bytes_measured": totals.get("up_bytes", 0),
+            "measured_ratio": (
+                8.0 * totals.get("up_bytes", 0) / measured if measured else None
+            ),
+            "step_ms_mean": float(np.mean(step_ms[1:] or step_ms)),
+            "step_ms_warm": step_ms[0],
+        },
+    )
+    return rec, run
+
+
+# ------------------------------------------------------------------ driver
+
+
+def plan(name: str, *, mode: Optional[str] = None,
+         budget_mb: int = DEFAULT_BUDGET_MB, compressor: str = "sbc",
+         sparsity: float = 0.001, clients: int = 4, rounds: int = 8,
+         telemetry: bool = False):
+    """One config → (record, run-or-None)."""
+    picked, reason = classify(name, budget_mb=budget_mb, mode=mode)
+    kw = dict(compressor=compressor, sparsity=sparsity, clients=clients,
+              reason=reason)
+    if picked == "real":
+        return plan_real(name, rounds=rounds, telemetry=telemetry, **kw)
+    if picked == "dryrun":
+        return plan_dryrun(name, **kw), None
+    return plan_analytic(name, **kw), None
+
+
+def plan_zoo(names: Optional[Sequence[str]] = None, *,
+             budget_mb: int = DEFAULT_BUDGET_MB, mode: Optional[str] = None,
+             compressor: str = "sbc", sparsity: float = 0.001,
+             clients: int = 4, rounds: int = 8) -> list[dict]:
+    """Trajectory records for the whole zoo (or ``names``), real-capable
+    configs first so compile caches warm before the abstract tiers."""
+    out = []
+    for name in names or ALL_ARCHS:
+        rec, _ = plan(name, mode=mode, budget_mb=budget_mb,
+                      compressor=compressor, sparsity=sparsity,
+                      clients=clients, rounds=rounds)
+        out.append(rec)
+    return out

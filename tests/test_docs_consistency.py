@@ -25,6 +25,7 @@ PARSER_MODULES = [
     "repro.launch.serve",
     "repro.launch.dryrun",
     "repro.obs.view",
+    "repro.scale",
     "benchmarks.run",
 ]
 

@@ -1,0 +1,222 @@
+"""MoE-aware compression policies (ISSUE 10 tentpole part 3).
+
+The ``expert_topk`` selector + ``rate_scale`` reduced-k multiplier +
+:func:`repro.core.policy.moe_rules`, exercised on ``mixtral_8x7b``-shaped
+tiny stand-ins: selection semantics (per-expert quota, skip-if-unrouted),
+rate flow through ``ResolvedPolicy.rates`` → analytic bits → wire specs,
+byte-exact SBW1 round-trip, and bit-identical output between the
+``fast=True`` engine (which falls back per-leaf for non-flat codecs by
+contract) and the exact per-leaf path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core.channel import analytic_bits
+from repro.core.codec import make_codec
+from repro.core.policy import (
+    CompressionPolicy,
+    MOE_EXPERT_PATTERN,
+    PolicyRule,
+    moe_rules,
+)
+from repro.core.stages import get_selector, k_for
+from repro.core.wire import wire_for
+from repro.models.model import build_model
+
+E = 4  # reduced() caps experts at 4 — the mixtral stand-in's E
+
+
+def moe_policy(fast: bool = False) -> CompressionPolicy:
+    return CompressionPolicy(
+        default=make_codec("sbc"),
+        rules=moe_rules(E, top_k=2),
+        name="sbc+moe",
+        fast=fast,
+    )
+
+
+@pytest.fixture(scope="module")
+def mixtral_delta():
+    """A gradient-shaped pytree from the reduced mixtral_8x7b config."""
+    cfg = reduced(get_config("mixtral_8x7b"))
+    assert cfg.moe_experts == E
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    rng = np.random.default_rng(1)
+    fake = [
+        jnp.asarray(rng.standard_normal(np.shape(x)), jnp.float32)
+        for x in leaves
+    ]
+    return jax.tree_util.tree_unflatten(treedef, fake)
+
+
+# ------------------------------------------------------- selector semantics
+
+
+class TestExpertTopkSelector:
+    def test_exact_k_and_per_expert_cap(self):
+        rng = np.random.default_rng(0)
+        n, p = E * 64, 0.1
+        flat = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        sel = get_selector("expert_topk", experts=E)(flat, p, None)
+        k = k_for(n, p)
+        idx = np.asarray(sel.idx)
+        assert idx.size == k
+        assert np.unique(idx).size == k  # distinct positions
+        quota = -(-k // E)
+        per_expert = np.bincount(idx // (n // E), minlength=E)
+        assert per_expert.max() <= quota
+
+    def test_unrouted_experts_skip_themselves(self):
+        """Experts whose gradient block is exactly zero (no tokens routed)
+        win no contested slot — the quota flows to routed experts' noise
+        floor only when slots outnumber non-zero candidates."""
+        rng = np.random.default_rng(2)
+        n = E * 64
+        blocks = rng.standard_normal((E, n // E)).astype(np.float32)
+        blocks[1] = 0.0  # experts 1 and 3 unrouted this step
+        blocks[3] = 0.0
+        flat = jnp.asarray(blocks.reshape(-1))
+        sel = get_selector("expert_topk", experts=E)(flat, 0.1, None)
+        owners = np.asarray(sel.idx) // (n // E)
+        assert set(owners.tolist()) <= {0, 2}
+        assert not np.any(np.asarray(sel.vals) == 0.0)
+
+    def test_hot_expert_cannot_crowd_out_others(self):
+        """Global top-k would give every slot to the ×100 expert; the
+        per-expert quota guarantees the others keep representation."""
+        rng = np.random.default_rng(3)
+        n = E * 64
+        blocks = rng.standard_normal((E, n // E)).astype(np.float32)
+        blocks[0] *= 100.0
+        flat = jnp.asarray(blocks.reshape(-1))
+        k = k_for(n, 0.2)
+        sel = get_selector("expert_topk", experts=E)(flat, 0.2, None)
+        per_expert = np.bincount(
+            np.asarray(sel.idx) // (n // E), minlength=E
+        )
+        assert per_expert[0] <= -(-k // E)
+        assert np.all(per_expert > 0)
+
+    def test_indivisible_leaf_degrades_to_topk(self):
+        rng = np.random.default_rng(4)
+        flat = jnp.asarray(rng.standard_normal(257), jnp.float32)
+        a = get_selector("expert_topk", experts=E)(flat, 0.05, None)
+        b = get_selector("topk")(flat, 0.05, None)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(a.idx)), np.sort(np.asarray(b.idx))
+        )
+
+
+# ----------------------------------------------------------- rate_scale flow
+
+
+class TestRateScale:
+    def test_scale_composes_with_global_rate_and_schedule(self):
+        rule = PolicyRule(r"w", rate_scale=0.5)
+        pol = CompressionPolicy(default=make_codec("sbc"), rules=(rule,))
+        res = pol.resolve({"w": jnp.zeros(8), "v": jnp.zeros(8)})
+        by_path = dict(zip((p.path for p in res.plans), res.rates(0.1)))
+        assert by_path["w"] == pytest.approx(0.05)
+        assert by_path["v"] == pytest.approx(0.1)
+
+        sched = PolicyRule(r"w", schedule=lambda r: 0.2 / (r + 1),
+                           rate_scale=0.5)
+        res = CompressionPolicy(
+            default=make_codec("sbc"), rules=(sched,)
+        ).resolve({"w": jnp.zeros(8)})
+        assert res.rates(1.0, round_idx=1)[0] == pytest.approx(0.05)
+
+    def test_scaled_rates_price_fewer_bits(self, mixtral_delta):
+        """The reduced-k multiplier flows into Eq. 1 pricing: expert
+        leaves cost ~top_k/E of their unscaled bill."""
+        res = moe_policy().resolve(mixtral_delta)
+        leaves = res.treedef.flatten_up_to(mixtral_delta)
+        scaled = analytic_bits(res, leaves, res.rates(0.1))
+        unscaled = analytic_bits(
+            res, leaves, tuple(p.rate(0.1) / p.rate_scale for p in res.plans)
+        )
+        assert scaled.per_client < unscaled.per_client
+        import re
+
+        for plan, lo, hi in zip(
+            res.plans,
+            _per_leaf(res, leaves, res.rates(0.1)),
+            _per_leaf(res, leaves, tuple(
+                p.rate(0.1) / p.rate_scale for p in res.plans
+            )),
+        ):
+            if re.search(MOE_EXPERT_PATTERN, plan.path):
+                assert lo < hi
+
+
+def _per_leaf(res, leaves, rates):
+    out = []
+    for plan, leaf, p in zip(res.plans, leaves, rates):
+        n = int(np.prod(np.shape(leaf)))
+        c = plan.codec
+        if c.skip:
+            out.append(0.0)
+        elif c.selector.dense:
+            out.append(float(c.quantizer.value_bits(n)))
+        else:
+            k = k_for(n, p)
+            out.append(float(c.encoder.position_bits(n, k, p)
+                             + c.quantizer.value_bits(k)))
+    return out
+
+
+# ------------------------------------------------- engine + wire parity
+
+
+class TestMixtralStandInParity:
+    def test_fast_engine_falls_back_bit_identically(self, mixtral_delta):
+        """expert_topk has no flat form, so a fast=True MoE policy must
+        take the per-leaf path and produce bit-identical output (the
+        documented silent-fallback contract of DESIGN.md §10)."""
+        exact = moe_policy(fast=False).resolve(mixtral_delta)
+        fast = moe_policy(fast=True).resolve(mixtral_delta)
+        assert not fast.fast_compatible
+        se = exact.init_state(mixtral_delta)
+        sf = fast.init_state(mixtral_delta)
+        ce, de, _ = exact.compress(mixtral_delta, se, exact.rates(0.05))
+        cf, df, _ = fast.compress(mixtral_delta, sf, fast.rates(0.05))
+        for a, b in zip(jax.tree.leaves(de), jax.tree.leaves(df)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert float(exact.total_bits(ce)) == float(fast.total_bits(cf))
+
+    def test_wire_round_trip_byte_exact(self, mixtral_delta):
+        res = moe_policy().resolve(mixtral_delta)
+        state = res.init_state(mixtral_delta)
+        ctree, dense, _ = res.compress(mixtral_delta, state, res.rates(0.05))
+        ctree = jax.tree.map(np.asarray, ctree)
+        wire = wire_for(res, mixtral_delta, 0.05)
+        blob = wire.pack(ctree)
+        rec = wire.unpack(blob)
+        flat_d, _ = jax.tree_util.tree_flatten(dense)
+        flat_r, _ = jax.tree_util.tree_flatten(rec)
+        assert len(flat_d) == len(flat_r)
+        for a, b in zip(flat_d, flat_r):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32).reshape(-1),
+                np.asarray(b).reshape(-1),
+            )
+
+    def test_router_rides_dense_and_experts_scaled(self, mixtral_delta):
+        res = moe_policy().resolve(mixtral_delta)
+        import re
+
+        saw_router = saw_expert = False
+        for plan in res.plans:
+            if re.search(r"moe/router", plan.path):
+                assert plan.codec.selector.dense
+                saw_router = True
+            elif re.search(MOE_EXPERT_PATTERN, plan.path):
+                assert plan.codec.selector.name == "expert_topk"
+                assert plan.rate_scale == pytest.approx(2.0 / E)
+                saw_expert = True
+        assert saw_router and saw_expert

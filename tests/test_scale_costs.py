@@ -1,0 +1,208 @@
+"""repro.scale cost model + planner (ISSUE 10 tentpole parts 1-2).
+
+The acceptance-critical property: the analytic cost model reconciles
+BIT-EXACTLY (floating-point equality, not a tolerance band) with the
+measured :class:`~repro.core.ledger.BandwidthLedger` totals on real runs
+of two executable configs — the host replay of the device's f32
+accumulation is the same number the trainer hands the ledger.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import make_compressor
+from repro.core.channel import analytic_bits
+from repro.core.codec import make_codec
+from repro.core.policy import CompressionPolicy, PolicyRule, moe_rules
+from repro.core.wire import wire_for
+from repro.scale import costs, planner
+from repro.scale.costs import StubMesh
+
+
+def _resolve(tree, policy=None):
+    pol = policy or make_compressor("sbc").policy
+    return pol.resolve(tree)
+
+
+# ------------------------------------------------------- Eq. 1 walk parity
+
+
+class TestUpstreamBits:
+    def test_matches_channel_analytic_bits_float64(self):
+        """costs.leaf_bits must be the same arithmetic as the channel's
+        pricing walk, leaf for leaf, on a mixed skip/dense/sparse tree."""
+        tree = {
+            "bias": jnp.zeros(7),
+            "w": jnp.zeros(4096),
+            "emb": jnp.zeros((128, 64)),
+        }
+        pol = CompressionPolicy(
+            default=make_codec("sbc"),
+            rules=(PolicyRule(r"bias", codec="dense32"),
+                   PolicyRule(r"emb", codec="skip")),
+        )
+        res = _resolve(tree, pol)
+        leaves = res.treedef.flatten_up_to(tree)
+        rates = res.rates(0.01)
+        truth = analytic_bits(res, leaves, rates)
+        sizes = [int(np.prod(np.shape(x))) for x in leaves]
+        f64, f32 = costs.upstream_bits(res, sizes, rates)
+        assert f64 == truth.per_client
+        assert abs(f32 - f64) <= 1e-5 * f64
+
+    def test_framing_constants_match_sbw1_container(self):
+        """The framing constants mirror the real SBW1 layout: magic+count
+        header, then one u32 length prefix per leaf — parse the packed
+        blob and recover exactly ``framing_bytes(n_leaves)`` of overhead
+        beyond the per-leaf payloads."""
+        import struct
+
+        tree = {"a": jnp.asarray(np.random.default_rng(0)
+                                 .standard_normal(2048), jnp.float32),
+                "b": jnp.asarray(np.random.default_rng(1)
+                                 .standard_normal((32, 16)), jnp.float32)}
+        res = _resolve(tree)
+        state = res.init_state(tree)
+        ctree, _, _ = res.compress(tree, state, res.rates(0.05))
+        ctree = jax.tree.map(np.asarray, ctree)
+        wire = wire_for(res, tree, 0.05)
+        blob = wire.pack(ctree)
+        assert blob[:4] == b"SBW1"
+        (n_leaves,) = struct.unpack_from("<I", blob, 4)
+        assert n_leaves == 2
+        off, payload = costs.SBW1_HEADER_BYTES, 0
+        for _ in range(n_leaves):
+            (ln,) = struct.unpack_from("<I", blob, off)
+            off += costs.SBW1_PER_LEAF_BYTES + ln
+            payload += ln
+        assert off == len(blob)
+        assert len(blob) - payload == costs.framing_bytes(n_leaves)
+
+    def test_memory_costs(self):
+        tree = {"w": jnp.zeros(1000), "v": jnp.zeros(24)}
+        pol = CompressionPolicy(
+            default=make_codec("sbc"),
+            rules=(PolicyRule(r"v", codec=make_codec(
+                "dense|identity|none", use_residual=False)),),
+        )
+        # sizes in plan order (dict keys flatten sorted: "v" before "w")
+        mem = costs.memory_bytes(_resolve(tree, pol),
+                                 [24, 1000], opt="adam")
+        assert mem["param_bytes"] == 4 * 1024
+        assert mem["residual_bytes"] == 4 * 1000  # no-residual leaf excluded
+        assert mem["optimizer_bytes"] == 2 * 4 * 1024
+
+
+# ------------------------------------------------------- sharded exchange
+
+
+class TestShardedExchange:
+    def test_stub_mesh_needs_no_devices(self):
+        mesh = StubMesh(shape=(16, 16))
+        assert mesh.shape_map == {"data": 16, "model": 16}
+        assert mesh.devices.nbytes == 256  # int8 placeholders, not chips
+
+    def test_shard_count_and_scan_rows_price_like_gspmd(self):
+        """The per-(leaf, shard, scan-row) table: an (L, d, ff) scanned
+        stack sharded over 'model' prices L·S local blocks, each with its
+        own Golomb stream + one 32-bit scalar."""
+        from jax.sharding import PartitionSpec as P
+
+        codec = make_codec("sbc")
+        pol = CompressionPolicy(default=codec)
+        tree = {"stack/scan/mlp": jnp.zeros((4, 256, 1024))}
+        res = pol.resolve(tree)
+        mesh = StubMesh(shape=(2, 8))
+        rate = 0.01
+        got = costs.sharded_exchange_bits(
+            res, [jax.ShapeDtypeStruct((4, 256, 1024), jnp.float32)],
+            ["stack/scan/mlp"], [P(None, None, "model")], [rate], mesh,
+        )
+        L, S = 4, 8
+        n_loc = (4 * 256 * 1024) // (L * S)
+        k_loc = max(1, int(round(rate * n_loc)))
+        want = L * S * (codec.encoder.position_bits(n_loc, k_loc, rate)
+                        + codec.quantizer.value_bits(k_loc))
+        assert got == pytest.approx(want)
+
+    def test_replicated_leaf_prices_once(self):
+        from jax.sharding import PartitionSpec as P
+
+        pol = CompressionPolicy(default=make_codec("sbc"))
+        tree = {"w": jnp.zeros(4096)}
+        res = pol.resolve(tree)
+        one = costs.sharded_exchange_bits(
+            res, [jax.ShapeDtypeStruct((4096,), jnp.float32)], ["w"],
+            [P()], [0.01], StubMesh())
+        sizes = [4096]
+        f64, _ = costs.upstream_bits(res, sizes, res.rates(0.01))
+        assert one == pytest.approx(f64)
+
+
+# ------------------------------------------------ planner classification
+
+
+class TestClassification:
+    def test_paper_smalls_go_real(self):
+        mode, reason = planner.classify("lenet5")
+        assert mode == "real" and "budget" in reason
+
+    def test_cnn_without_preset_goes_dryrun(self):
+        mode, reason = planner.classify("resnet32")
+        assert mode == "dryrun" and "family" in reason
+
+    def test_largest_goes_analytic(self):
+        mode, reason = planner.classify("llama4_maverick_400b_a17b")
+        assert mode == "analytic" and "cap" in reason
+
+    def test_mode_forced(self):
+        mode, reason = planner.classify("lenet5", mode="analytic")
+        assert mode == "analytic" and "forced" in reason
+        with pytest.raises(ValueError):
+            planner.classify("lenet5", mode="bogus")
+
+    def test_budget_moves_the_real_frontier(self):
+        assert planner.classify("lenet5", budget_mb=0)[0] == "dryrun"
+
+
+# ------------------------------------------------ the bit-exact reconcile
+
+
+@pytest.mark.parametrize("arch", ["lenet5", "charlstm"])
+def test_real_mode_reconciles_bit_exactly(arch):
+    """Acceptance criterion 3: on executable configs the cost model's
+    f32-ledger replay equals the measured ledger total EXACTLY."""
+    rec, run = planner.plan_real(arch, rounds=3, sparsity=0.01)
+    assert rec["mode"] == "real"
+    assert rec["reconciles"] is True
+    r = rec["real"]
+    assert r["up_bits_predicted"] == r["up_bits_ledger"]  # bit-exact
+    assert r["up_bits_ledger"] > 0
+    assert len(run.ledger.records) == 3
+    # the wire actually moved bytes, within the Eq. 5 expectation band
+    assert 0.5 < r["measured_ratio"] < 2.0
+
+
+def test_dryrun_record_schema_and_moe_pricing():
+    """Dryrun emits a complete schema-v1 record; MoE rules price the
+    expert stacks below their unscaled bill."""
+    rec = planner.plan_dryrun("mixtral_8x7b", sparsity=0.001)
+    for key in ("schema", "arch", "mode", "params", "up_bits_per_step",
+                "up_bits_f32_ledger", "dense_bits", "compression_rate",
+                "exchange_bits_per_step", "roofline_est", "reconciles"):
+        assert key in rec, key
+    assert rec["schema"] == planner.SCHEMA
+    assert rec["reconciles"] is True
+    assert rec["exchange_bits_per_step"] >= rec["up_bits_per_step"]
+    plain = planner.plan_dryrun("mixtral_8x7b", sparsity=0.001,
+                                compressor="topk")
+    assert rec["up_bits_per_step"] < plain["up_bits_per_step"]
+
+
+def test_analytic_record_prices_largest_config():
+    rec = planner.plan_analytic("llama4_maverick_400b_a17b", sparsity=0.001)
+    assert rec["n_leaves"] is None
+    assert rec["params"] > 300e9
+    assert rec["compression_rate"] > 1000
+    assert rec["roofline_est"]["step_s"] > 0
